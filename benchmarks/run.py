@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table.  Prints name,us_per_call,derived.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--table N]
+
+Tables:
+  1  storage / resource accounting of the bare-metal artifacts   (paper Table I)
+  2  nv_small INT8 inference latency + bare-metal vs linux-stack (paper Table II)
+  3  nv_full bf16 cycle counts, six networks                     (paper Table III)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small subset (CI); full run covers all models")
+    ap.add_argument("--table", type=int, default=0, help="run one table only")
+    args = ap.parse_args()
+
+    from benchmarks import table1_storage, table2_nvsmall, table3_nvfull
+    tables = {1: table1_storage, 2: table2_nvsmall, 3: table3_nvfull}
+    picked = [tables[args.table]] if args.table else list(tables.values())
+
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in picked:
+        try:
+            for row in mod.run(fast=args.fast):
+                print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+        except Exception as e:                      # pragma: no cover
+            ok = False
+            print(f"{mod.__name__},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Table III: nv_full bf16 cycle counts (6 models, simulation/model results).
+
+The paper reports VP-simulated cycle counts for the nv_full configuration
+(FP16, 2048 MACs); we report the calibrated cycle model's counts for the same
+six networks and compare processing time @ 100 MHz.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import engine, graph
+from repro.core.loadable import build_loadable, calibrate
+from repro.core.perfmodel import model_cost
+
+PAPER = {  # model -> (paper cycles, paper ms @100MHz)
+    "lenet5": (143188, 1.4),
+    "resnet18": (324387, 3.2),
+    "resnet50": (26565315, 265.0),
+    "mobilenet": (22525704, 220.0),
+    "googlenet": (40889646, 408.0),
+    "alexnet": (35535582, 355.0),
+}
+MODELS = ["lenet5", "resnet18", "resnet50", "mobilenet", "googlenet", "alexnet"]
+
+
+def run(fast: bool = False):
+    rows = []
+    models = MODELS[:2] if fast else MODELS
+    for name in models:
+        g = graph.BUILDERS[name]()
+        params = g.init_params(0)
+        t0 = time.perf_counter()
+        rng = np.random.default_rng(1)
+        cal = calibrate(g, params,
+                        rng.normal(0, 1, (1,) + g.input_shape).astype(np.float32))
+        ld = build_loadable(g, params, cal, engine.NV_FULL)
+        us = (time.perf_counter() - t0) * 1e6
+        mc = model_cost(ld.descriptors, engine.NV_FULL, ld.desc_layers)
+        pc, pms = PAPER[name]
+        rows.append({
+            "name": f"table3_nvfull/{name}",
+            "us_per_call": us,
+            "derived": (f"modeled_cycles={mc.total_cycles} paper_cycles={pc} "
+                        f"modeled_ms={mc.ms_at_clock:.1f} paper_ms={pms} "
+                        f"cycle_ratio={mc.total_cycles/pc:.2f} "
+                        f"macs_M={g.macs()/1e6:.0f} dominant={mc.dominant()}"),
+        })
+    return rows

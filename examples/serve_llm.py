@@ -1,0 +1,87 @@
+"""Serve a small LM with batched requests through AOT prefill/decode binaries.
+
+    PYTHONPATH=src python examples/serve_llm.py --arch yi-6b --requests 8 \
+        --prompt-len 32 --gen 16
+
+The serving loop is the paper's bare-metal replay philosophy at LM scale:
+prefill and decode are each ONE pre-compiled executable bound to a static KV
+arena; requests are batched and the decode binary is replayed per token with
+the cache donated in-place (zero allocation, zero retracing).
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch.mesh import make_host_mesh
+from repro.models import registry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b", choices=configs.ALL_ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch, smoke=True)   # host-scale weights
+    model = registry.get(cfg.family)
+    mesh = make_host_mesh()
+    params = model.init_params(cfg, jax.random.key(args.seed))
+    b, s = args.requests, args.prompt_len
+    max_len = s + args.gen
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(1, cfg.vocab, (b, s), dtype=np.int32)
+
+    with mesh:
+        # --- bind the two binaries once -----------------------------------
+        prefill_fn = jax.jit(lambda p, t: model.prefill(cfg, p, {"tokens": t}))
+        decode_fn = jax.jit(
+            lambda p, c, t, pos: model.decode_step(cfg, p, c, {"tokens": t}, pos),
+            donate_argnums=(1,))
+
+        t0 = time.perf_counter()
+        logits, pre_cache = prefill_fn(params, jnp.asarray(prompts))
+        # place prefill results into the static max_len arena
+        cache = model.init_cache(cfg, b, max_len)
+        if cfg.family in ("ssm",):
+            cache = pre_cache                          # O(1) state: already final
+        else:
+            def blit(dst, src):
+                if dst.ndim >= 2 and src.shape != dst.shape:
+                    # write prompt-long slice into the max_len axis (axis=-2)
+                    idx = tuple([slice(None)] * (dst.ndim - 2)
+                                + [slice(0, src.shape[-2]), slice(None)])
+                    return dst.at[idx].set(src.astype(dst.dtype))
+                return src.astype(dst.dtype)
+            cache = jax.tree.map(blit, cache, pre_cache)
+        t_prefill = time.perf_counter() - t0
+
+        tokens = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        outs = [np.asarray(tokens)]
+        t0 = time.perf_counter()
+        for i in range(args.gen - 1):
+            logits, cache = decode_fn(params, cache, tokens, jnp.asarray(s + i))
+            tokens = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            outs.append(np.asarray(tokens))
+        t_decode = time.perf_counter() - t0
+
+    gen = np.concatenate(outs, 1)
+    print(f"arch={cfg.name} requests={b} prompt={s} gen={args.gen}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms ({b*s/t_prefill:.0f} tok/s)")
+    print(f"decode : {t_decode*1e3:.1f} ms "
+          f"({b*(args.gen-1)/max(t_decode,1e-9):.0f} tok/s, "
+          f"{t_decode/(args.gen-1)*1e3:.2f} ms/step)")
+    print("sample generations (token ids):")
+    for r in range(min(b, 4)):
+        print(f"  req{r}: {gen[r][:12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

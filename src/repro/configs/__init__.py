@@ -1,0 +1,53 @@
+"""Architecture config registry: ``--arch <id>`` -> ArchConfig.
+
+Ten assigned architectures (full + reduced smoke variants), plus the paper's
+own CNNs (LeNet-5 / ResNet-18 / ResNet-50 / AlexNet / MobileNet / GoogLeNet)
+which live in ``repro.core.graph.BUILDERS`` (they run on the engine/trace
+substrate, not the LM substrate).
+"""
+
+from __future__ import annotations
+
+from repro.configs import (granite_34b, granite_moe, llama32_3b,
+                           llama4_maverick, minicpm3_4b, qwen2_vl_72b,
+                           rwkv6_7b, whisper_tiny, yi_6b, zamba2_1p2b)
+from repro.models.common import ArchConfig
+
+_MODULES = [llama4_maverick, granite_moe, yi_6b, minicpm3_4b, llama32_3b,
+            granite_34b, whisper_tiny, zamba2_1p2b, rwkv6_7b, qwen2_vl_72b]
+
+ARCHS = {m.ID: m for m in _MODULES}
+ALL_ARCH_IDS = list(ARCHS)
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ArchConfig:
+    if arch_id not in ARCHS:
+        raise ValueError(f"unknown arch {arch_id!r}; known: {ALL_ARCH_IDS}")
+    return ARCHS[arch_id].smoke() if smoke else ARCHS[arch_id].full()
+
+
+# ---------------------------------------------------------------------------
+# Assigned input shapes (seq_len, global_batch) and applicability
+# ---------------------------------------------------------------------------
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# long_500k needs sub-quadratic attention: run only for SSM/hybrid archs
+# (full-attention archs are skipped per the assignment; see DESIGN.md §4).
+LONG_OK = {"zamba2-1.2b", "rwkv6-7b"}
+
+
+def cells(include_skipped: bool = False):
+    """All (arch_id, shape_name) dry-run cells (32 runnable, 8 skipped)."""
+    out = []
+    for a in ALL_ARCH_IDS:
+        for s in SHAPES:
+            skipped = (s == "long_500k" and a not in LONG_OK)
+            if skipped and not include_skipped:
+                continue
+            out.append((a, s) if not include_skipped else (a, s, skipped))
+    return out

@@ -1,0 +1,19 @@
+"""granite-34b [dense] — llama-arch MQA (kv=1), code model. [arXiv:2405.04324; hf]
+88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152.
+"""
+
+from repro.models.common import ArchConfig
+
+ID = "granite-34b"
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name=ID, family="dense", n_layers=88, d_model=6144, n_heads=48, n_kv=1,
+        d_ff=24576, vocab=49152)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=ID + "-smoke", family="dense", n_layers=3, d_model=64, n_heads=4,
+        n_kv=1, d_ff=192, vocab=256, loss_chunk=16, remat=False, grad_accum=1)

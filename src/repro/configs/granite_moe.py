@@ -1,0 +1,21 @@
+"""granite-moe-3b-a800m [moe] — 40 fine-grained experts, top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+32L d_model=1536 24H (GQA kv=8) d_ff=512 vocab=49155, MoE 40e top-8.
+"""
+
+from repro.models.common import ArchConfig
+
+ID = "granite-moe-3b-a800m"
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name=ID, family="moe", n_layers=32, d_model=1536, n_heads=24, n_kv=8,
+        d_ff=512, vocab=49155, n_experts=40, top_k=8)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=ID + "-smoke", family="moe", n_layers=2, d_model=48, n_heads=4,
+        n_kv=2, d_ff=32, vocab=256, n_experts=5, top_k=2, moe_chunk=16,
+        loss_chunk=16, remat=False, grad_accum=1)

@@ -1,0 +1,19 @@
+"""llama3.2-3b [dense] — small llama3. [hf:meta-llama/Llama-3.2-1B; unverified]
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+"""
+
+from repro.models.common import ArchConfig
+
+ID = "llama3.2-3b"
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name=ID, family="dense", n_layers=28, d_model=3072, n_heads=24, n_kv=8,
+        d_ff=8192, vocab=128256)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=ID + "-smoke", family="dense", n_layers=2, d_model=48, n_heads=4,
+        n_kv=2, d_ff=96, vocab=256, loss_chunk=16, remat=False, grad_accum=1)

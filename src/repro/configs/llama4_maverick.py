@@ -1,0 +1,24 @@
+"""llama4-maverick-400b-a17b [moe] — MoE, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 128e top-1.
+"""
+
+from repro.models.common import ArchConfig
+
+ID = "llama4-maverick-400b-a17b"
+
+
+def full() -> ArchConfig:
+    # Llama-4 style interleaving: MoE every 2nd layer + 1 shared expert
+    # (400B total / ~17B active with 128 routed experts, top-1).
+    return ArchConfig(
+        name=ID, family="moe", n_layers=48, d_model=5120, n_heads=40, n_kv=8,
+        d_ff=8192, vocab=202048, n_experts=128, top_k=1, moe_every=2,
+        n_shared_experts=1)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=ID + "-smoke", family="moe", n_layers=4, d_model=64, n_heads=4,
+        n_kv=2, d_ff=96, vocab=256, n_experts=8, top_k=1, moe_every=2,
+        n_shared_experts=1, moe_chunk=16, loss_chunk=16, remat=False, grad_accum=1)

@@ -1,0 +1,22 @@
+"""minicpm3-4b [dense/MLA] — multi-head latent attention. [hf:openbmb/MiniCPM3-4B; hf]
+62L d_model=2560 40H (kv=40) d_ff=6400 vocab=73448; MLA ranks: q 768, kv 256,
+qk_nope 64, qk_rope 32, v 64 (MiniCPM3 release values).
+"""
+
+from repro.models.common import ArchConfig
+
+ID = "minicpm3-4b"
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name=ID, family="mla", n_layers=62, d_model=2560, n_heads=40, n_kv=40,
+        d_ff=6400, vocab=73448, q_lora_rank=768, kv_lora_rank=256,
+        qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=ID + "-smoke", family="mla", n_layers=2, d_model=64, n_heads=4,
+        n_kv=4, d_ff=128, vocab=256, q_lora_rank=32, kv_lora_rank=16,
+        qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16, loss_chunk=16, remat=False, grad_accum=1)

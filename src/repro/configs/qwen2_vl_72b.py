@@ -1,0 +1,21 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution (vision frontend STUBBED:
+input_specs provides token/patch ids + 3D position ids). [arXiv:2409.12191; hf]
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.
+"""
+
+from repro.models.common import ArchConfig
+
+ID = "qwen2-vl-72b"
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name=ID, family="vlm", n_layers=80, d_model=8192, n_heads=64, n_kv=8,
+        d_ff=29568, vocab=152064, mrope_sections=(16, 24, 24))
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=ID + "-smoke", family="vlm", n_layers=2, d_model=64, n_heads=4,
+        n_kv=2, d_ff=128, vocab=256, mrope_sections=(2, 3, 3),
+        loss_chunk=16, remat=False, grad_accum=1)

@@ -1,0 +1,21 @@
+"""rwkv6-7b [ssm] — Finch: attention-free, data-dependent decay.
+[arXiv:2404.05892; hf]
+32L d_model=4096 (64 heads x 64) d_ff=14336 vocab=65536.
+"""
+
+from repro.models.common import ArchConfig
+
+ID = "rwkv6-7b"
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name=ID, family="ssm", n_layers=32, d_model=4096, n_heads=64, n_kv=64,
+        d_ff=14336, vocab=65536, rwkv_lora=64, ssm_chunk=256)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=ID + "-smoke", family="ssm", n_layers=2, d_model=64, n_heads=4,
+        n_kv=4, d_ff=128, vocab=256, rwkv_lora=16, ssm_chunk=16,
+        loss_chunk=16, remat=False, grad_accum=1)

@@ -1,0 +1,21 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend STUBBED (input_specs provides
+precomputed frame embeddings). [arXiv:2212.04356; unverified]
+4L (enc) + 4L (dec) d_model=384 6H d_ff=1536 vocab=51865.
+"""
+
+from repro.models.common import ArchConfig
+
+ID = "whisper-tiny"
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name=ID, family="encdec", n_layers=8, n_enc_layers=4, n_dec_layers=4,
+        d_model=384, n_heads=6, n_kv=6, d_ff=1536, vocab=51865)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=ID + "-smoke", family="encdec", n_layers=4, n_enc_layers=2,
+        n_dec_layers=2, d_model=48, n_heads=4, n_kv=4, d_ff=96, vocab=256,
+        loss_chunk=8, remat=False, grad_accum=1)

@@ -1,0 +1,19 @@
+"""yi-6b [dense] — llama-arch GQA. [arXiv:2403.04652; hf]
+32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+
+from repro.models.common import ArchConfig
+
+ID = "yi-6b"
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name=ID, family="dense", n_layers=32, d_model=4096, n_heads=32, n_kv=4,
+        d_ff=11008, vocab=64000)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=ID + "-smoke", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv=2, d_ff=128, vocab=256, loss_chunk=16, remat=False, grad_accum=1)

@@ -1,0 +1,23 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention block.
+[arXiv:2411.15242; hf]
+38L d_model=2048 32H (kv=32) d_ff=8192 vocab=32000, ssm_state=64.
+Shared attn invoked every 6 mamba layers (6 invocations, shared weights).
+"""
+
+from repro.models.common import ArchConfig
+
+ID = "zamba2-1.2b"
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name=ID, family="hybrid", n_layers=38, d_model=2048, n_heads=32,
+        n_kv=32, d_ff=8192, vocab=32000, ssm_state=64, ssm_headdim=64,
+        ssm_expand=2, attn_every=6)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=ID + "-smoke", family="hybrid", n_layers=4, d_model=64, n_heads=4,
+        n_kv=4, d_ff=128, vocab=256, ssm_state=16, ssm_headdim=16,
+        ssm_expand=2, attn_every=2, ssm_chunk=16, loss_chunk=16, remat=False, grad_accum=1)

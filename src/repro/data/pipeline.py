@@ -1,0 +1,107 @@
+"""Synthetic-but-production-shaped data pipeline.
+
+Deterministic, step-indexed batch synthesis: batch(step) is a pure function of
+(seed, step), so
+  * every data-parallel host computes its own shard with no coordination,
+  * restart-from-checkpoint resumes the stream exactly (fault tolerance),
+  * a straggling/replaced host can recompute any shard (elastic scaling).
+
+This mirrors how a real pipeline (SSTable/ArrayRecord shards + index) behaves
+at the interface level; the content is synthetic token streams since the paper
+targets inference of pretrained nets, not data curation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ArchConfig
+
+
+@dataclasses.dataclass
+class BatchSpec:
+    seq_len: int
+    global_batch: int
+    kind: str              # train | prefill | decode
+
+
+def make_batch(cfg: ArchConfig, spec: BatchSpec, step: int = 0,
+               seed: int = 0) -> Dict[str, np.ndarray]:
+    """Synthesize the batch for ``step`` (host-side numpy, then device-put)."""
+    rng = np.random.default_rng(np.uint64(seed) + np.uint64(step) * 1_000_003)
+    b, s = spec.global_batch, spec.seq_len
+    if cfg.family == "encdec":
+        dec = max(s // cfg.dec_len_ratio, 64)
+        out = {
+            "frames": rng.normal(0, 1, (b, s, cfg.d_model)).astype(np.float32),
+            "tokens": rng.integers(0, cfg.vocab, (b, dec), dtype=np.int32),
+        }
+        if spec.kind == "train":
+            out["labels"] = rng.integers(0, cfg.vocab, (b, dec), dtype=np.int32)
+        return out
+    out = {"tokens": rng.integers(0, cfg.vocab, (b, s), dtype=np.int32)}
+    if spec.kind == "train":
+        out["labels"] = rng.integers(0, cfg.vocab, (b, s), dtype=np.int32)
+    if cfg.family == "vlm":
+        # M-RoPE 3D positions (temporal, h, w) — text-like monotonic stub
+        pos = np.broadcast_to(np.arange(s, dtype=np.int32)[None], (b, s))
+        out["pos3"] = np.stack([pos, pos, pos])
+    return out
+
+
+def batch_shapes(cfg: ArchConfig, spec: BatchSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins (dry-run: no allocation)."""
+    b, s = spec.global_batch, spec.seq_len
+    if cfg.family == "encdec":
+        dec = max(s // cfg.dec_len_ratio, 64)
+        shapes = {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((b, dec), jnp.int32),
+        }
+        if spec.kind == "train":
+            shapes["labels"] = jax.ShapeDtypeStruct((b, dec), jnp.int32)
+        return shapes
+    shapes = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if spec.kind == "train":
+        shapes["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        shapes["pos3"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return shapes
+
+
+def decode_batch_shapes(cfg: ArchConfig, spec: BatchSpec):
+    """Decode step inputs: one new token (B,1) (+ pos3 for vlm)."""
+    b = spec.global_batch
+    shapes = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        shapes["pos3"] = jax.ShapeDtypeStruct((3, b, 1), jnp.int32)
+    return shapes
+
+
+class DataIterator:
+    """Step-indexed iterator with exact resume (used by launch/train.py)."""
+
+    def __init__(self, cfg: ArchConfig, spec: BatchSpec, seed: int = 0,
+                 start_step: int = 0):
+        self.cfg, self.spec, self.seed = cfg, spec, seed
+        self.step = start_step
+
+    def __iter__(self) -> "DataIterator":
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        out = make_batch(self.cfg, self.spec, self.step, self.seed)
+        self.step += 1
+        return out
+
+    def state(self) -> Dict[str, int]:
+        return {"step": self.step, "seed": self.seed}
+
+    @classmethod
+    def restore(cls, cfg, spec, state: Dict[str, int]) -> "DataIterator":
+        return cls(cfg, spec, seed=state["seed"], start_step=state["step"])

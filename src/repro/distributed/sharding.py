@@ -1,0 +1,271 @@
+"""Sharding rules: DP / TP / EP / SP partition specs for every arch family.
+
+Megatron-style tensor parallelism on the 'model' axis:
+  * QKV / gate / up projections column-sharded (heads / d_ff),
+  * output / down projections row-sharded (one all-reduce per block half),
+  * embedding + LM head vocab-sharded (vocab-parallel cross entropy),
+  * MoE experts expert-sharded on 'model' (EP; combine = one all-reduce),
+  * Mamba2 in/out projections row-sharded (keeps the heterogeneous
+    [z|x|B|C|dt] stream boundaries intact; see DESIGN.md §5),
+  * RWKV6 time-mix head-sharded (state (B,H,D,D) splits on H, WKV is
+    collective-free).
+
+Batch is sharded over ('pod','data'); the ``long_500k`` cells shard the KV
+cache's *sequence* axis over 'data' instead (SP) — softmax over that axis
+lowers to the cross-device partial-softmax combine.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import registry
+from repro.models.common import ArchConfig
+
+MODEL = "model"
+
+
+def _match(rules: Dict[str, Tuple], path, leaf,
+           moe_overrides: Optional[Dict[str, Tuple]] = None) -> P:
+    """Pick a spec by the final dict key; prepend None for stacked layer dims.
+
+    ``moe_overrides`` apply to mlp weights inside MoE (expert-stacked) blocks —
+    identified by NOT being under a "dense" subtree (interleaved MoE keeps its
+    dense sub-layers' mlp under blocks/dense/mlp).
+    """
+    keys = [part.key for part in path if hasattr(part, "key")]
+    key = keys[-1] if keys else None
+    spec = None
+    if moe_overrides and key in moe_overrides and "mlp" in keys \
+            and "dense" not in keys:
+        spec = moe_overrides[key]
+    elif key in rules:
+        spec = rules[key]
+    if spec is None:
+        return P()                                   # replicate by default
+    ndim = len(leaf.shape)
+    if len(spec) < ndim:                             # stacked layer dim(s)
+        spec = (None,) * (ndim - len(spec)) + tuple(spec)
+    assert len(spec) == ndim, (key, spec, leaf.shape)
+    return P(*spec)
+
+
+# per-family rule tables: final-key -> spec for the UNSTACKED param
+_TRANSFORMER_RULES = {
+    "embed": ((MODEL, None)), "head": ((MODEL, None)),
+    "wq": (None, MODEL), "wk": (None, MODEL), "wv": (None, MODEL),
+    "wo": (MODEL, None),
+    "wg": (None, MODEL), "wu": (None, MODEL), "wd": (MODEL, None),
+    # MLA
+    "wq_a": (None, None), "wq_b": (None, MODEL),
+    "wkv_a": (None, None), "wkv_b": (None, MODEL),
+}
+
+_MOE_OVERRIDES = {
+    "router": (None, None),
+    "wg": (MODEL, None, None), "wu": (MODEL, None, None),
+    "wd": (MODEL, None, None),                      # (E, f, d): EP on experts
+}
+
+_SHARED_EXPERT_RULES = {                            # always-active shared experts
+    "wg_s": (None, MODEL), "wu_s": (None, MODEL), "wd_s": (MODEL, None),
+}
+
+_RWKV_RULES = {
+    "embed": (MODEL, None), "head": (MODEL, None),
+    "wr": (None, MODEL), "wk": (None, MODEL), "wv": (None, MODEL),
+    "wg": (None, MODEL), "wo": (MODEL, None),
+    "w_a": (None, None), "w_b": (None, MODEL),
+    "w_bias": (MODEL,), "u": (MODEL,), "ln_x": (MODEL,),
+    "ck": (None, MODEL), "cv": (MODEL, None), "cr": (None, MODEL),
+}
+
+_MAMBA_RULES = {
+    "in_proj": (MODEL, None),                       # row-parallel
+    "out_proj": (MODEL, None),
+    "conv_w": (None, None), "conv_b": (None,),
+}
+
+_WHISPER_RULES = {
+    "embed": (MODEL, None), "head": (MODEL, None),
+    "wq": (None, MODEL), "wk": (None, MODEL), "wv": (None, MODEL),
+    "wo": (MODEL, None),
+    "w1": (None, MODEL), "w2": (MODEL, None),
+}
+
+
+_FSDP_MIN_ELEMS = 1 << 20      # don't FSDP-shard tiny params (norms, biases)
+
+
+def _axes_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axes]))
+    return mesh.shape[axes]
+
+
+def _sanitize(spec: P, shape, mesh) -> P:
+    """Drop axis assignments whose dimension isn't divisible (e.g. vocab 51865
+    on a 16-way model axis, 40 experts on 16 shards) — replicate instead."""
+    out = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        out.append(axes if axes and dim % _axes_size(mesh, axes) == 0 else None)
+    return P(*out)
+
+
+def _add_fsdp(spec: P, shape, mesh) -> P:
+    """ZeRO-3 style: additionally shard the largest unsharded dim over 'data'.
+
+    Params (and congruent optimizer state) then occupy 1/(model*data) per chip;
+    GSPMD inserts the per-layer param all-gathers / grad reduce-scatters.  The
+    'pod' axis is deliberately NOT used: cross-pod links carry only the one
+    per-step gradient all-reduce (DESIGN.md §5).
+    """
+    if "data" not in mesh.axis_names or int(np.prod(shape)) < _FSDP_MIN_ELEMS:
+        return spec
+    cur = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    for axis, min_elems in (("data", _FSDP_MIN_ELEMS), ("pod", 1 << 28)):
+        # 'pod' tier: ZeRO-3 across pods for giant tensors only (the per-layer
+        # cross-pod all-gather is worth it when the alternative is not fitting
+        # HBM at all — e.g. llama4's 386B expert bank)
+        if axis not in mesh.axis_names or int(np.prod(shape)) < min_elems:
+            continue
+        n = mesh.shape[axis]
+        cands = [(dim, i) for i, (dim, ax) in enumerate(zip(shape, cur))
+                 if ax is None and dim % n == 0]
+        if cands:
+            _, idx = max(cands)
+            cur[idx] = axis
+    return P(*cur)
+
+
+def param_specs(cfg: ArchConfig, mesh: jax.sharding.Mesh, fsdp: bool = True) -> Any:
+    """PartitionSpec pytree matching registry.get(cfg.family).param_shapes."""
+    shapes = registry.get(cfg.family).param_shapes(cfg)
+    moe_overrides = None
+    if cfg.family in ("dense", "mla", "vlm"):
+        rules = _TRANSFORMER_RULES
+    elif cfg.family == "moe":
+        rules = {**_TRANSFORMER_RULES, **_SHARED_EXPERT_RULES}
+        if cfg.n_experts % mesh.shape[MODEL] == 0:
+            moe_overrides = _MOE_OVERRIDES            # EP over experts
+        else:
+            # experts don't divide the model axis (e.g. 40 on 16): fall back
+            # to Megatron TP *within* each expert over d_ff
+            moe_overrides = {"router": (None, None),
+                             "wg": (None, None, MODEL), "wu": (None, None, MODEL),
+                             "wd": (None, MODEL, None)}
+    elif cfg.family == "ssm":
+        rules = _RWKV_RULES
+    elif cfg.family == "hybrid":
+        rules = {**_TRANSFORMER_RULES, **_MAMBA_RULES,
+                 "embed": (MODEL, None), "head": (MODEL, None)}
+    elif cfg.family == "encdec":
+        rules = _WHISPER_RULES
+    else:
+        raise ValueError(cfg.family)
+
+    def pick(path, leaf):
+        spec = _match(rules, path, leaf, moe_overrides=moe_overrides)
+        spec = _sanitize(spec, leaf.shape, mesh)
+        if fsdp:
+            spec = _add_fsdp(spec, leaf.shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(pick, shapes)
+
+
+def batch_specs(cfg: ArchConfig, mesh: jax.sharding.Mesh, shapes: Dict,
+                long_context: bool = False) -> Dict[str, P]:
+    """Input batch specs. ``long_context``: batch=1 cells shard SEQUENCE over
+    'data' (SP) instead of batch."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = dp if len(dp) > 1 else dp[0]
+    out = {}
+    for k, v in shapes.items():
+        if k == "pos3":
+            spec = P(None, dp, None)
+        elif k == "frames":
+            spec = P(dp, None, None)
+        elif k in ("tokens", "labels"):
+            if long_context and v.shape[0] == 1 and v.shape[1] > 1:
+                spec = P(None, "data")               # SP over sequence
+            else:
+                spec = P(dp, None)
+        else:
+            spec = P(*((dp,) + (None,) * (len(v.shape) - 1)))
+        out[k] = _sanitize(spec, v.shape, mesh)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, mesh: jax.sharding.Mesh, cache_shapes,
+                long_context: bool = False) -> Any:
+    """KV/state cache specs.
+
+    decode_32k: batch over dp; kv-heads over 'model' when divisible.
+    long_500k (batch=1): sequence axis over 'data' (SP cache), heads over
+    'model' when possible.
+    """
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = dp if len(dp) > 1 else dp[0]
+    model_size = mesh.shape[MODEL]
+
+    def spec_for(path, leaf) -> P:
+        key = None
+        for part in reversed(path):
+            if hasattr(part, "key"):
+                key = part.key
+                break
+        shape = leaf.shape
+        if key in ("k", "v", "self_k", "self_v", "cross_k", "cross_v",
+                   "dk", "dv", "mk", "mv"):
+            # (..., B, Hkv, S, D): rank 5 (L leading) or 6 (G, me-1 leading)
+            lead = len(shape) - 4
+            hkv, seq = shape[lead + 1], shape[lead + 2]
+            h_ax = MODEL if hkv % model_size == 0 else None
+            # kv heads that don't divide the model axis (GQA kv<16, MQA):
+            # shard the cache SEQUENCE over 'model' instead — decode attention
+            # becomes a distributed flash-decode (partial-softmax combine),
+            # which both fits the cache and parallelises the decode read.
+            s_ax = MODEL if (h_ax is None and seq % model_size == 0) else None
+            if long_context:
+                return P(*((None,) * lead), None, h_ax, "data", None)  # SP on seq
+            return P(*((None,) * lead), dp, h_ax, s_ax, None)
+        if key in ("ckv", "kr"):                              # MLA latent (L,B,S,r)
+            if long_context:
+                return P(None, None, "data", None)
+            s_ax = MODEL if shape[2] % model_size == 0 else None
+            return P(None, dp, s_ax, None)
+        if key == "S":                                        # RWKV state (L,B,H,D,D)
+            h_ax = MODEL if shape[2] % model_size == 0 else None
+            return P(None, dp, h_ax, None, None) if shape[1] > 1 \
+                else P(None, None, h_ax, None, None)
+        if key in ("tm_x", "cm_x"):                           # (L,B,d)
+            return P(None, dp, None) if shape[1] > 1 else P(None, None, MODEL)
+        if key == "conv":                                     # (L,B,K-1,conv_dim)
+            return P(None, dp, None, None) if shape[1] > 1 else P()
+        if key == "ssm":                                      # (L,B,H,P,N)
+            h_ax = MODEL if shape[2] % model_size == 0 else None
+            return P(None, dp, h_ax, None, None) if shape[1] > 1 \
+                else P(None, None, h_ax, None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _sanitize(spec_for(path, leaf), leaf.shape, mesh),
+        cache_shapes)
+
+
+def named(mesh: jax.sharding.Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def logits_spec(mesh: jax.sharding.Mesh) -> P:
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = dp if len(dp) > 1 else dp[0]
+    return P(dp, MODEL)

@@ -1,0 +1,21 @@
+"""shard_map compatibility shim: jax>=0.8 renamed check_rep -> check_vma."""
+
+from __future__ import annotations
+
+import functools
+
+
+def shard_map_norep(f, *, mesh, in_specs, out_specs):
+    """shard_map with replication checking disabled, across jax versions."""
+    try:
+        from jax import shard_map as sm
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:                              # pragma: no cover
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+    except ImportError:                                # pragma: no cover
+        from jax.experimental.shard_map import shard_map as sm
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)

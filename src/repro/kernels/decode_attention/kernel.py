@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: single-token decode attention (flash-decode split-K).
+
+Decode shape: one query token against a long KV cache — the dominant op of the
+``decode_32k`` / ``long_500k`` cells.  The KV sequence is split into blocks
+(split-K); each block computes a partial (max, normaliser, accumulator) triple
+carried in VMEM scratch, combined online across the grid's KV dimension.
+
+The same partial-softmax combine (m, l, acc) is reused ACROSS DEVICES by the
+distributed sequence-parallel decode path (distributed/sp_decode.py): each
+device runs this kernel over its KV shard and the shards are merged with one
+psum — the kernel is the intra-chip tier of a two-tier flash-decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                   sm_scale: float, block_k: int, n_kv: int, kv_len: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale               # (1, d)
+    k = k_ref[0].astype(jnp.float32)                          # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                          # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (1, bk)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < kv_len, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     sm_scale: float | None = None, block_k: int = 512,
+                     kv_len: int | None = None,
+                     interpret: bool = True) -> jax.Array:
+    """q (BH, 1, D), k/v (BH, S, D) -> (BH, 1, D); S % block_k == 0."""
+    bh, _, d = q.shape
+    skv = k.shape[1]
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    kv_len = kv_len if kv_len is not None else skv
+    assert skv % block_k == 0
+    n_kv = skv // block_k
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, sm_scale=sm_scale, block_k=block_k,
+                          n_kv=n_kv, kv_len=kv_len),
+        grid=(bh, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, ik: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

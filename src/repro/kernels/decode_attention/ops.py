@@ -1,0 +1,52 @@
+"""Jit'd wrapper for decode attention: GQA + padding + partial-combine export."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "block_k", "interpret"))
+def gqa_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+               use_kernel: bool = True, block_k: int = 512,
+               interpret: bool = True) -> jax.Array:
+    """q (B, Hq, 1, D); k/v (B, Hkv, S, D) -> (B, Hq, 1, D)."""
+    b, hq, _, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qf = q.reshape(b * hq, 1, d)
+    kf = jnp.repeat(k, group, axis=1).reshape(b * hq, s, d)
+    vf = jnp.repeat(v, group, axis=1).reshape(b * hq, s, d)
+    if not use_kernel:
+        return decode_attention_ref(qf, kf, vf).reshape(b, hq, 1, d)
+    bk = min(block_k, s)
+    pad = (-s) % bk
+    kp = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+    out = decode_attention(qf, kp, vp, block_k=bk, kv_len=s, interpret=interpret)
+    return out.reshape(b, hq, 1, d)
+
+
+def partial_softmax(q: jax.Array, k: jax.Array, v: jax.Array,
+                    sm_scale: float | None = None):
+    """One device's partial (acc, m, l) for distributed flash-decode.
+
+    q (BH, 1, D), k/v (BH, Sshard, D) -> (acc (BH,1,D) f32, m (BH,1,1), l (BH,1,1)).
+    Combine across shards with: m* = max m_i; l* = sum l_i exp(m_i - m*);
+    out = sum acc_i l_i exp(m_i - m*) / l*.  (Pure jnp: it must lower through
+    shard_map for the dry-run; the Pallas kernel is the intra-chip tier.)
+    """
+    d = q.shape[-1]
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    m = jnp.max(s, axis=-1, keepdims=True)                      # (BH, 1, 1)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)                      # (BH, 1, 1)
+    acc = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)) / jnp.maximum(l, 1e-30)
+    return acc, m, l

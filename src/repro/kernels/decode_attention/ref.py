@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for decode attention (one query vs KV cache)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         sm_scale: float | None = None,
+                         kv_len: int | None = None) -> jax.Array:
+    """q (BH, 1, D), k/v (BH, S, D) -> (BH, 1, D)."""
+    d = q.shape[-1]
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if kv_len is not None:
+        pos = jnp.arange(k.shape[1])[None, None, :]
+        s = jnp.where(pos < kv_len, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: blocked flash attention (prefill path).
+
+Streaming-softmax attention tiled for VMEM: grid (batch*heads, Sq/bq, Skv/bk)
+with the running max / normaliser / f32 accumulator held in VMEM scratch across
+the KV loop (FlashAttention-2 schedule).  Used by the serving layer for prefill
+shapes; the decode path has its own split-K kernel (kernels/decode_attention).
+
+Causal masking is applied with block-level early-out arithmetic (fully-masked
+blocks still iterate in interpret mode; on TPU the mask folds into the MXU
+epilogue).  GQA is handled by the ops.py wrapper (KV heads broadcast to Q heads
+before the kernel; a production TPU variant would index KV blocks instead).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  sm_scale: float, causal: bool, block_q: int, block_k: int,
+                  n_kv: int, kv_len: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                       # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                       # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = k_pos < kv_len                      # mask padded KV columns
+    if causal:
+        iq = pl.program_id(1)
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        valid = valid & (q_pos >= k_pos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                                    # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                 # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                        # (bq, 1)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sm_scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    kv_len: int | None = None, interpret: bool = True) -> jax.Array:
+    """q (BH, Sq, D), k/v (BH, Skv, D) -> (BH, Sq, D). Sq%bq == Skv%bk == 0.
+
+    ``kv_len``: true (unpadded) KV length; columns beyond it are masked.
+    """
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    kv_len = kv_len if kv_len is not None else skv
+    assert sq % block_q == 0 and skv % block_k == 0
+    n_kv = skv // block_k
+    grid = (bh, sq // block_q, n_kv)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, sm_scale=sm_scale, causal=causal,
+                          block_q=block_q, block_k=block_k, n_kv=n_kv,
+                          kv_len=kv_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # normaliser
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

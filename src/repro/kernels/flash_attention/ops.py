@@ -1,0 +1,40 @@
+"""Jit'd wrapper: GQA head handling + padding + kernel/oracle dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_kernel", "block_q",
+                                             "block_k", "interpret"))
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+        use_kernel: bool = True, block_q: int = 128, block_k: int = 128,
+        interpret: bool = True) -> jax.Array:
+    """Multi-head attention with GQA.
+
+    q (B, Hq, Sq, D); k/v (B, Hkv, Skv, D); Hq % Hkv == 0 -> (B, Hq, Sq, D).
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kf = jnp.repeat(k, group, axis=1).reshape(b * hq, skv, d)
+    vf = jnp.repeat(v, group, axis=1).reshape(b * hq, skv, d)
+    qf = q.reshape(b * hq, sq, d)
+    if not use_kernel:
+        return attention_ref(qf, kf, vf, causal=causal).reshape(b, hq, sq, d)
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    pad_q = (-sq) % bq
+    pad_k = (-skv) % bk
+    qp = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention(qp, kp, vp, causal=causal, block_q=bq, block_k=bk,
+                          kv_len=skv, interpret=interpret)
+    return out[:, :sq].reshape(b, hq, sq, d)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: exact softmax attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, sm_scale: float | None = None) -> jax.Array:
+    """q (BH, Sq, D), k/v (BH, Skv, D) -> (BH, Sq, D), f32 math."""
+    d = q.shape[-1]
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        sq, skv = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

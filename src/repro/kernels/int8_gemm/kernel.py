@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: W8A8 INT8 GEMM with fused NVDLA-SDP epilogue.
+
+This is the MAC-array of the paper's engine, re-blocked for the TPU MXU:
+NVDLA's direct-convolution dataflow (weight-stationary 64-MAC array fed by the
+CBUF) becomes an im2col GEMM tiled over VMEM, with the SDP post-processing —
+int32 bias add, per-output-channel fixed-point requantisation
+(``((acc >> pre) * m) >> post``, round-half-away), optional ReLU, int8 clip —
+fused into the epilogue so the accumulator never leaves VMEM.  That fusion is
+exactly NVDLA's CACC->SDP pipeline, expressed TPU-natively.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; int32 accumulation lives in a VMEM
+scratch tile that persists across the K loop.  Block sizes default to
+128x128x128 (MXU-aligned; int8 feeds the MXU at full rate on v5e).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rha_shift(x, k):
+    """Round-half-away arithmetic right shift on int32."""
+    half = jnp.where(k > 0, jnp.left_shift(jnp.int32(1), jnp.maximum(k - 1, 0)), 0)
+    return jnp.sign(x) * jnp.right_shift(jnp.abs(x) + half, k)
+
+
+def _epilogue(acc, bias, words, relu):
+    """SDP: +bias, per-channel fixed-point requant, relu, clip to int8."""
+    acc = acc + bias[None, :]
+    m = jnp.right_shift(words, 16) & 0xFFFF
+    m = jnp.where(m >= 0x8000, m - 0x10000, m)
+    pre = jnp.right_shift(words, 8) & 0xFF
+    post = words & 0xFF
+    out = _rha_shift(_rha_shift(acc, pre[None, :]) * m[None, :], post[None, :])
+    if relu:
+        out = jnp.maximum(out, 0)
+    return jnp.clip(out, -128, 127).astype(jnp.int8)
+
+
+def _int8_gemm_kernel(x_ref, w_ref, bias_ref, scale_ref, o_ref, acc_ref, *,
+                      relu: bool, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = _epilogue(acc_ref[...], bias_ref[...], scale_ref[...], relu)
+
+
+def int8_gemm(x: jax.Array, w: jax.Array, bias: jax.Array, scale_words: jax.Array,
+              *, relu: bool = False, block_m: int = 128, block_n: int = 128,
+              block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """``clip8(requant((x @ w) + bias))``.
+
+    x: (M, K) int8 — im2col'ed activations
+    w: (K, N) int8 — weights (output channel = N)
+    bias: (N,) int32; scale_words: (N,) int32 packed (m,pre,post) — see core/quant.py
+    Shapes must be multiples of the block sizes (ops.py pads).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and bias.shape == (n,) and scale_words.shape == (n,)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    n_k = k // block_k
+    grid = (m // block_m, n // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_int8_gemm_kernel, relu=relu, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_n,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((block_n,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        # int32 accumulator tile, persistent across the K loop (CACC analogue)
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(x, w, bias, scale_words)

@@ -1,0 +1,47 @@
+"""Jit'd public wrapper: pads to block multiples, dispatches kernel or oracle."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_gemm.kernel import int8_gemm
+from repro.kernels.int8_gemm.ref import int8_gemm_ref
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int, value=0) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "use_kernel", "block_m",
+                                             "block_n", "block_k", "interpret"))
+def quantized_matmul(x: jax.Array, w: jax.Array, bias: jax.Array,
+                     scale_words: jax.Array, *, relu: bool = False,
+                     use_kernel: bool = True, block_m: int = 128,
+                     block_n: int = 128, block_k: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """W8A8 matmul with fused SDP epilogue; pads/unpads to MXU-aligned blocks.
+
+    x (M,K) int8, w (K,N) int8, bias (N,) int32, scale_words (N,) int32
+    -> (M,N) int8.  ``use_kernel=False`` runs the pure-jnp oracle (used on CPU
+    hot paths; the Pallas kernel is the TPU-target implementation, validated in
+    interpret mode by tests/test_kernels.py).
+    """
+    m, k = x.shape
+    n = w.shape[1]
+    if not use_kernel:
+        return int8_gemm_ref(x, w, bias, scale_words, relu=relu)
+    xp = _pad_to(_pad_to(x, block_m, 0), block_k, 1)
+    wp = _pad_to(_pad_to(w, block_k, 0), block_n, 1)
+    bp = _pad_to(bias, block_n, 0)
+    sp = _pad_to(scale_words, block_n, 0)
+    out = int8_gemm(xp, wp, bp, sp, relu=relu, block_m=block_m, block_n=block_n,
+                    block_k=block_k, interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the int8 GEMM + SDP epilogue kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _rha_shift(x, k):
+    half = jnp.where(k > 0, jnp.left_shift(jnp.int32(1), jnp.maximum(k - 1, 0)), 0)
+    return jnp.sign(x) * jnp.right_shift(jnp.abs(x) + half, k)
+
+
+def int8_gemm_ref(x: jax.Array, w: jax.Array, bias: jax.Array,
+                  scale_words: jax.Array, *, relu: bool = False) -> jax.Array:
+    acc = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    acc = acc + bias[None, :].astype(jnp.int32)
+    words = scale_words
+    m = jnp.right_shift(words, 16) & 0xFFFF
+    m = jnp.where(m >= 0x8000, m - 0x10000, m)
+    pre = jnp.right_shift(words, 8) & 0xFF
+    post = words & 0xFF
+    out = _rha_shift(_rha_shift(acc, pre[None, :]) * m[None, :], post[None, :])
+    if relu:
+        out = jnp.maximum(out, 0)
+    return jnp.clip(out, -128, 127).astype(jnp.int8)

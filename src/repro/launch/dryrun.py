@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, prove it fits, and extract roofline terms.
+
+MUST be run as its own process (the XLA_FLAGS line above must execute before
+any jax import anywhere): ``PYTHONPATH=src python -m repro.launch.dryrun ...``
+
+    --arch <id> --shape <name> [--multipod] [--out DIR]   one cell
+    --all [--multipod] [--out DIR]                        sweep (subprocess per
+                                                          cell for isolation)
+
+Per cell it records: compiled memory_analysis (bytes/device — proves it fits),
+raw cost_analysis, trip-count-corrected HLO FLOPs/bytes, per-collective
+traffic, and the three roofline terms (launch/roofline.py).
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import numpy as np
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str,
+             opt_flags=()) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.data.pipeline import BatchSpec
+    from repro.launch import hlo_analysis, roofline
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (batch_sharding, build_decode_step,
+                                    build_prefill, build_train_step)
+    from repro.models import registry
+    from repro.optim import adamw
+
+    cfg = configs.get_config(arch_id)
+    sdef0 = configs.SHAPES[shape_name]
+    if sdef0["kind"] != "train":
+        # serving path stores weights in bf16 (the paper's engine stores int8):
+        # halves param reads and avoids per-layer f32->bf16 converts
+        cfg = cfg.__class__(**{**cfg.__dict__, "param_dtype": jnp.bfloat16})
+    for flag in opt_flags:                     # perf-iteration overrides
+        k, v = flag.split("=", 1)
+        cfg = cfg.__class__(**{**cfg.__dict__, k: type(getattr(cfg, k))(eval(v))})
+    sdef = configs.SHAPES[shape_name]
+    spec = BatchSpec(seq_len=sdef["seq_len"], global_batch=sdef["global_batch"],
+                     kind=sdef["kind"])
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.devices.size
+    model = registry.get(cfg.family)
+    shapes = model.param_shapes(cfg)
+    t0 = time.time()
+
+    with mesh:
+        if spec.kind == "train":
+            ocfg = adamw.AdamWConfig(
+                state_dtype=jnp.bfloat16 if cfg.opt_state_bf16 else None)
+            step_fn, sh = build_train_step(cfg, mesh, ocfg)
+            psds = jax.tree.map(
+                lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=n),
+                shapes, sh["params"])
+            sd = jnp.bfloat16 if cfg.opt_state_bf16 else None
+            msds = jax.tree.map(
+                lambda s_: jax.ShapeDtypeStruct(s_.shape, sd or s_.dtype,
+                                                sharding=s_.sharding), psds)
+            osds = adamw.AdamWState(
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+                mu=msds, nu=msds)
+            bsh, bshapes = batch_sharding(cfg, mesh, spec)
+            bsds = jax.tree.map(
+                lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=n),
+                bshapes, bsh)
+            lowered = step_fn.lower(psds, osds, bsds)
+        elif spec.kind == "prefill":
+            fn, psh = build_prefill(cfg, mesh, spec)
+            psds = jax.tree.map(
+                lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=n),
+                shapes, psh)
+            bsh, bshapes = batch_sharding(cfg, mesh, spec)
+            bsds = jax.tree.map(
+                lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=n),
+                bshapes, bsh)
+            lowered = fn.lower(psds, bsds)
+        else:  # decode
+            fn, sh = build_decode_step(cfg, mesh, spec)
+            psds = jax.tree.map(
+                lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=n),
+                shapes, sh["params"])
+            csds = jax.tree.map(
+                lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=n),
+                sh["cache_shapes"],
+                jax.tree.map(lambda x: x, sh["cache"]))
+            tsds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                    for k, v in sh["tok_shapes"].items()}
+            lowered = fn.lower(psds, csds, tsds, jnp.int32(0))
+        compiled = lowered.compile()
+
+    t_compile = time.time() - t0
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_gb": ma.argument_size_in_bytes / 1e9,
+            "output_gb": ma.output_size_in_bytes / 1e9,
+            "temp_gb": ma.temp_size_in_bytes / 1e9,
+            "alias_gb": ma.alias_size_in_bytes / 1e9,
+            "peak_per_device_gb": (ma.argument_size_in_bytes
+                                   + ma.output_size_in_bytes
+                                   + ma.temp_size_in_bytes
+                                   - ma.alias_size_in_bytes) / 1e9,
+        }
+    except Exception as e:                                # pragma: no cover
+        mem = {"error": str(e)}
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else (ca or {})
+    raw_flops = float(ca.get("flops", 0.0))
+    raw_bytes = float(ca.get("bytes accessed", 0.0))
+
+    hlo_text = compiled.as_text()
+    hlo = hlo_analysis.analyze(hlo_text, default_trip=cfg.n_layers)
+    mf = roofline.model_flops(cfg, spec)
+    cache_bytes = 0.0
+    if spec.kind == "decode":
+        cache_bytes = sum(
+            int(np.prod(s.shape)) * s.dtype.itemsize
+            for s in jax.tree.leaves(sh["cache_shapes"]))
+    rl = roofline.terms(arch_id, shape_name, mesh_name, chips, hlo.flops,
+                        hlo.bytes_accessed, hlo.collective_bytes, mf,
+                        min_bytes_total=roofline.min_bytes(cfg, spec, cache_bytes))
+    result = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "status": "ok", "compile_s": round(t_compile, 1),
+        "params_b": cfg.num_params() / 1e9,
+        "active_params_b": cfg.active_params() / 1e9,
+        "memory_analysis": mem,
+        "cost_analysis_raw": {"flops": raw_flops, "bytes": raw_bytes},
+        "hlo": {
+            "flops_per_chip": hlo.flops,
+            "bytes_per_chip": hlo.bytes_accessed,
+            "collective_bytes_per_chip": hlo.collective_bytes,
+            "collective_breakdown": hlo.collective_breakdown,
+            "collective_counts": hlo.collective_counts,
+            "n_while": hlo.n_while_loops,
+        },
+        "roofline": rl.to_dict(),
+        "opt_flags": list(opt_flags),
+        "hlo_size_bytes": len(hlo_text),
+    }
+    print(f"[dryrun] {arch_id} x {shape_name} @ {mesh_name}: OK "
+          f"(compile {t_compile:.0f}s, {mem.get('peak_per_device_gb', float('nan')):.2f} "
+          f"GB/dev, dominant={rl.dominant}, frac={rl.roofline_fraction:.3f})")
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="cfg override key=value (perf iterations)")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        from repro import configs      # safe: subprocesses do the compiling
+        failures = []
+        for arch_id, shape_name in configs.cells():
+            tag = f"{arch_id}__{shape_name}__{'2x16x16' if args.multipod else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[dryrun] skip cached {tag}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch_id,
+                   "--shape", shape_name, "--out", args.out]
+            if args.multipod:
+                cmd.append("--multipod")
+            for o in args.opt:
+                cmd += ["--opt", o]
+            print(f"[dryrun] launching {tag}", flush=True)
+            r = subprocess.run(cmd, timeout=args.timeout)
+            if r.returncode != 0:
+                failures.append(tag)
+                with open(path, "w") as f:
+                    json.dump({"arch": arch_id, "shape": shape_name,
+                               "status": "failed", "rc": r.returncode}, f)
+        print(f"[dryrun] sweep done; {len(failures)} failures: {failures}")
+        return 1 if failures else 0
+
+    assert args.arch and args.shape, "--arch/--shape required (or --all)"
+    tag = f"{args.arch}__{args.shape}__{'2x16x16' if args.multipod else '16x16'}"
+    suffix = "".join(f"__{o}" for o in args.opt).replace("=", "-")
+    path = os.path.join(args.out, tag + suffix + ".json")
+    try:
+        result = run_cell(args.arch, args.shape, args.multipod, args.out,
+                          tuple(args.opt))
+    except Exception:
+        traceback.print_exc()
+        with open(path, "w") as f:
+            json.dump({"arch": args.arch, "shape": args.shape, "status": "error",
+                       "trace": traceback.format_exc()}, f, indent=1)
+        return 1
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

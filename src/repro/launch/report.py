@@ -1,0 +1,91 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if b >= div:
+            return f"{b/div:.1f}{unit}"
+    return f"{b:.0f}B"
+
+
+def _fmt_s(s):
+    if s is None:
+        return "-"
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.1f}ms"
+    return f"{s*1e6:.0f}us"
+
+
+def load(dir_: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def dryrun_table(rows) -> str:
+    out = ["| arch | shape | mesh | status | compile | GB/device | collectives (per-chip bytes) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r.get("shape", ""), r.get("mesh", ""))):
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r.get('shape','-')} | {r.get('mesh','-')} "
+                       f"| **{r.get('status')}** | - | - | - |")
+            continue
+        mem = r["memory_analysis"].get("peak_per_device_gb")
+        coll = r["hlo"]["collective_breakdown"]
+        coll_s = ", ".join(f"{k}:{_fmt_bytes(v)}" for k, v in sorted(coll.items())) or "none"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {r['compile_s']}s "
+            f"| {mem:.1f} | {coll_s} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="16x16") -> str:
+    out = ["| arch | shape | compute | memory | collective | dominant | MODEL_FLOPS | useful | mem-floor | roofline-frac |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r.get("shape", ""))):
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(rl['compute_s'])} "
+            f"| {_fmt_s(rl['memory_s'])} | {_fmt_s(rl['collective_s'])} "
+            f"| **{rl['dominant']}** | {rl['model_flops_total']:.2e} "
+            f"| {rl['useful_ratio']:.2f} | {rl['mem_floor_ratio']:.3f} "
+            f"| {rl['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--section", choices=["dryrun", "roofline", "both"],
+                    default="both")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if args.section in ("dryrun", "both"):
+        print("## Dry-run\n")
+        print(dryrun_table(rows))
+        print()
+    if args.section in ("roofline", "both"):
+        print("## Roofline (single-pod 16x16)\n")
+        print(roofline_table(rows, "16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Roofline-term computation from a compiled dry-run artifact.
+
+TPU v5e-class hardware constants (the TARGET platform; this container is a
+CPU host used only to lower/compile):
+
+    peak bf16 compute : 197 TFLOP/s per chip (394 TOP/s int8)
+    HBM bandwidth     : 819 GB/s per chip
+    ICI link bandwidth: ~50 GB/s per link
+
+Terms (per the assignment):
+    compute    = HLO_FLOPs   / (chips * peak)
+    memory     = HLO_bytes   / (chips * HBM_bw)
+    collective = coll_bytes  / (chips * link_bw)
+
+The post-SPMD module is a per-device program, so FLOPs/bytes parsed from it are
+already per-chip (chips divide out); we report both conventions explicitly.
+
+MODEL_FLOPS (usefulness reference): 6·N·D (train), 2·N·D (prefill),
+2·N per decode token (N = active params for MoE).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device (post-SPMD program) quantities
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_total: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs * chips)
+    roofline_fraction: float     # useful-time / dominant-term time
+    min_bytes_per_chip: float = 0.0   # unavoidable traffic (params+cache)/chips
+    mem_floor_ratio: float = 0.0      # min_bytes / modeled bytes (1.0 = optimal)
+    note: str = ""
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def terms(arch: str, shape: str, mesh_name: str, chips: int, hlo_flops: float,
+          hlo_bytes: float, coll_bytes: float, model_flops: float,
+          peak: float = PEAK_FLOPS_BF16, min_bytes_total: float = 0.0) -> Roofline:
+    compute_s = hlo_flops / peak
+    memory_s = hlo_bytes / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", collective_s), key=lambda t: t[1])[0]
+    dom_s = max(compute_s, memory_s, collective_s)
+    # compute-side roofline fraction: useful model FLOPs at peak vs the
+    # dominant-term time.  For inherently memory-bound steps (decode) the
+    # mem_floor_ratio is the honest score: how close the modeled traffic is
+    # to the unavoidable params+cache movement.
+    useful_s = model_flops / (chips * peak)
+    frac = useful_s / dom_s if dom_s > 0 else 0.0
+    min_b = min_bytes_total / chips if min_bytes_total else 0.0
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=hlo_flops, bytes_per_chip=hlo_bytes,
+        coll_bytes_per_chip=coll_bytes, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dom,
+        model_flops_total=model_flops,
+        useful_ratio=model_flops / max(hlo_flops * chips, 1.0),
+        roofline_fraction=min(frac, 1.0),
+        min_bytes_per_chip=min_b,
+        mem_floor_ratio=min(min_b / hlo_bytes, 1.0) if hlo_bytes else 0.0)
+
+
+def min_bytes(cfg, spec, cache_bytes: float = 0.0) -> float:
+    """Unavoidable per-step HBM traffic: read every active param once
+    (bf16) + read/update the KV cache (decode) or write it (prefill)."""
+    pbytes = 2.0 * cfg.active_params()
+    if spec.kind == "train":
+        # fwd + bwd param reads + grad/opt writes ~ 3x params in + 2x out (f32)
+        return 3 * pbytes + 2 * 4.0 * cfg.num_params()
+    return pbytes + cache_bytes
+
+
+def model_flops(cfg, spec) -> float:
+    """Analytic useful-FLOPs reference for one step of this cell."""
+    n_active = cfg.active_params()
+    b, s = spec.global_batch, spec.seq_len
+    if spec.kind == "train":
+        if cfg.family == "encdec":
+            dec = max(s // cfg.dec_len_ratio, 64)
+            return 6.0 * n_active * b * (s + dec) / 2   # enc fwd-only approx
+        return 6.0 * n_active * b * s
+    if spec.kind == "prefill":
+        if cfg.family == "encdec":
+            dec = max(s // cfg.dec_len_ratio, 64)
+            return 2.0 * n_active * b * (s + dec)
+        return 2.0 * n_active * b * s
+    # decode: one token per sequence
+    return 2.0 * n_active * b

@@ -1,0 +1,130 @@
+"""Jitted step builders: train / prefill / decode with full sharding specs.
+
+These are the AOT-compiled "binaries" of the framework (DESIGN.md §2): one XLA
+executable per (arch x shape x mesh), bound once, replayed by the run loops
+with zero retracing — params, optimizer state and KV arenas are donated so
+steady-state steps allocate nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.data import pipeline
+from repro.distributed import sharding
+from repro.models import registry
+from repro.models.common import ArchConfig
+from repro.optim import adamw
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_train_step(cfg: ArchConfig, mesh, opt_cfg: adamw.AdamWConfig):
+    """Returns (jitted step, shardings dict).
+
+    Gradient accumulation: the global batch is split into ``cfg.grad_accum``
+    microbatches scanned sequentially with summed grads — bounds live
+    activation memory (saved scan carries scale with the microbatch, not the
+    global batch) at zero extra collective traffic.
+    """
+    model = registry.get(cfg.family)
+    pspec = sharding.param_specs(cfg, mesh)
+    psh = _named(mesh, pspec)
+    osh = adamw.AdamWState(step=NamedSharding(mesh, P()), mu=psh, nu=psh)
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_axes = dp if len(dp) > 1 else dp[0]
+
+    def _split_micro(batch, accum):
+        def split(k, v):
+            ax = 1 if k == "pos3" else 0               # pos3 is (3, B, S)
+            b = v.shape[ax]
+            new = v.shape[:ax] + (accum, b // accum) + v.shape[ax + 1:]
+            out = v.reshape(new)
+            if ax == 1:
+                out = jnp.moveaxis(out, 1, 0)          # (accum, 3, B/a, S)
+            spec = [None] * out.ndim
+            spec[ax + 1] = dp_axes
+            return jax.lax.with_sharding_constraint(
+                out, P(*spec)) if dp else out
+        return {k: split(k, v) for k, v in batch.items()}
+
+    def step(params, opt_state, batch):
+        accum = max(cfg.grad_accum, 1)
+        some = next(iter(batch.values()))
+        if accum > 1 and some.shape[0] % accum == 0:
+            micro = _split_micro(batch, accum)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, metrics), g = jax.value_and_grad(
+                    lambda p: model.loss(cfg, p, mb), has_aux=True)(params)
+                gsum = jax.tree.map(lambda a, b_: a + b_.astype(a.dtype), gsum, g)
+                return (gsum, lsum + l), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), ms = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)),
+                                            micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: model.loss(cfg, p, batch), has_aux=True)(params)
+        new_p, new_o, om = adamw.update(opt_cfg, grads, opt_state, params)
+        return new_p, new_o, {"loss": loss, **metrics, **om}
+
+    fn = jax.jit(step, donate_argnums=(0, 1),
+                 in_shardings=(psh, osh, None),
+                 out_shardings=(psh, osh, None))
+    return fn, {"params": psh, "opt": osh}
+
+
+def batch_sharding(cfg, mesh, spec: pipeline.BatchSpec, long_context=False):
+    shapes = pipeline.batch_shapes(cfg, spec)
+    bspec = sharding.batch_specs(cfg, mesh, shapes, long_context)
+    return _named(mesh, bspec), shapes
+
+
+def build_prefill(cfg: ArchConfig, mesh, spec: pipeline.BatchSpec):
+    model = registry.get(cfg.family)
+    psh = _named(mesh, sharding.param_specs(cfg, mesh))
+    bsh, _ = batch_sharding(cfg, mesh, spec)
+
+    def fn(params, batch):
+        return model.prefill(cfg, params, batch)
+
+    return jax.jit(fn, in_shardings=(psh, bsh)), psh
+
+
+def build_decode_step(cfg: ArchConfig, mesh, spec: pipeline.BatchSpec):
+    """serve_step: one new token against a seq_len KV cache (donated)."""
+    model = registry.get(cfg.family)
+    long_ctx = spec.global_batch == 1 and spec.seq_len > 65536
+    psh = _named(mesh, sharding.param_specs(cfg, mesh))
+    if cfg.family == "encdec":
+        cache_shapes = model.init_cache(cfg, spec.global_batch, spec.seq_len,
+                                        as_shapes=True, cross_len=spec.seq_len)
+    else:
+        cache_shapes = model.init_cache(cfg, spec.global_batch, spec.seq_len,
+                                        as_shapes=True)
+    csh = _named(mesh, sharding.cache_specs(cfg, mesh, cache_shapes, long_ctx))
+    tok_shapes = pipeline.decode_batch_shapes(cfg, spec)
+    tsh = _named(mesh, sharding.batch_specs(cfg, mesh, tok_shapes))
+
+    def fn(params, cache, batch, pos):
+        return model.decode_step(cfg, params, cache, batch, pos)
+
+    jitted = jax.jit(fn, donate_argnums=(1,),
+                     in_shardings=(psh, csh, tsh, None),
+                     out_shardings=(None, csh))
+    return jitted, {"params": psh, "cache": csh, "cache_shapes": cache_shapes,
+                    "tok_shapes": tok_shapes}

@@ -1,0 +1,235 @@
+"""Shared model machinery: configs, norms, RoPE/M-RoPE, losses, init helpers.
+
+Everything is pure-functional JAX (params as pytrees of stacked per-layer
+arrays, ``lax.scan`` over the layer dimension) so the same code path lowers for
+1-device smoke tests and 512-device pjit dry-runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | mla | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0              # 0 -> d_model // n_heads
+    # MoE
+    n_experts: int = 0
+    top_k: int = 1
+    capacity_factor: float = 1.25
+    moe_chunk: int = 512         # seq chunk for dispatch (bounds dispatch tensor)
+    moe_every: int = 1           # one MoE layer per N layers (Llama-4 style)
+    n_shared_experts: int = 0    # always-active shared experts per MoE layer
+    # MLA (DeepSeek-V2 style; MiniCPM3 values by default when family == "mla")
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+    # SSM (Mamba2 SSD)
+    ssm_state: int = 64
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    # hybrid (Zamba2-style): one shared attention block every N ssm layers
+    attn_every: int = 6
+    # RWKV6
+    rwkv_lora: int = 64
+    # enc-dec (Whisper-style)
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    dec_len_ratio: int = 8       # decoder length = seq_len // ratio for train/prefill
+    # VLM (Qwen2-VL M-RoPE)
+    mrope_sections: Tuple[int, ...] = ()
+    # generic
+    seq_parallel: bool = True   # Megatron-SP activation sharding between blocks
+    opt_state_bf16: bool = False # bf16 Adam moments (halves optimizer memory)
+    grad_accum: int = 8          # microbatch count for gradient accumulation
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    loss_chunk: int = 512        # seq chunk for the vocab-sharded cross entropy
+    use_scan: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def num_params(self) -> int:
+        from repro.models import registry
+        shapes = registry.get(self.family).param_shapes(self)
+        return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+    def active_params(self) -> int:
+        """Params touched per token (MoE: non-expert + shared + top_k experts)."""
+        if self.n_experts == 0:
+            return self.num_params()
+        full = self.num_params()
+        n_moe_layers = self.n_layers // max(self.moe_every, 1)
+        expert_block = 3 * self.d_model * self.d_ff * n_moe_layers
+        all_experts = expert_block * self.n_experts
+        return full - all_experts + expert_block * self.top_k
+
+
+# ---------------------------------------------------------------------------
+# Elementary layers
+# ---------------------------------------------------------------------------
+def act_shard(x: jax.Array, batch_axis: int = 0, seq_axis: int = 1,
+              enabled: bool = True) -> jax.Array:
+    """Megatron-style sequence-parallel activation constraint between blocks.
+
+    When lowering under a mesh context, constrain a (B, S, d) activation to
+    P(dp, 'model', None): batch over the data axes, SEQUENCE over the model
+    axis.  GSPMD then turns each block's TP all-reduce into reduce-scatter +
+    all-gather and the saved scan carries shrink by the TP degree — the fix
+    that makes train_4k fit HBM (see EXPERIMENTS.md §Perf).  No-op without a
+    mesh context (single-device smoke tests) or when dims don't divide.
+    """
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty:
+            return x
+    except Exception:                                  # pragma: no cover
+        return x
+    from jax.sharding import PartitionSpec as P
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    spec = [None] * x.ndim
+    dpsize = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if dp and x.shape[batch_axis] % dpsize == 0 and x.shape[batch_axis] > 1:
+        spec[batch_axis] = dp if len(dp) > 1 else dp[0]
+    if ("model" in names and x.shape[seq_axis] > 1
+            and x.shape[seq_axis] % mesh.shape["model"] == 0):
+        spec[seq_axis] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def rope_freqs(d: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, D); pos (..., S) int32. Rotates pairs (even,odd)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs          # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, pos3: jax.Array, theta: float,
+                sections: Tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL M-RoPE: x (B, H, S, D); pos3 (3, B, S) (temporal, h, w).
+
+    ``sections`` partitions D/2 rotary frequencies among the three position
+    streams (e.g. (16, 24, 24) for D=128).
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    ang = pos3[..., None].astype(jnp.float32) * freqs         # (3, B, S, D/2)
+    sec_id = np.repeat(np.arange(len(sections)), np.array(sections))  # (D/2,)
+    onehot = jnp.asarray(sec_id[None, :] == np.arange(len(sections))[:, None],
+                         jnp.float32)                         # (3, D/2)
+    ang = jnp.einsum("kbsf,kf->bsf", ang, onehot)             # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[:, None], jnp.sin(ang)[:, None]   # (B, 1, S, D/2)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, wg.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, wu.astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, wd.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded, sequence-chunked cross entropy
+# ---------------------------------------------------------------------------
+def xent_loss(x: jax.Array, head: jax.Array, labels: jax.Array,
+              chunk: int = 512) -> jax.Array:
+    """Mean CE over (B, S) without materialising full (B, S, V) logits.
+
+    ``head`` (V, d) is vocab-sharded over 'model'; the max/logsumexp reductions
+    over V lower to partial reductions + all-reduce under GSPMD.  The sequence
+    is processed in chunks via scan so the live logits tensor is (B, chunk, V).
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    xc = x[:, :n * chunk].reshape(b, n, chunk, d).swapaxes(0, 1)
+    lc = labels[:, :n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+
+    v = head.shape[0]
+
+    def step(tot, xl):
+        xi, li = xl
+        logits = jnp.einsum("bcd,vd->bcv", xi, head.astype(xi.dtype))
+        logits = logits.astype(jnp.float32)
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+        # one-hot contraction instead of take_along_axis: stays vocab-sharded
+        # under GSPMD (Megatron-style vocab-parallel CE)
+        onehot = jax.nn.one_hot(li, v, dtype=logits.dtype)
+        gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        return tot + jnp.sum(lse - gold), None
+
+    tot, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (xc, lc))
+    return tot / (b * n * chunk)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+def init_from_shapes(shapes, key: jax.Array, scale: float = 0.02):
+    """Normal(0, scale) init for every leaf (fan-in scaling applied by callers
+    that need it); deterministic per-leaf fold-in by flattened index."""
+    leaves, treedef = jax.tree.flatten(shapes)
+    out = []
+    for i, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append(jax.random.normal(k, leaf.shape, leaf.dtype) * scale)
+        else:
+            out.append(jnp.zeros(leaf.shape, leaf.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)

@@ -1,0 +1,27 @@
+"""Family registry: maps ArchConfig.family -> model module.
+
+Every module implements the same functional protocol (see transformer.py):
+param_shapes / init_params / loss / prefill / init_cache / decode_step.
+"""
+
+from __future__ import annotations
+
+from repro.models import rwkv6, transformer, whisper, zamba
+
+_REGISTRY = {
+    "dense": transformer,
+    "moe": transformer,
+    "mla": transformer,
+    "vlm": transformer,
+    "ssm": rwkv6,
+    "hybrid": zamba,
+    "encdec": whisper,
+}
+
+
+def get(family: str):
+    try:
+        return _REGISTRY[family]
+    except KeyError:
+        raise ValueError(f"unknown model family {family!r}; "
+                         f"known: {sorted(_REGISTRY)}") from None

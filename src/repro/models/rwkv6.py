@@ -1,0 +1,232 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent decay.
+
+Per head h with head dim D, per step t:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state: D x D)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(decay_t)) produced by a LoRA MLP of the token-shifted input
+(the data-dependent decay that distinguishes v6), plus token-shift mixing on
+every projection and a squared-ReLU channel-mix FFN.
+
+Training/prefill uses a chunked formulation: within a chunk the contribution is
+a masked quadratic form; the D x D state is carried across chunks with a scan —
+the same structure as Mamba-2's SSD (chunk = cfg.ssm_chunk).  Decode is O(1) in
+context length: the whole ``long_500k`` story for this arch.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ArchConfig, act_shard, init_from_shapes,
+                                 rms_norm, sds, xent_loss)
+
+
+def param_shapes(cfg: ArchConfig) -> Dict[str, Any]:
+    L, d, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    r = cfg.rwkv_lora
+    pd = cfg.param_dtype
+    return {
+        "embed": sds((V, d), pd),
+        "blocks": {
+            "ln1": sds((L, d), pd), "ln2": sds((L, d), pd),
+            # time-mix: token-shift mixing coefficients per stream (r,k,v,w,g)
+            "mix": sds((L, 5, d), pd),
+            "wr": sds((L, d, d), pd), "wk": sds((L, d, d), pd),
+            "wv": sds((L, d, d), pd), "wg": sds((L, d, d), pd),
+            "wo": sds((L, d, d), pd),
+            # data-dependent decay LoRA: d -> r -> d
+            "w_a": sds((L, d, r), pd), "w_b": sds((L, r, d), pd),
+            "w_bias": sds((L, d), pd),
+            "u": sds((L, d), pd),                      # per-channel bonus
+            "ln_x": sds((L, d), pd),                   # group-norm surrogate
+            # channel mix
+            "cmix": sds((L, 2, d), pd),
+            "ck": sds((L, d, cfg.d_ff), pd), "cv": sds((L, cfg.d_ff, d), pd),
+            "cr": sds((L, d, d), pd),
+        },
+        "ln_f": sds((d,), pd),
+        "head": sds((V, d), pd),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    p = init_from_shapes(param_shapes(cfg), key)
+    b = p["blocks"]
+    for k in ("ln1", "ln2", "ln_x"):
+        b[k] = jnp.ones_like(b[k])
+    p["ln_f"] = jnp.ones_like(p["ln_f"])
+    b["mix"] = jnp.full_like(b["mix"], 0.5)
+    b["cmix"] = jnp.full_like(b["cmix"], 0.5)
+    b["w_bias"] = jnp.full_like(b["w_bias"], -4.0)   # slow decay at init
+    return p
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """Token shift: x (B,S,d) -> previous token (zero/state for t=0)."""
+    prev = (jnp.zeros_like(x[:, :1]) if last is None
+            else last[:, None].astype(x.dtype))
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, w_log, u, chunk: int, s0=None):
+    """Chunked WKV: r,k,v (B,S,H,D); w_log (B,S,H,D) (log decay, negative).
+
+    Returns (o (B,S,H,D), final state (B,H,D,D))."""
+    b, s, H, D = r.shape
+    Q = min(chunk, s)
+    nc = s // Q
+    rb, kb, vb = (t.reshape(b, nc, Q, H, D) for t in (r, k, v))
+    wb = w_log.reshape(b, nc, Q, H, D)
+    cs = jnp.cumsum(wb, axis=2)                               # (b,nc,Q,H,D)
+
+    # intra-chunk: o_t += sum_{j<t} r_t ⊙ exp(cs_{t-1}-cs_j) k_j v_j + diag(u) term
+    r_dec = rb * jnp.exp(cs - wb)                             # r_t exp(cs_{t-1})
+    k_dec = kb * jnp.exp(-cs)                                 # k_j exp(-cs_j)
+    att = jnp.einsum("bcqhd,bckhd->bchqk", r_dec, k_dec)      # (b,nc,H,Q,Q)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    att = jnp.where(mask[None, None, None], att, 0.0)
+    o = jnp.einsum("bchqk,bckhe->bcqhe", att, vb)
+    # bonus diagonal term: r_t ⊙ u ⊙ k_t v_t
+    bonus = jnp.einsum("bcqhd,bcqhd->bcqh", rb, kb * u[None, None, None])
+    o = o + bonus[..., None] * vb
+
+    # chunk-final states and cross-chunk scan
+    dec_to_end = jnp.exp(cs[:, :, -1:] - cs)                  # (b,nc,Q,H,D)
+    st = jnp.einsum("bcqhd,bcqhe->bchde", kb * dec_to_end, vb)  # (b,nc,H,D,D)
+    chunk_dec = jnp.exp(cs[:, :, -1])                         # (b,nc,H,D)
+
+    def scan_fn(Sc, inp):
+        sti, deci = inp
+        return Sc * deci[..., None] + sti, Sc
+
+    S_init = jnp.zeros((b, H, D, D), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+    S_last, S_prev = jax.lax.scan(
+        scan_fn, S_init,
+        (st.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_dec.transpose(1, 0, 2, 3).astype(jnp.float32)))
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)                  # (b,nc,H,D,D)
+
+    o = o + jnp.einsum("bcqhd,bchde->bcqhe", r_dec.astype(jnp.float32),
+                       S_prev).astype(o.dtype)
+    return o.reshape(b, s, H, D), S_last
+
+
+def _time_mix_forward(cfg, p, x, chunk, state=None):
+    """Full-sequence time-mix. state: (last_x (B,d), S (B,H,D,D)) or None."""
+    b, s, d = x.shape
+    H = cfg.n_heads
+    D = d // H
+    last_x = None if state is None else state[0]
+    xs = _shift(x, last_x)
+
+    def mixed(i):
+        m = p["mix"][i][None, None].astype(x.dtype)
+        return x * m + xs * (1 - m)
+
+    r = jnp.einsum("bsd,de->bse", mixed(0), p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", mixed(1), p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", mixed(2), p["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,de->bse", mixed(3), p["wg"].astype(x.dtype))
+    dd = jnp.einsum("bsd,dr->bsr", mixed(4), p["w_a"].astype(x.dtype))
+    dd = jnp.einsum("bsr,rd->bsd", jnp.tanh(dd), p["w_b"].astype(x.dtype))
+    w_log = -jnp.exp((p["w_bias"][None, None] + dd).astype(jnp.float32))  # < 0
+
+    rh, kh, vh = (t.reshape(b, s, H, D) for t in (r, k, v))
+    u = p["u"].reshape(H, D).astype(jnp.float32)
+    o, S_last = _wkv_chunked(rh.astype(jnp.float32), kh.astype(jnp.float32),
+                             vh.astype(jnp.float32),
+                             w_log.reshape(b, s, H, D), u, chunk,
+                             None if state is None else state[1])
+    o = o.reshape(b, s, d).astype(x.dtype)
+    o = rms_norm(o, p["ln_x"], cfg.norm_eps) * jax.nn.silu(g)
+    out = jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+    return out, (x[:, -1], S_last)
+
+
+def _channel_mix(cfg, p, x, last_x=None):
+    xs = _shift(x, last_x)
+    m0 = p["cmix"][0][None, None].astype(x.dtype)
+    m1 = p["cmix"][1][None, None].astype(x.dtype)
+    xk = x * m0 + xs * (1 - m0)
+    xr = x * m1 + xs * (1 - m1)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["ck"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cv"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cr"].astype(x.dtype)))
+    return rr * vv, x[:, -1]
+
+
+def _block(cfg, p, x, chunk, state=None):
+    tm_state = None if state is None else (state["tm_x"], state["S"])
+    cm_last = None if state is None else state["cm_x"]
+    a, tm_new = _time_mix_forward(cfg, p, rms_norm(x, p["ln1"], cfg.norm_eps),
+                                  chunk, tm_state)
+    x = x + a
+    c, cm_new = _channel_mix(cfg, p, rms_norm(x, p["ln2"], cfg.norm_eps), cm_last)
+    x = x + c
+    return x, {"tm_x": tm_new[0].astype(jnp.float32), "S": tm_new[1],
+               "cm_x": cm_new.astype(jnp.float32)}
+
+
+def _scan_blocks(cfg, params, x, collect_state=False, states=None):
+    def body(xc, inp):
+        xc = act_shard(xc, enabled=cfg.seq_parallel)
+        if states is None:
+            p_l = inp
+            xo, st = _block(cfg, p_l, xc, cfg.ssm_chunk)
+        else:
+            p_l, st_l = inp
+            xo, st = _block(cfg, p_l, xc, cfg.ssm_chunk, st_l)
+        return xo, st if collect_state else 0
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    xs = params["blocks"] if states is None else (params["blocks"], states)
+    return jax.lax.scan(body_fn, x, xs)
+
+
+def loss(cfg: ArchConfig, params, batch):
+    tokens = batch["tokens"]
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x, _ = _scan_blocks(cfg, params, x)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    ce = xent_loss(x, params["head"], batch["labels"], cfg.loss_chunk)
+    return ce, {"ce": ce}
+
+
+def init_cache(cfg: ArchConfig, b: int, max_len: int, as_shapes: bool = False):
+    """RWKV cache is O(1) in context: per-layer state only."""
+    L, d, H = cfg.n_layers, cfg.d_model, cfg.n_heads
+    D = d // H
+    ct = jnp.float32
+    shapes = {"tm_x": sds((L, b, d), ct), "S": sds((L, b, H, D, D), ct),
+              "cm_x": sds((L, b, d), ct)}
+    if as_shapes:
+        return shapes
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    tokens = batch["tokens"]
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x, states = _scan_blocks(cfg, params, x, collect_state=True)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["head"].astype(x.dtype))
+    return logits.astype(jnp.float32), states
+
+
+def decode_step(cfg: ArchConfig, params, cache, batch, pos):
+    tokens = batch["tokens"]
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+
+    def body(xc, inp):
+        p_l, st_l = inp
+        xo, st = _block(cfg, p_l, xc, 1, st_l)
+        return xo, st
+
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["head"].astype(x.dtype))
+    return logits.astype(jnp.float32), new_states

@@ -1,0 +1,170 @@
+"""Mamba2 (SSD) blocks — the state-space substrate for zamba2-1.2b.
+
+Chunked SSD algorithm (Mamba-2, arXiv:2405.21060 §6): the sequence is split
+into chunks; within a chunk the recurrence is computed as a masked quadratic
+form (MXU-friendly), and chunk-final states are propagated with a short scan —
+O(S·Q) work with static shapes, so it lowers cleanly through pjit and has an
+O(1)-in-context decode step (the whole point of the ``long_500k`` cells).
+
+Single-group B/C (n_groups=1), scalar-per-head A (Mamba-2 simplification).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, rms_norm, sds
+
+
+def ssm_param_shapes(cfg: ArchConfig, n_layers: int) -> Dict[str, Any]:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.n_ssm_heads
+    L = n_layers
+    pd = cfg.param_dtype
+    # in_proj emits [z (di), x (di), B (N), C (N), dt (H)]
+    return {
+        "ln": sds((L, d), pd),
+        "in_proj": sds((L, d, 2 * di + 2 * N + H), pd),
+        "conv_w": sds((L, di + 2 * N, cfg.ssm_conv), pd),   # depthwise causal conv
+        "conv_b": sds((L, di + 2 * N), pd),
+        "A_log": sds((L, H), pd),
+        "D": sds((L, H), pd),
+        "dt_bias": sds((L, H), pd),
+        "norm": sds((L, di), pd),                           # gated RMSNorm
+        "out_proj": sds((L, di, d), pd),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B,S,C), w (C,K) -> (B,S,C)."""
+    k = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1]] * w[None, None, :, i]
+    return out + b[None, None, :]
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: returns (..., Q, Q) with out[..,i,j] = sum_{j<k<=i} x[..,k]."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_forward(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int, h0: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x (b,S,H,P); dt (b,S,H) (softplus'ed); A (H,) negative; B,C (b,S,N).
+    Returns (y (b,S,H,P), final state (b,H,P,N)).
+    """
+    b, s, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, s)
+    nc = s // Q
+    xb = x.reshape(b, nc, Q, H, P)
+    dtb = dt.reshape(b, nc, Q, H)
+    Bb = B.reshape(b, nc, Q, N)
+    Cb = C.reshape(b, nc, Q, N)
+    dA = dtb * A[None, None, None, :]                       # (b,nc,Q,H) log-decay
+    dA_cs = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+
+    # 1) intra-chunk (diagonal block): y = (L ∘ (C B^T)) (dt x)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))       # (b,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cb, Bb)          # (b,nc,Q,Q)
+    dtx = xb * dtb[..., None]                               # (b,nc,Q,H,P)
+    y_diag = jnp.einsum("bchqk,bcqk,bckhp->bcqhp",
+                        Lmat, scores, dtx)
+
+    # 2) chunk-final states: S_c = sum_k exp(dA_cs[end]-dA_cs[k]) B_k (dt x)_k
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)     # (b,nc,Q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchnp", Bb, decay_to_end, dtx)
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # (b,nc,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                       # (b,H,N,P), (b,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    h_init = (jnp.zeros((b, H, N, P), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32).transpose(0, 1, 3, 2))
+    _, h_prev = jax.lax.scan(scan_fn,
+                             h_init,
+                             (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+                              chunk_decay.transpose(1, 0, 2).astype(jnp.float32)))
+    h_last, _ = scan_fn(h_prev[-1],
+                        (states.transpose(1, 0, 2, 3, 4)[-1].astype(jnp.float32),
+                         chunk_decay.transpose(1, 0, 2)[-1].astype(jnp.float32)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                # (b,nc,H,N,P)
+
+    # 4) chunk-start contribution: y += C_t exp(dA_cs[t]) h_prev
+    in_decay = jnp.exp(dA_cs)                               # (b,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cb, in_decay,
+                       h_prev.astype(Cb.dtype))
+    y = (y_diag + y_off).reshape(b, s, H, P)
+    return y.astype(x.dtype), h_last.transpose(0, 1, 3, 2).astype(x.dtype)
+
+
+def mamba_block_forward(cfg: ArchConfig, p, x, conv_state=None, ssm_state=None,
+                        return_state: bool = False):
+    """Full-sequence Mamba2 block. x (B,S,d) -> (B,S,d) [+ states]."""
+    b, s, d = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_headdim
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(h.dtype))
+    z, xi, B_, C_, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], -1)
+    xbc = jnp.concatenate([xi, B_, C_], -1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(h.dtype),
+                                   p["conv_b"].astype(h.dtype)))
+    xi, B_, C_ = jnp.split(xbc, [di, di + N], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = ssd_forward(xi.reshape(b, s, H, P), dt, A, B_, C_, cfg.ssm_chunk)
+    y = y + xi.reshape(b, s, H, P) * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = x + jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    if return_state:
+        # conv tail state: last (K-1) inputs of the conv stream
+        conv_tail = jnp.concatenate([xi, B_, C_], -1)[:, s - (cfg.ssm_conv - 1):]
+        return out, (conv_tail, state)
+    return out
+
+
+def mamba_block_decode(cfg: ArchConfig, p, x, conv_state, ssm_state):
+    """One-token Mamba2 step. x (B,1,d); conv_state (B,K-1,conv_dim);
+    ssm_state (B,H,P,N)."""
+    b, _, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(h.dtype))
+    z, xi, B_, C_, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], -1)
+    xbc_new = jnp.concatenate([xi, B_, C_], -1)               # (B,1,conv_dim)
+    window = jnp.concatenate([conv_state, xbc_new], 1)        # (B,K,conv_dim)
+    w = p["conv_w"].astype(h.dtype)                           # (conv_dim,K)
+    xbc = jax.nn.silu(jnp.einsum("bkc,ck->bc", window, w)
+                      + p["conv_b"].astype(h.dtype))[:, None]
+    xi, B_, C_ = jnp.split(xbc, [di, di + N], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[:, 0] * A[None])                          # (B,H)
+    xh = xi.reshape(b, H, P)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], B_[:, 0].astype(jnp.float32),
+                     xh.astype(jnp.float32))
+    new_state = ssm_state.astype(jnp.float32) * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C_[:, 0].astype(jnp.float32), new_state)
+    y = y.astype(x.dtype) + xh * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = x + jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, (window[:, 1:], new_state.astype(ssm_state.dtype))

@@ -1,0 +1,480 @@
+"""Unified decoder-only transformer: dense / MoE / MLA / VLM(M-RoPE) families.
+
+Pure-functional, scan-over-layers, remat-able; one code path lowers for the
+1-device smoke tests, the 512-device dry-run, and the serving executor.
+
+MoE archs support *interleaved* expert layers (``cfg.moe_every``: one MoE layer
+per ``moe_every`` layers, rest dense — Llama-4 style) plus optional
+always-active shared experts.  Layers are scanned in SUPERBLOCKS of
+``moe_every`` layers so the stacked-params scan stays uniform.
+
+Interface (shared by every family module in models/):
+    param_shapes(cfg)                  -> pytree of ShapeDtypeStruct
+    init_params(cfg, key)              -> pytree of arrays
+    loss(cfg, params, batch)           -> (scalar loss, metrics dict)
+    prefill(cfg, params, batch)        -> (last-token logits, cache)
+    init_cache(cfg, batch_size, max_len) -> cache pytree
+    decode_step(cfg, params, cache, batch, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models.common import (ArchConfig, act_shard, apply_mrope,
+                                 apply_rope, init_from_shapes, rms_norm, sds,
+                                 swiglu, xent_loss)
+
+
+# ---------------------------------------------------------------------------
+# Parameter shapes
+# ---------------------------------------------------------------------------
+def _attn_shapes(cfg: ArchConfig, lead: Tuple[int, ...]) -> Dict[str, Any]:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    pd = cfg.param_dtype
+    if cfg.family == "mla":
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        return {
+            "wq_a": sds(lead + (d, cfg.q_lora_rank), pd),
+            "q_ln": sds(lead + (cfg.q_lora_rank,), pd),
+            "wq_b": sds(lead + (cfg.q_lora_rank, H * qk), pd),
+            "wkv_a": sds(lead + (d, cfg.kv_lora_rank + cfg.qk_rope_dim), pd),
+            "kv_ln": sds(lead + (cfg.kv_lora_rank,), pd),
+            "wkv_b": sds(lead + (cfg.kv_lora_rank,
+                                 H * (cfg.qk_nope_dim + cfg.v_head_dim)), pd),
+            "wo": sds(lead + (H * cfg.v_head_dim, d), pd),
+        }
+    return {
+        "wq": sds(lead + (d, H * Dh), pd),
+        "wk": sds(lead + (d, Hkv * Dh), pd),
+        "wv": sds(lead + (d, Hkv * Dh), pd),
+        "wo": sds(lead + (H * Dh, d), pd),
+    }
+
+
+def _dense_mlp_shapes(cfg: ArchConfig, lead) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    pd = cfg.param_dtype
+    return {"wg": sds(lead + (d, f), pd), "wu": sds(lead + (d, f), pd),
+            "wd": sds(lead + (f, d), pd)}
+
+
+def _moe_mlp_shapes(cfg: ArchConfig, lead) -> Dict[str, Any]:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    pd = cfg.param_dtype
+    out = {
+        "router": sds(lead + (d, E), pd),
+        "wg": sds(lead + (E, d, f), pd),
+        "wu": sds(lead + (E, d, f), pd),
+        "wd": sds(lead + (E, f, d), pd),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        out["wg_s"] = sds(lead + (d, fs), pd)
+        out["wu_s"] = sds(lead + (d, fs), pd)
+        out["wd_s"] = sds(lead + (fs, d), pd)
+    return out
+
+
+def _block_shapes(cfg: ArchConfig, lead, moe: bool) -> Dict[str, Any]:
+    d = cfg.d_model
+    pd = cfg.param_dtype
+    return {
+        "ln1": sds(lead + (d,), pd), "ln2": sds(lead + (d,), pd),
+        "attn": _attn_shapes(cfg, lead),
+        "mlp": _moe_mlp_shapes(cfg, lead) if moe else _dense_mlp_shapes(cfg, lead),
+    }
+
+
+def _n_groups(cfg: ArchConfig) -> int:
+    return cfg.n_layers // max(cfg.moe_every, 1)
+
+
+def param_shapes(cfg: ArchConfig) -> Dict[str, Any]:
+    L, d, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    pd = cfg.param_dtype
+    if cfg.n_experts and cfg.moe_every > 1:
+        G = _n_groups(cfg)
+        blocks = {"moe": _block_shapes(cfg, (G,), moe=True),
+                  "dense": _block_shapes(cfg, (G, cfg.moe_every - 1), moe=False)}
+    else:
+        blocks = _block_shapes(cfg, (L,), moe=bool(cfg.n_experts))
+    return {
+        "embed": sds((V, d), pd),
+        "blocks": blocks,
+        "ln_f": sds((d,), pd),
+        "head": sds((V, d), pd),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    params = init_from_shapes(param_shapes(cfg), key, scale=0.02)
+
+    def fix_norms(b):
+        b["ln1"] = jnp.ones_like(b["ln1"])
+        b["ln2"] = jnp.ones_like(b["ln2"])
+        if cfg.family == "mla":
+            b["attn"]["q_ln"] = jnp.ones_like(b["attn"]["q_ln"])
+            b["attn"]["kv_ln"] = jnp.ones_like(b["attn"]["kv_ln"])
+
+    if cfg.n_experts and cfg.moe_every > 1:
+        fix_norms(params["blocks"]["moe"])
+        fix_norms(params["blocks"]["dense"])
+    else:
+        fix_norms(params["blocks"])
+    params["ln_f"] = jnp.ones_like(params["ln_f"])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN (token-choice top-k, capacity dispatch, seq-chunked)
+# ---------------------------------------------------------------------------
+def moe_capacity(cfg: ArchConfig, chunk: int) -> int:
+    return max(4, int(np.ceil(chunk * cfg.top_k * cfg.capacity_factor / cfg.n_experts)))
+
+
+def moe_chunk_size(cfg: ArchConfig, s: int) -> int:
+    """Bound the dispatch tensor: chunk*k slots <= 1024."""
+    c = min(cfg.moe_chunk, max(1, 1024 // max(cfg.top_k, 1)))
+    c = min(c, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def moe_ffn(cfg: ArchConfig, p: Dict[str, Any], x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) -> (y (B,S,d), aux load-balance loss). Experts sharded on 'model'."""
+    b, s, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    chunk = moe_chunk_size(cfg, s)
+    C = moe_capacity(cfg, chunk)
+    n = s // chunk
+    xs = x.reshape(b, n, chunk, d).swapaxes(0, 1)              # (n,b,c,d)
+
+    def step(aux, xi):
+        logits = jnp.einsum("bcd,de->bce", xi, p["router"].astype(xi.dtype))
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gates, idx = jax.lax.top_k(probs, k)                    # (b,c,k)
+        gates = (gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)).astype(xi.dtype)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)        # (b,c,k,E)
+        flat = onehot.reshape(b, chunk * k, E)
+        pos_in_e = jnp.cumsum(flat, axis=1) - flat              # (b,t,E)
+        slot = jnp.sum(pos_in_e * flat, axis=-1)                # (b,t)
+        keep = (slot < C) & (flat.sum(-1) > 0)
+        disp = (jax.nn.one_hot(slot, C, dtype=xi.dtype)
+                * keep[..., None].astype(xi.dtype))             # (b,t,C)
+        disp = jnp.einsum("btc,bte->btec", disp, flat.astype(xi.dtype))  # (b,t,E,C)
+        xslots = jnp.repeat(xi, k, axis=1)                      # (b,t,d)
+        x_e = jnp.einsum("btec,btd->becd", disp, xslots)        # (b,E,C,d)
+        g = jnp.einsum("becd,edf->becf", x_e, p["wg"].astype(xi.dtype))
+        u = jnp.einsum("becd,edf->becf", x_e, p["wu"].astype(xi.dtype))
+        y_e = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u,
+                         p["wd"].astype(xi.dtype))              # (b,E,C,d)
+        gate_slot = gates.reshape(b, chunk * k)
+        comb = disp * gate_slot[..., None, None]
+        y = jnp.einsum("btec,becd->btd", comb, y_e)             # (b,t,d)
+        y = y.reshape(b, chunk, k, d).sum(2)
+        # Switch-style load-balance aux
+        f_e = jnp.mean(onehot.sum(2).astype(jnp.float32), axis=(0, 1))   # (E,)
+        p_e = jnp.mean(probs, axis=(0, 1))
+        aux = aux + E * jnp.sum(f_e * p_e)
+        return aux, y
+
+    aux, ys = jax.lax.scan(step, jnp.zeros((), jnp.float32), xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, d)
+    if "wg_s" in p:                                             # shared expert(s)
+        y = y + swiglu(x, p["wg_s"], p["wu_s"], p["wd_s"])
+    return y, aux / n
+
+
+def _mlp(cfg: ArchConfig, p_mlp, x):
+    if "router" in p_mlp:
+        return moe_ffn(cfg, p_mlp, x)
+    return swiglu(x, p_mlp["wg"], p_mlp["wu"], p_mlp["wd"]), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def _gqa_qkv(cfg: ArchConfig, p, h, pos, pos3):
+    b, s, d = h.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = jnp.einsum("bsd,dx->bsx", h, p["wq"].astype(h.dtype)).reshape(b, s, H, Dh)
+    kk = jnp.einsum("bsd,dx->bsx", h, p["wk"].astype(h.dtype)).reshape(b, s, Hkv, Dh)
+    vv = jnp.einsum("bsd,dx->bsx", h, p["wv"].astype(h.dtype)).reshape(b, s, Hkv, Dh)
+    q, kk, vv = (t.transpose(0, 2, 1, 3) for t in (q, kk, vv))   # (B,H,S,D)
+    if cfg.family == "vlm" and pos3 is not None:
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        kk = apply_mrope(kk, pos3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        kk = apply_rope(kk, pos[:, None], cfg.rope_theta)
+    return q, kk, vv
+
+
+def _mla_q(cfg, p, h, pos):
+    b, s, _ = h.shape
+    H = cfg.n_heads
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", h, p["wq_a"].astype(h.dtype)),
+                  p["q_ln"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rx->bsx", cq, p["wq_b"].astype(h.dtype))
+    q = q.reshape(b, s, H, nope + rope).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg, p, h, pos):
+    ckv_r = jnp.einsum("bsd,dr->bsr", h, p["wkv_a"].astype(h.dtype))
+    ckv = rms_norm(ckv_r[..., :cfg.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_rope = ckv_r[..., cfg.kv_lora_rank:]                       # (B,S,rope)
+    k_rope = apply_rope(k_rope[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    return ckv, k_rope
+
+
+def block_forward(cfg: ArchConfig, p, x, pos, pos3=None, causal=True):
+    """Full-sequence block (train/prefill). Returns (x, aux, cache_kv)."""
+    b, s, d = x.shape
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.family == "mla":
+        nope, rope, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        H = cfg.n_heads
+        q_nope, q_rope = _mla_q(cfg, p["attn"], h, pos)
+        ckv, k_rope = _mla_latent(cfg, p["attn"], h, pos)
+        kv = jnp.einsum("bsr,rx->bsx", ckv, p["attn"]["wkv_b"].astype(h.dtype))
+        kv = kv.reshape(b, s, H, nope + vdim).transpose(0, 2, 1, 3)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        k = jnp.concatenate([k_nope,
+                             jnp.broadcast_to(k_rope[:, None], (b, H, s, rope))], -1)
+        o = attn.flash_mha(q, k, v, causal=causal)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, H * vdim)
+        cache = (ckv, k_rope)
+    else:
+        q, k, v = _gqa_qkv(cfg, p["attn"], h, pos, pos3)
+        o = attn.flash_mha(q, k, v, causal=causal)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        cache = (k.transpose(0, 2, 1, 3).reshape(b, s, -1),
+                 v.transpose(0, 2, 1, 3).reshape(b, s, -1))
+    x = x + jnp.einsum("bsx,xd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux = _mlp(cfg, p["mlp"], h2)
+    return x + y, jnp.asarray(aux, jnp.float32), cache
+
+
+def block_decode(cfg: ArchConfig, p, x, pos, cache, pos3=None):
+    """One-token block. cache: family-specific per-layer tensors."""
+    b, _, d = x.shape
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.family == "mla":
+        nope, rope, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        H, rank = cfg.n_heads, cfg.kv_lora_rank
+        q_nope, q_rope = _mla_q(cfg, p["attn"], h, posv)         # (B,H,1,*)
+        ckv_new, kr_new = _mla_latent(cfg, p["attn"], h, posv)   # (B,1,rank),(B,1,rope)
+        ckv_c, kr_c = cache
+        ckv_c = jax.lax.dynamic_update_slice(ckv_c, ckv_new.astype(ckv_c.dtype),
+                                             (0, pos, 0))
+        kr_c = jax.lax.dynamic_update_slice(kr_c, kr_new.astype(kr_c.dtype),
+                                            (0, pos, 0))
+        wkv_b = p["attn"]["wkv_b"].reshape(rank, H, nope + vdim)
+        w_k, w_v = wkv_b[..., :nope], wkv_b[..., nope:]
+        # absorbed decode: score via latent space
+        q_abs = jnp.einsum("bhod,rhd->bhor", q_nope, w_k.astype(h.dtype))
+        s_lat = jnp.einsum("bhor,bsr->bhos", q_abs, ckv_c.astype(h.dtype))
+        s_rope = jnp.einsum("bhod,bsd->bhos", q_rope, kr_c.astype(h.dtype))
+        s = (s_lat + s_rope).astype(jnp.float32) * ((nope + rope) ** -0.5)
+        idx = jnp.arange(ckv_c.shape[1])[None, None, None, :]
+        s = jnp.where(idx <= pos, s, -1e30)
+        pattn = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhos,bsr->bhor", pattn.astype(h.dtype), ckv_c.astype(h.dtype))
+        o = jnp.einsum("bhor,rhv->bhov", o_lat, w_v.astype(h.dtype))
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, H * vdim)
+        new_cache = (ckv_c, kr_c)
+    else:
+        H, Hkv, Dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+        if cfg.family == "vlm" and pos3 is not None:
+            q, k_new, v_new = _gqa_qkv(cfg, p["attn"], h, posv, pos3)
+        else:
+            q, k_new, v_new = _gqa_qkv(cfg, p["attn"], h, posv, None)
+        k_c, v_c = cache                                         # (B,Hkv,Smax,Dh)
+        mesh = attn.use_sp_decode(b, Hkv, k_c.shape[2])
+        if mesh is not None:
+            # sequence-sharded cache: fused local write + distributed
+            # flash-decode (see attention.decode_attn_sp)
+            o, k_c, v_c = attn.decode_attn_sp(q, k_c, v_c, pos, mesh,
+                                              k_new=k_new, v_new=v_new)
+        else:
+            k_c = attn.update_cache(k_c, k_new, pos)
+            v_c = attn.update_cache(v_c, v_new, pos)
+            o = attn.decode_attn(q, k_c, v_c, pos)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, H * Dh)
+        new_cache = (k_c, v_c)
+    x = x + jnp.einsum("bsx,xd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, _ = _mlp(cfg, p["mlp"], h2)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model-level: forward / loss / prefill / decode
+# ---------------------------------------------------------------------------
+def _interleaved(cfg: ArchConfig) -> bool:
+    return bool(cfg.n_experts) and cfg.moe_every > 1
+
+
+def _scan_blocks(cfg: ArchConfig, params, x, pos, pos3, causal=True,
+                 collect_cache=False):
+    blocks = params["blocks"]
+
+    if _interleaved(cfg):
+        def body(carry, p_g):
+            xc, aux = carry
+            xc = act_shard(xc, enabled=cfg.seq_parallel)
+            d_caches = []
+            for j in range(cfg.moe_every - 1):
+                p_l = jax.tree.map(lambda a: a[j], p_g["dense"])
+                xc, a, cache = block_forward(cfg, p_l, xc, pos, pos3, causal)
+                aux = aux + a
+                d_caches.append(cache)
+            xc, a, m_cache = block_forward(cfg, p_g["moe"], xc, pos, pos3, causal)
+            aux = aux + a
+            ys = 0
+            if collect_cache:
+                dk = jnp.stack([c[0] for c in d_caches])
+                dv = jnp.stack([c[1] for c in d_caches])
+                ys = (dk, dv, m_cache[0], m_cache[1])
+            return (xc, aux), ys
+    else:
+        def body(carry, p_l):
+            xc, aux = carry
+            xc = act_shard(xc, enabled=cfg.seq_parallel)
+            xo, a, cache = block_forward(cfg, p_l, xc, pos, pos3, causal)
+            return (xo, aux + a), (cache if collect_cache else 0)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), caches = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                    blocks)
+    return x, aux, caches
+
+
+def forward(cfg: ArchConfig, params, batch, causal=True):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    pos = batch.get("positions", jnp.broadcast_to(jnp.arange(s)[None], (b, s)))
+    pos3 = batch.get("pos3")
+    x, aux, _ = _scan_blocks(cfg, params, x, pos, pos3, causal)
+    return rms_norm(x, params["ln_f"], cfg.norm_eps), aux
+
+
+def loss(cfg: ArchConfig, params, batch):
+    x, aux = forward(cfg, params, batch)
+    ce = xent_loss(x, params["head"], batch["labels"], cfg.loss_chunk)
+    metrics = {"ce": ce, "aux": aux}
+    return ce + 0.01 * aux, metrics
+
+
+def _split_heads(cfg, kv_flat, b, s):
+    Hkv, Dh = cfg.n_kv, cfg.head_dim
+    lead = kv_flat.shape[:-3]
+    return kv_flat.reshape(lead + (b, s, Hkv, Dh)).swapaxes(-2, -3)
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    pos = batch.get("positions", jnp.broadcast_to(jnp.arange(s)[None], (b, s)))
+    pos3 = batch.get("pos3")
+    x, _, caches = _scan_blocks(cfg, params, x, pos, pos3, causal=True,
+                                collect_cache=True)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["head"].astype(x.dtype))
+    if _interleaved(cfg):
+        dk, dv, mk, mv = caches
+        cache = {"dk": _split_heads(cfg, dk, b, s), "dv": _split_heads(cfg, dv, b, s),
+                 "mk": _split_heads(cfg, mk, b, s), "mv": _split_heads(cfg, mv, b, s)}
+    elif cfg.family == "mla":
+        ckv, kr = caches                      # (L,B,S,rank), (L,B,S,rope)
+        cache = {"ckv": ckv, "kr": kr}
+    else:
+        k, v = caches                         # (L,B,S,Hkv*Dh)
+        cache = {"k": _split_heads(cfg, k, b, s), "v": _split_heads(cfg, v, b, s)}
+    return logits.astype(jnp.float32), cache
+
+
+def init_cache(cfg: ArchConfig, b: int, max_len: int, as_shapes: bool = False):
+    L = cfg.n_layers
+    ct = cfg.compute_dtype
+    Hkv, Dh = cfg.n_kv, cfg.head_dim
+    if _interleaved(cfg):
+        G, me = _n_groups(cfg), cfg.moe_every
+        shapes = {"dk": sds((G, me - 1, b, Hkv, max_len, Dh), ct),
+                  "dv": sds((G, me - 1, b, Hkv, max_len, Dh), ct),
+                  "mk": sds((G, b, Hkv, max_len, Dh), ct),
+                  "mv": sds((G, b, Hkv, max_len, Dh), ct)}
+    elif cfg.family == "mla":
+        shapes = {"ckv": sds((L, b, max_len, cfg.kv_lora_rank), ct),
+                  "kr": sds((L, b, max_len, cfg.qk_rope_dim), ct)}
+    else:
+        shapes = {"k": sds((L, b, Hkv, max_len, Dh), ct),
+                  "v": sds((L, b, Hkv, max_len, Dh), ct)}
+    if as_shapes:
+        return shapes
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def decode_step(cfg: ArchConfig, params, cache, batch, pos):
+    """batch["tokens"]: (B,1); pos: scalar int32. Returns (logits (B,V), cache)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    pos3 = batch.get("pos3")
+    blocks = params["blocks"]
+    if _interleaved(cfg):
+        xs = (blocks, cache["dk"], cache["dv"], cache["mk"], cache["mv"])
+
+        def body(xc, inp):
+            p_g, dk, dv, mk, mv = inp
+            dk2, dv2 = [], []
+            for j in range(cfg.moe_every - 1):
+                p_l = jax.tree.map(lambda a: a[j], p_g["dense"])
+                xc, (k2, v2) = block_decode(cfg, p_l, xc, pos, (dk[j], dv[j]), pos3)
+                dk2.append(k2)
+                dv2.append(v2)
+            xc, (mk2, mv2) = block_decode(cfg, p_g["moe"], xc, pos, (mk, mv), pos3)
+            return xc, (jnp.stack(dk2), jnp.stack(dv2), mk2, mv2)
+
+        x, (dk, dv, mk, mv) = jax.lax.scan(body, x, xs)
+        new_cache = {"dk": dk, "dv": dv, "mk": mk, "mv": mv}
+    elif cfg.family == "mla":
+        xs = (blocks, cache["ckv"], cache["kr"])
+
+        def body(xc, p_c):
+            p_l, ckv_l, kr_l = p_c
+            xo, (ckv2, kr2) = block_decode(cfg, p_l, xc, pos, (ckv_l, kr_l), pos3)
+            return xo, (ckv2, kr2)
+
+        x, (ckv, kr) = jax.lax.scan(body, x, xs)
+        new_cache = {"ckv": ckv, "kr": kr}
+    else:
+        xs = (blocks, cache["k"], cache["v"])
+
+        def body(xc, p_c):
+            p_l, k_l, v_l = p_c
+            xo, (k2, v2) = block_decode(cfg, p_l, xc, pos, (k_l, v_l), pos3)
+            return xo, (k2, v2)
+
+        x, (k, v) = jax.lax.scan(body, x, xs)
+        new_cache = {"k": k, "v": v}
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["head"].astype(x.dtype))
+    return logits.astype(jnp.float32), new_cache

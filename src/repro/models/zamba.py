@@ -1,0 +1,190 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block (arXiv:2411.15242).
+
+``cfg.n_layers`` Mamba2 layers; after every ``cfg.attn_every`` of them, a single
+*shared* transformer block (same weights each invocation — Zamba's parameter-
+efficiency trick, and a natural fit for a command-stream engine that re-invokes
+one CONV unit across layers, cf. DESIGN.md §4).  Each invocation has its own KV
+cache segment (same weights, different activations).
+
+Simplifications vs the released model (documented in DESIGN.md): plain residual
+instead of input-concat re-projection, no per-invocation LoRA on the shared
+block.  Shapes and compute/memory scaling match the assigned config.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import ssm
+from repro.models.common import (ArchConfig, act_shard, apply_rope,
+                                 init_from_shapes, rms_norm, sds, swiglu,
+                                 xent_loss)
+
+
+def n_attn_calls(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def param_shapes(cfg: ArchConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.vocab
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    pd = cfg.param_dtype
+    return {
+        "embed": sds((V, d), pd),
+        "mamba": ssm.ssm_param_shapes(cfg, cfg.n_layers),
+        "shared_attn": {
+            "ln1": sds((d,), pd), "ln2": sds((d,), pd),
+            "wq": sds((d, H * Dh), pd), "wk": sds((d, Hkv * Dh), pd),
+            "wv": sds((d, Hkv * Dh), pd), "wo": sds((H * Dh, d), pd),
+            "wg": sds((d, cfg.d_ff), pd), "wu": sds((d, cfg.d_ff), pd),
+            "wd": sds((cfg.d_ff, d), pd),
+        },
+        "ln_f": sds((d,), pd),
+        "head": sds((V, d), pd),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    p = init_from_shapes(param_shapes(cfg), key)
+    p["mamba"]["ln"] = jnp.ones_like(p["mamba"]["ln"])
+    p["mamba"]["norm"] = jnp.ones_like(p["mamba"]["norm"])
+    p["mamba"]["dt_bias"] = jnp.full_like(p["mamba"]["dt_bias"], 0.5)
+    p["mamba"]["A_log"] = jnp.zeros_like(p["mamba"]["A_log"])
+    p["mamba"]["D"] = jnp.ones_like(p["mamba"]["D"])
+    p["shared_attn"]["ln1"] = jnp.ones_like(p["shared_attn"]["ln1"])
+    p["shared_attn"]["ln2"] = jnp.ones_like(p["shared_attn"]["ln2"])
+    p["ln_f"] = jnp.ones_like(p["ln_f"])
+    return p
+
+
+def _shared_attn_forward(cfg, p, x, pos, cache=None, pos_scalar=None):
+    """Shared transformer block; full-seq (cache=None) or decode (cache given)."""
+    b = x.shape[0]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    s = h.shape[1]
+    q = jnp.einsum("bsd,dx->bsx", h, p["wq"].astype(h.dtype)).reshape(b, s, H, Dh)
+    k = jnp.einsum("bsd,dx->bsx", h, p["wk"].astype(h.dtype)).reshape(b, s, Hkv, Dh)
+    v = jnp.einsum("bsd,dx->bsx", h, p["wv"].astype(h.dtype)).reshape(b, s, Hkv, Dh)
+    q, k, v = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    if cache is None:
+        o = attn_lib.flash_mha(q, k, v, causal=True)
+        new_cache = (k, v)
+    else:
+        k_c, v_c = cache
+        k_c = attn_lib.update_cache(k_c, k, pos_scalar)
+        v_c = attn_lib.update_cache(v_c, v, pos_scalar)
+        o = attn_lib.decode_attn(q, k_c, v_c, pos_scalar)
+        new_cache = (k_c, v_c)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, H * Dh)
+    x = x + jnp.einsum("bsx,xd->bsd", o, p["wo"].astype(x.dtype))
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + swiglu(h2, p["wg"], p["wu"], p["wd"])
+    return x, new_cache
+
+
+def _layer_param(params, i):
+    return jax.tree.map(lambda a: a[i], params["mamba"])
+
+
+def _backbone(cfg, params, x, pos, caches=None, pos_scalar=None,
+              collect_cache=False):
+    """Interleave mamba layers with shared-attn invocations (python loop: the
+    layer pattern is heterogeneous; n_layers is small enough to unroll)."""
+    kv_out = []
+    states_out = []
+    a_idx = 0
+    for i in range(cfg.n_layers):
+        x = act_shard(x, enabled=cfg.seq_parallel)
+        if caches is None:
+            if collect_cache:
+                x, st = ssm.mamba_block_forward(cfg, _layer_param(params, i), x,
+                                                return_state=True)
+                states_out.append(st)
+            else:
+                x = ssm.mamba_block_forward(cfg, _layer_param(params, i), x)
+        else:
+            conv_st = caches["conv"][i]
+            ssm_st = caches["ssm"][i]
+            x, (conv2, ssm2) = ssm.mamba_block_decode(
+                cfg, _layer_param(params, i), x, conv_st, ssm_st)
+            states_out.append((conv2, ssm2))
+        if (i + 1) % cfg.attn_every == 0:
+            if caches is None:
+                x, kv = _shared_attn_forward(cfg, params["shared_attn"], x, pos)
+                kv_out.append(kv)
+            else:
+                kv = (caches["k"][a_idx], caches["v"][a_idx])
+                x, kv2 = _shared_attn_forward(cfg, params["shared_attn"], x, pos,
+                                              kv, pos_scalar)
+                kv_out.append(kv2)
+            a_idx += 1
+    return x, kv_out, states_out
+
+
+def loss(cfg: ArchConfig, params, batch):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x, _, _ = _backbone(cfg, params, x, pos)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    ce = xent_loss(x, params["head"], batch["labels"], cfg.loss_chunk)
+    return ce, {"ce": ce}
+
+
+def init_cache(cfg: ArchConfig, b: int, max_len: int, as_shapes: bool = False):
+    Hkv, Dh = cfg.n_kv, cfg.head_dim
+    A = n_attn_calls(cfg)
+    L = cfg.n_layers
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    ct = cfg.compute_dtype
+    shapes = {
+        "k": sds((A, b, Hkv, max_len, Dh), ct),
+        "v": sds((A, b, Hkv, max_len, Dh), ct),
+        "conv": sds((L, b, cfg.ssm_conv - 1, conv_dim), ct),
+        "ssm": sds((L, b, cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+    }
+    if as_shapes:
+        return shapes
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), shapes)
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x, kvs, states = _backbone(cfg, params, x, pos, collect_cache=True)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["head"].astype(x.dtype))
+    cache = {
+        "k": jnp.stack([kv[0] for kv in kvs]),
+        "v": jnp.stack([kv[1] for kv in kvs]),
+        "conv": jnp.stack([st[0] for st in states]).astype(cfg.compute_dtype),
+        "ssm": jnp.stack([st[1] for st in states]).astype(jnp.float32),
+    }
+    return logits.astype(jnp.float32), cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, batch, pos):
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    x, kvs, states = _backbone(cfg, params, x, posv, caches=cache, pos_scalar=pos)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["head"].astype(x.dtype))
+    new_cache = {
+        "k": jnp.stack([kv[0] for kv in kvs]),
+        "v": jnp.stack([kv[1] for kv in kvs]),
+        "conv": jnp.stack([st[0] for st in states]),
+        "ssm": jnp.stack([st[1] for st in states]),
+    }
+    return logits.astype(jnp.float32), new_cache

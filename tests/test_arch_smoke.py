@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests: reduced config, one train + prefill + decode
+step on CPU; asserts output shapes and finiteness (no NaNs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import BatchSpec, make_batch
+from repro.models import registry
+
+SMOKE_SPEC = BatchSpec(seq_len=32, global_batch=2, kind="train")
+
+
+@pytest.fixture(scope="module", params=configs.ALL_ARCH_IDS)
+def arch(request):
+    cfg = configs.get_config(request.param, smoke=True)
+    model = registry.get(cfg.family)
+    params = model.init_params(cfg, jax.random.key(0))
+    return cfg, model, params
+
+
+class TestSmoke:
+    def test_train_step(self, arch):
+        cfg, model, params = arch
+        batch = {k: jnp.asarray(v) for k, v in
+                 make_batch(cfg, SMOKE_SPEC).items()}
+
+        def loss_fn(p):
+            l, m = model.loss(cfg, p, batch)
+            return l
+
+        loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+        assert np.isfinite(float(loss)), cfg.name
+        # loss should be near ln(V) for random params/labels
+        assert 0.2 * np.log(cfg.vocab) < float(loss) < 3.0 * np.log(cfg.vocab) + 2
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        assert np.isfinite(float(gnorm)) and float(gnorm) > 0, cfg.name
+
+    def test_prefill_and_decode(self, arch):
+        cfg, model, params = arch
+        spec = BatchSpec(seq_len=32, global_batch=2, kind="prefill")
+        batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, spec).items()}
+        logits, cache = jax.jit(
+            lambda p, b: model.prefill(cfg, p, b))(params, batch)
+        assert logits.shape == (2, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all(), cfg.name
+
+        # decode one token continuing from a *fresh max-length cache*: the
+        # serving path writes prefill results into the static arena; here we
+        # only verify the decode step math is finite and shape-correct.
+        max_len = 64
+        cache = model.init_cache(cfg, 2, max_len)
+        tok = {"tokens": jnp.asarray([[1], [2]], jnp.int32)}
+        if cfg.family == "vlm":
+            tok["pos3"] = jnp.zeros((3, 2, 1), jnp.int32)
+        step_logits, cache2 = jax.jit(
+            lambda p, c, t: model.decode_step(cfg, p, c, t, jnp.asarray(0)))(
+            params, cache, tok)
+        assert step_logits.shape == (2, cfg.vocab)
+        assert np.isfinite(np.asarray(step_logits)).all(), cfg.name
+        assert jax.tree.structure(cache2) == jax.tree.structure(cache)
+
+    def test_decode_matches_prefill(self, arch):
+        """Token-by-token decode == full prefill on the same short sequence."""
+        cfg, model, params = arch
+        if cfg.family == "encdec":
+            pytest.skip("enc-dec equivalence covered in test_whisper_equiv")
+        s = 8
+        toks = np.random.default_rng(0).integers(1, cfg.vocab, (1, s), np.int32)
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.family == "vlm":
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (1, s))
+            batch["pos3"] = jnp.stack([pos, pos, pos])
+        logits_pre, _ = model.prefill(cfg, params, batch)
+
+        cache = model.init_cache(cfg, 1, s)
+        logits_dec = None
+        for t in range(s):
+            tok = {"tokens": jnp.asarray(toks[:, t:t + 1])}
+            if cfg.family == "vlm":
+                p1 = jnp.full((1, 1), t, jnp.int32)
+                tok["pos3"] = jnp.stack([p1, p1, p1])
+            logits_dec, cache = model.decode_step(cfg, params, cache, tok,
+                                                  jnp.asarray(t))
+        np.testing.assert_allclose(np.asarray(logits_dec), np.asarray(logits_pre),
+                                   rtol=0.08, atol=0.08)
+
+
+def test_whisper_equiv():
+    """Whisper decode continues prefill's cache consistently."""
+    cfg = configs.get_config("whisper-tiny", smoke=True)
+    model = registry.get(cfg.family)
+    params = model.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(1)
+    frames = jnp.asarray(rng.normal(0, 1, (1, 64, cfg.d_model)), jnp.float32)
+    toks = rng.integers(1, cfg.vocab, (1, 8), np.int32)
+    logits_pre, _ = model.prefill(cfg, params,
+                                  {"frames": frames, "tokens": jnp.asarray(toks)})
+    # decode path: replay tokens one by one against growing self-KV
+    from repro.models import whisper as W
+    enc_out = W.encode(cfg, params, frames)
+    cache = model.init_cache(cfg, 1, 64 * cfg.dec_len_ratio, cross_len=64)
+    # write cross-KV from encoder output
+    import jax.numpy as jnp2
+    ck, cv = [], []
+    for i in range(cfg.n_dec_layers):
+        p_l = jax.tree.map(lambda a: a[i], params["dec"])
+        k = W._proj_heads(cfg, p_l["cross_attn"]["wk"], enc_out)
+        v = W._proj_heads(cfg, p_l["cross_attn"]["wv"], enc_out)
+        ck.append(k)
+        cv.append(v)
+    cache["cross_k"] = jnp2.stack(ck)
+    cache["cross_v"] = jnp2.stack(cv)
+    logits = None
+    for t in range(8):
+        logits, cache = model.decode_step(cfg, params, cache,
+                                          {"tokens": jnp.asarray(toks[:, t:t + 1])},
+                                          jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_pre),
+                               rtol=0.08, atol=0.08)
+
+
+def test_config_sizes():
+    """Full configs instantiate shape trees with the expected parameter counts."""
+    expected_b = {   # rough total-param sanity bands (billions)
+        "llama4-maverick-400b-a17b": (280, 480),
+        "granite-moe-3b-a800m": (2, 4.5),
+        "yi-6b": (5, 7.5),
+        "minicpm3-4b": (3, 6),
+        "llama3.2-3b": (2.5, 4.5),
+        # pool annotation says "llama-arch" => 3-matrix SwiGLU at d_ff=24576,
+        # which lands above the 34B the (2-matrix GELU) release reports
+        "granite-34b": (30, 50),
+        "whisper-tiny": (0.02, 0.08),
+        "zamba2-1.2b": (0.9, 1.9),
+        "rwkv6-7b": (6, 9),
+        "qwen2-vl-72b": (60, 85),
+    }
+    for aid in configs.ALL_ARCH_IDS:
+        cfg = configs.get_config(aid)
+        n = cfg.num_params() / 1e9
+        lo, hi = expected_b[aid]
+        assert lo <= n <= hi, f"{aid}: {n:.2f}B params out of band ({lo},{hi})"

@@ -1,0 +1,136 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracles."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import quant
+from repro.kernels.int8_gemm.ops import quantized_matmul
+from repro.kernels.int8_gemm.ref import int8_gemm_ref
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.decode_attention.ops import gqa_decode, partial_softmax
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _rand_i8(rng, shape):
+    return rng.integers(-128, 128, size=shape, dtype=np.int8)
+
+
+class TestInt8Gemm:
+    @pytest.mark.parametrize("m,k,n", [
+        (128, 128, 128),      # single tile
+        (256, 384, 128),      # multi-tile M,K
+        (128, 128, 384),      # multi-tile N
+        (100, 200, 60),       # ragged (exercises padding)
+        (1, 576, 10),         # FC-like (LeNet fc3 shape)
+    ])
+    @pytest.mark.parametrize("relu", [False, True])
+    def test_matches_oracle(self, m, k, n, relu):
+        rng = np.random.default_rng(m * 7 + n)
+        x = _rand_i8(rng, (m, k))
+        w = _rand_i8(rng, (k, n))
+        bias = rng.integers(-1000, 1000, size=(n,), dtype=np.int32)
+        words = np.array([quant.pack_scale(*quant.fixed_point(
+            float(s), k * 128 * 128)) for s in rng.uniform(1e-5, 1e-3, n)],
+            dtype=np.uint32).view(np.int32)
+        got = quantized_matmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias),
+                               jnp.asarray(words), relu=relu, use_kernel=True)
+        want = int8_gemm_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias),
+                             jnp.asarray(words), relu=relu)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_padding_is_neutral(self):
+        """Zero-padded K contributes nothing to the int32 accumulator."""
+        rng = np.random.default_rng(0)
+        x = _rand_i8(rng, (64, 100))
+        w = _rand_i8(rng, (100, 64))
+        bias = np.zeros(64, np.int32)
+        words = np.full(64, quant.pack_scale(*quant.fixed_point(1e-4, 100 * 128 * 128)),
+                        np.uint32).view(np.int32)
+        a = quantized_matmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias),
+                             jnp.asarray(words), block_m=32, block_n=32, block_k=32)
+        b = int8_gemm_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias),
+                          jnp.asarray(words))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_matches_core_refops(self):
+        """Kernel epilogue must be bit-compatible with the VP numpy semantics."""
+        from repro.core.refops import fc_int8
+        rng = np.random.default_rng(5)
+        x = _rand_i8(rng, (1, 256))
+        w = _rand_i8(rng, (256, 32))
+        bias = rng.integers(-500, 500, (32,), dtype=np.int32)
+        words = np.array([quant.pack_scale(*quant.fixed_point(1e-4, 256 * 128 * 128))] * 32,
+                         np.uint32)
+        got = quantized_matmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias),
+                               jnp.asarray(words.view(np.int32)), relu=True)
+        want = fc_int8(x.reshape(-1, 1, 1), w.T.copy(), bias, words, relu=True)
+        np.testing.assert_array_equal(np.asarray(got).reshape(-1), want.reshape(-1))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,hq,hkv,sq,skv,d", [
+        (1, 2, 2, 128, 128, 64),     # MHA single tile
+        (2, 4, 2, 256, 256, 64),     # GQA 2 groups
+        (1, 8, 1, 128, 384, 128),    # MQA, longer KV
+        (1, 2, 2, 100, 100, 64),     # ragged (padding path)
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, b, hq, hkv, sq, skv, d, causal, dtype):
+        if causal and sq != skv:
+            pytest.skip("causal requires aligned q/kv ends in this harness")
+        rng = np.random.default_rng(b * 11 + sq)
+        q = jnp.asarray(rng.normal(0, 1, (b, hq, sq, d)), dtype)
+        k = jnp.asarray(rng.normal(0, 1, (b, hkv, skv, d)), dtype)
+        v = jnp.asarray(rng.normal(0, 1, (b, hkv, skv, d)), dtype)
+        got = mha(q, k, v, causal=causal, use_kernel=True, block_q=64, block_k=64)
+        want = mha(q, k, v, causal=causal, use_kernel=False)
+        rtol, atol = (2e-2, 2e-2) if dtype == jnp.bfloat16 else (1e-5, 1e-5)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), rtol=rtol, atol=atol)
+
+    def test_causal_first_row_attends_self_only(self):
+        rng = np.random.default_rng(3)
+        q = jnp.asarray(rng.normal(0, 1, (1, 1, 128, 64)), jnp.float32)
+        k = jnp.asarray(rng.normal(0, 1, (1, 1, 128, 64)), jnp.float32)
+        v = jnp.asarray(rng.normal(0, 1, (1, 1, 128, 64)), jnp.float32)
+        out = mha(q, k, v, causal=True, use_kernel=True, block_q=64, block_k=64)
+        np.testing.assert_allclose(np.asarray(out)[0, 0, 0], np.asarray(v)[0, 0, 0],
+                                   rtol=1e-5)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,hq,hkv,s,d", [
+        (1, 2, 2, 512, 64),
+        (2, 8, 2, 1024, 64),      # GQA
+        (1, 4, 1, 512, 128),      # MQA
+        (2, 2, 2, 300, 64),       # ragged KV (padding path)
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, b, hq, hkv, s, d, dtype):
+        rng = np.random.default_rng(s + d)
+        q = jnp.asarray(rng.normal(0, 1, (b, hq, 1, d)), dtype)
+        k = jnp.asarray(rng.normal(0, 1, (b, hkv, s, d)), dtype)
+        v = jnp.asarray(rng.normal(0, 1, (b, hkv, s, d)), dtype)
+        got = gqa_decode(q, k, v, use_kernel=True, block_k=256)
+        want = gqa_decode(q, k, v, use_kernel=False)
+        rtol, atol = (2e-2, 2e-2) if dtype == jnp.bfloat16 else (1e-5, 1e-5)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), rtol=rtol, atol=atol)
+
+    def test_partial_softmax_combine(self):
+        """Two-shard (m,l,acc) merge == full attention (distributed decode tier)."""
+        rng = np.random.default_rng(17)
+        q = jnp.asarray(rng.normal(0, 1, (4, 1, 64)), jnp.float32)
+        k = jnp.asarray(rng.normal(0, 1, (4, 512, 64)), jnp.float32)
+        v = jnp.asarray(rng.normal(0, 1, (4, 512, 64)), jnp.float32)
+        acc1, m1, l1 = partial_softmax(q, k[:, :256], v[:, :256])
+        acc2, m2, l2 = partial_softmax(q, k[:, 256:], v[:, 256:])
+        m = jnp.maximum(m1, m2)
+        w1, w2 = l1 * jnp.exp(m1 - m), l2 * jnp.exp(m2 - m)
+        out = (acc1 * w1 + acc2 * w2) / (w1 + w2)
+        want = decode_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,138 @@
+"""End-to-end behaviour tests for the paper's system (toolflow -> executors)."""
+
+import numpy as np
+import pytest
+
+from repro.core import api, engine, graph, memory, tracegen
+from repro.core.vp import VirtualPlatform
+
+
+def _mini_resnet() -> graph.NetGraph:
+    """Small residual net exercising CONV/PDP/EW paths quickly."""
+    g = graph.NetGraph("mini_resnet", (3, 16, 16))
+    g.layer(name="data", type="input", inputs=[])
+    x = g.layer(name="stem", type="conv", inputs=["data"], out_channels=8,
+                kernel=3, stride=1, pad=1, relu=True)
+    c1 = g.layer(name="b_c1", type="conv", inputs=[x], out_channels=8,
+                 kernel=3, stride=1, pad=1, relu=True)
+    c2 = g.layer(name="b_c2", type="conv", inputs=[c1], out_channels=8,
+                 kernel=3, stride=1, pad=1)
+    x = g.layer(name="b_add", type="add", inputs=[c2, x], relu=True)
+    x = g.layer(name="pool", type="pool", inputs=[x], kernel=2, stride=2, pool_mode="max")
+    x = g.layer(name="gap", type="pool", inputs=[x], pool_mode="gap")
+    g.layer(name="fc", type="fc", inputs=[x], out_channels=4)
+    return g.infer_shapes()
+
+
+def _mini_inception() -> graph.NetGraph:
+    """Small concat net exercising the free-concat address planning."""
+    g = graph.NetGraph("mini_incep", (3, 8, 8))
+    g.layer(name="data", type="input", inputs=[])
+    x = g.layer(name="stem", type="conv", inputs=["data"], out_channels=8,
+                kernel=3, pad=1, relu=True)
+    b1 = g.layer(name="b1", type="conv", inputs=[x], out_channels=4, kernel=1, relu=True)
+    b2 = g.layer(name="b2", type="conv", inputs=[x], out_channels=6, kernel=3,
+                 pad=1, relu=True)
+    cat = g.layer(name="cat", type="concat", inputs=[b1, b2])
+    x = g.layer(name="post", type="conv", inputs=[cat], out_channels=8, kernel=1, relu=True)
+    x = g.layer(name="gap", type="pool", inputs=[x], pool_mode="gap")
+    g.layer(name="fc", type="fc", inputs=[x], out_channels=3)
+    return g.infer_shapes()
+
+
+@pytest.fixture(scope="module")
+def lenet_art():
+    return api.compile_network(graph.lenet5())
+
+
+class TestToolflow:
+    def test_artifacts_complete(self, lenet_art):
+        rep = lenet_art.storage_report()
+        assert rep["config_file_bytes"] > 0
+        assert rep["program_binary_bytes"] > 0
+        assert rep["weight_image_bytes"] >= graph.lenet5().num_params()
+        # one OP_ENABLE + one STATUS poll per engine op
+        assert rep["n_read_reg"] == len(lenet_art.loadable.descriptors)
+
+    def test_trace_decodes_to_descriptors(self, lenet_art):
+        descs = engine.decode_descriptors(lenet_art.trace.commands)
+        assert len(descs) == len(lenet_art.loadable.descriptors)
+        for got, want in zip(descs, lenet_art.loadable.descriptors):
+            assert got.unit == want.unit
+            assert got.src_addr == want.src_addr
+            assert got.dst_addr == want.dst_addr
+            assert got.kernel == want.kernel
+
+    def test_cycle_model_magnitude(self, lenet_art):
+        # paper Table II: LeNet-5 = 4.8 ms @ 100 MHz on nv_small
+        assert 1.0 < lenet_art.cost.ms_at_clock < 20.0
+
+
+class TestExecutors:
+    @pytest.mark.parametrize("builder", [graph.lenet5, _mini_resnet, _mini_inception])
+    def test_bitexact_vp_baremetal_linux(self, builder):
+        g = builder()
+        art = api.compile_network(g)
+        x = np.random.default_rng(7).normal(0, 1, g.input_shape).astype(np.float32)
+        vp = VirtualPlatform(art.loadable).run(x)
+        bm = api.make_executor(art, "baremetal").run(x)
+        ls = api.make_executor(art, "linuxstack").run(x)
+        np.testing.assert_array_equal(bm.output_int8, vp.output_int8)
+        np.testing.assert_array_equal(ls.output_int8, vp.output_int8)
+
+    def test_int8_close_to_fp32(self, lenet_art):
+        g = graph.lenet5()
+        params = g.init_params(0)
+        x = np.random.default_rng(7).normal(0, 1, g.input_shape).astype(np.float32)
+        bm = api.make_executor(lenet_art, "baremetal").run(x)
+        ref = _fp32_forward(g, params, x)
+        rel = np.abs(ref - bm.output).max() / (np.abs(ref).max() + 1e-9)
+        assert rel < 0.12
+        assert ref.argmax() == bm.output.argmax()
+
+    def test_executor_is_repeatable(self, lenet_art):
+        x = np.random.default_rng(9).normal(0, 1, (1, 28, 28)).astype(np.float32)
+        ex = api.make_executor(lenet_art, "baremetal")
+        a, b = ex.run(x), ex.run(x)
+        np.testing.assert_array_equal(a.output_int8, b.output_int8)
+
+    def test_aot_compile(self, lenet_art):
+        ex = api.make_executor(lenet_art, "baremetal")
+        compiled = ex.compile()
+        assert compiled.cost_analysis() is not None
+
+
+class TestBf16Path:
+    def test_nv_full_matches_fp32(self):
+        g = _mini_resnet()
+        params = g.init_params(0)
+        art = api.compile_network(g, params, cfg=engine.NV_FULL)
+        x = np.random.default_rng(11).normal(0, 1, g.input_shape).astype(np.float32)
+        vp = VirtualPlatform(art.loadable).run(x)
+        ref = _fp32_forward(g, params, x)
+        np.testing.assert_allclose(vp.output, ref, rtol=0.1, atol=0.05)
+
+
+def _fp32_forward(g, params, x):
+    from repro.core import refops
+    from repro.core.loadable import _pool_f32
+    acts = {"data": x}
+    for l in g.layers:
+        if l.type == "conv":
+            p = params[l.name]
+            acts[l.name] = refops.conv_bf16(acts[l.inputs[0]], p["w"], p["b"],
+                                            l.kernel, l.stride, l.pad, l.groups, l.relu)
+        elif l.type == "fc":
+            p = params[l.name]
+            acts[l.name] = refops.fc_bf16(acts[l.inputs[0]], p["w"], p["b"], l.relu)
+        elif l.type == "pool":
+            if l.pool_mode == "gap":
+                acts[l.name] = acts[l.inputs[0]].mean(axis=(1, 2), keepdims=True)
+            else:
+                acts[l.name] = _pool_f32(acts[l.inputs[0]], l, l.pool_mode)
+        elif l.type == "add":
+            a = acts[l.inputs[0]] + acts[l.inputs[1]]
+            acts[l.name] = np.maximum(a, 0) if l.relu else a
+        elif l.type == "concat":
+            acts[l.name] = np.concatenate([acts[i] for i in l.inputs], axis=0)
+    return acts[g.output].reshape(-1)

@@ -1,0 +1,121 @@
+"""Trace / log-parsing / weight-extraction / assembler unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import asm, engine, memory, tracegen
+
+addr_st = st.integers(min_value=0, max_value=0xFFFF_FFFC).map(lambda a: a & ~0x3)
+data_st = st.integers(min_value=0, max_value=0xFFFF_FFFF)
+
+
+@st.composite
+def command_streams(draw):
+    n = draw(st.integers(1, 60))
+    cmds = []
+    for _ in range(n):
+        kind = draw(st.sampled_from(["write_reg", "read_reg"]))
+        if kind == "write_reg":
+            cmds.append(tracegen.Command("write_reg", draw(addr_st), draw(data_st)))
+        else:
+            cmds.append(tracegen.Command("read_reg", draw(addr_st), draw(data_st),
+                                         draw(data_st)))
+    return tracegen.Trace(cmds)
+
+
+class TestTraceRoundtrip:
+    @given(command_streams())
+    @settings(max_examples=50, deadline=None)
+    def test_text_roundtrip(self, trace):
+        assert tracegen.Trace.from_text(trace.to_text()).commands == trace.commands
+
+    @given(command_streams())
+    @settings(max_examples=25, deadline=None)
+    def test_asm_write_stream_matches(self, trace):
+        _, binary = asm.assemble(trace)
+        writes = asm.disassemble_writes(binary)
+        expected = [(c.addr, c.data) for c in trace.commands if c.kind == "write_reg"]
+        assert writes == expected
+
+    def test_text_ignores_comments_and_blanks(self):
+        t = tracegen.Trace.from_text("# hi\n\nwrite_reg 0x10 0x00000001\n")
+        assert len(t.commands) == 1
+
+
+class TestLogParsing:
+    def test_csb_log_parse(self):
+        log = ("12 ns: nvdla.csb_adaptor: iswrite=1 addr=0x00005008 data=0x00100040\n"
+               "16 ns: nvdla.csb_adaptor: iswrite=0 addr=0x00005004 data=0x00000001\n"
+               "noise line\n")
+        tr = tracegen.parse_csb(log)
+        assert tr.commands[0] == tracegen.Command("write_reg", 0x5008, 0x100040)
+        assert tr.commands[1].kind == "read_reg"
+        assert tr.commands[1].data == 1
+
+    def test_dbb_log_parse(self):
+        log = "9 ns: nvdla.dbb_adaptor: iswrite=0 addr=0x00100040 len=4 data=deadbeef\n"
+        txns = tracegen.parse_dbb(log)
+        assert txns[0].addr == 0x100040
+        assert txns[0].data == bytes.fromhex("deadbeef")
+
+
+class TestWeightExtraction:
+    def test_first_occurrence_dedup(self):
+        txns = [
+            memory.DbbTxn(0, 0x100000, b"\x01\x02"),
+            memory.DbbTxn(0, 0x100000, b"\xff\xff"),   # refetch: dropped
+            memory.DbbTxn(0, 0x100002, b"\x03\x04"),
+        ]
+        img = memory.extract_weights(txns)
+        assert img[0x100000] == b"\x01\x02"
+        assert img[0x100002] == b"\x03\x04"
+
+    def test_reads_after_write_are_activations(self):
+        txns = [
+            memory.DbbTxn(0, 0x100000, b"\x01"),   # weight fetch
+            memory.DbbTxn(1, 0x100100, b"\x09"),   # engine output
+            memory.DbbTxn(0, 0x100100, b"\x09"),   # next-layer input: NOT a weight
+        ]
+        img = memory.extract_weights(txns)
+        assert 0x100100 not in img and 0x100000 in img
+
+    @given(st.lists(st.tuples(st.integers(0, 1), st.sampled_from(range(0, 256, 8)),
+                              st.binary(min_size=1, max_size=8)), max_size=40))
+    @settings(max_examples=50, deadline=None)
+    def test_extraction_is_prefix_stable(self, raw):
+        """Extending a log never changes already-extracted entries (streaming-safe)."""
+        txns = [memory.DbbTxn(w, 0x100000 + a, d) for w, a, d in raw]
+        full = memory.extract_weights(txns)
+        half = memory.extract_weights(txns[: len(txns) // 2])
+        for addr, data in half.items():
+            assert full[addr] == data
+
+    def test_flatten_image(self):
+        img = {0x100000: b"\xaa", 0x100004: b"\xbb\xcc"}
+        buf, size = memory.flatten_image(img, 0x100000)
+        assert size == 6
+        assert buf[0] == 0xAA and buf[4] == 0xBB and buf[5] == 0xCC
+        assert buf[1] == 0
+
+
+class TestRegisterCodec:
+    def test_reg_addr_roundtrip(self):
+        for unit in engine.UNIT_BASE:
+            for reg in engine.REG:
+                assert engine.split_reg_addr(engine.reg_addr(unit, reg)) == (unit, reg)
+
+    @given(st.integers(-(2**15), 2**15 - 1), st.integers(0, 255), st.integers(0, 255))
+    @settings(max_examples=100, deadline=None)
+    def test_scale_word_roundtrip(self, m, pre, post):
+        assert engine._unpack_scale(engine._pack_scale((m, pre, post))) == (m, pre, post)
+
+    def test_descriptor_roundtrip(self):
+        d = engine.Descriptor(unit="CONV", src_addr=0x100040, src_dims=(1, 3, 28, 28),
+                              dst_addr=0x101000, dst_dims=(1, 6, 28, 28),
+                              wt_addr=0x100800, kernel=(5, 5), groups=1, stride=1,
+                              pad=2, bias_addr=0x100900, scale_addr=0x100A00,
+                              relu=True, out_scale=(312, 4, 11))
+        cmds = [tracegen.Command("write_reg", a, v) for a, v in d.to_reg_writes()]
+        got = engine.decode_descriptors(cmds)[0]
+        assert got == d
