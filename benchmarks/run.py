@@ -6,6 +6,7 @@ Tables:
   1  storage / resource accounting of the bare-metal artifacts   (paper Table I)
   2  nv_small INT8 inference latency + bare-metal vs linux-stack (paper Table II)
   3  nv_full bf16 cycle counts, six networks                     (paper Table III)
+  4  serving microbenchmarks: arena residency + batched Session  (runtime layer)
 """
 
 from __future__ import annotations
@@ -21,8 +22,10 @@ def main() -> None:
     ap.add_argument("--table", type=int, default=0, help="run one table only")
     args = ap.parse_args()
 
-    from benchmarks import table1_storage, table2_nvsmall, table3_nvfull
-    tables = {1: table1_storage, 2: table2_nvsmall, 3: table3_nvfull}
+    from benchmarks import (table1_storage, table2_nvsmall, table3_nvfull,
+                            table4_serving)
+    tables = {1: table1_storage, 2: table2_nvsmall, 3: table3_nvfull,
+              4: table4_serving}
     picked = [tables[args.table]] if args.table else list(tables.values())
 
     print("name,us_per_call,derived")

@@ -1,9 +1,10 @@
 """Table II: nv_small INT8 end-to-end inference (LeNet-5 / ResNet-18 / ResNet-50).
 
 Reproduces the paper's evaluation on the functional engine model:
-  * wall-clock per inference for the BARE-METAL executor (one fused XLA binary)
-    vs the LINUX-STACK baseline (per-op dispatch + driver tensor table) — the
-    paper's core speed claim, measured on identical op semantics,
+  * wall-clock per inference for the BARE-METAL backend (one fused XLA binary,
+    arena resident on device) vs the LINUX-STACK baseline (per-op dispatch +
+    driver tensor table) — the paper's core speed claim, measured on identical
+    op semantics,
   * modeled cycles -> ms @ 100 MHz from the calibrated engine cycle model,
     against the paper's measured numbers (LeNet 4.8 ms / ResNet-18 16.2 ms /
     ResNet-50 1.1 s) and against [8] (Linux-stack FPGA: LeNet 263 ms,
@@ -16,17 +17,19 @@ import time
 
 import numpy as np
 
-from repro.core import api, graph
+from repro.core import graph
+from repro.core.pipeline import CompilerPipeline
+from repro.runtime import Session
 
 PAPER_MS = {"lenet5": 4.8, "resnet18": 16.2, "resnet50": 1100.0}
 MODELS = ["lenet5", "resnet18", "resnet50"]
 
 
-def _time_exec(ex, x, iters):
-    ex.run(x)                                   # warmup/compile
+def _time_run(ses: Session, x, iters: int, net: str) -> float:
+    ses.run(x, net=net)                         # warmup/compile
     t0 = time.perf_counter()
     for _ in range(iters):
-        ex.run(x)
+        ses.run(x, net=net)
     return (time.perf_counter() - t0) / iters * 1e6
 
 
@@ -35,11 +38,13 @@ def run(fast: bool = False):
     models = MODELS[:2] if fast else MODELS
     for name in models:
         g = graph.BUILDERS[name]()
-        art = api.compile_network(g)
+        art = CompilerPipeline(g).run()
+        ses = Session(art, backend="baremetal", name="bm")
+        ses.load(art, name="ls", backend="linuxstack")
         x = np.random.default_rng(0).normal(0, 1, g.input_shape).astype(np.float32)
         iters = 20 if name == "lenet5" else (5 if name == "resnet18" else 2)
-        bm_us = _time_exec(api.make_executor(art, "baremetal"), x, iters)
-        ls_us = _time_exec(api.make_executor(art, "linuxstack"), x, iters)
+        bm_us = _time_run(ses, x, iters, net="bm")
+        ls_us = _time_run(ses, x, iters, net="ls")
         modeled_ms = art.cost.ms_at_clock
         rows.append({
             "name": f"table2_nvsmall/{name}",

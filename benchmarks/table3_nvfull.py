@@ -12,8 +12,7 @@ import time
 import numpy as np
 
 from repro.core import engine, graph
-from repro.core.loadable import build_loadable, calibrate
-from repro.core.perfmodel import model_cost
+from repro.core.pipeline import CompilerPipeline
 
 PAPER = {  # model -> (paper cycles, paper ms @100MHz)
     "lenet5": (143188, 1.4),
@@ -34,11 +33,13 @@ def run(fast: bool = False):
         params = g.init_params(0)
         t0 = time.perf_counter()
         rng = np.random.default_rng(1)
-        cal = calibrate(g, params,
-                        rng.normal(0, 1, (1,) + g.input_shape).astype(np.float32))
-        ld = build_loadable(g, params, cal, engine.NV_FULL)
+        pipe = CompilerPipeline(
+            g, params, rng.normal(0, 1, (1,) + g.input_shape).astype(np.float32),
+            cfg=engine.NV_FULL, use_cache=False)
+        # staged pipeline: cost_model depends only on the loadable, so the
+        # VP / trace / assembly stages never run for this table
+        mc = pipe.run_stage("cost_model")
         us = (time.perf_counter() - t0) * 1e6
-        mc = model_cost(ld.descriptors, engine.NV_FULL, ld.desc_layers)
         pc, pms = PAPER[name]
         rows.append({
             "name": f"table3_nvfull/{name}",

@@ -1,0 +1,75 @@
+"""Serving microbenchmarks: arena residency + batched execution (Session API).
+
+Two effects the runtime layer is built around, measured on LeNet-5 (nv_small,
+bare-metal backend):
+
+  * ``arena_residency`` — per-call latency with the preloaded DRAM arena kept
+    resident on device (a non-donated buffer the program reads; only the
+    input surface transfers per call) vs the old behaviour of re-materialising
+    the whole arena host->device on every ``run``.
+  * ``batched`` — ``session.run_batch`` (one vmapped XLA program per batch)
+    vs N sequential ``run`` calls; the paper's deployment serves one image at
+    a time, batching is what production-scale serving adds on top.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import graph
+from repro.core.pipeline import CompilerPipeline
+from repro.runtime import Session
+
+BATCH = 8
+
+
+def _bench(fn, iters: int) -> float:
+    fn()                                        # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(fast: bool = False):
+    g = graph.lenet5()
+    art = CompilerPipeline(g).run()
+    ses = Session(art)
+    ex = ses.executor()
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, g.input_shape).astype(np.float32)
+    X = rng.normal(0, 1, (BATCH,) + g.input_shape).astype(np.float32)
+    iters = 10 if fast else 30
+
+    # -- arena residency: steady-state vs per-call re-materialisation --------
+    steady_us = _bench(lambda: ses.run(x), iters)
+
+    def rematerialise():
+        ex.reset_arena()                        # forces host->device arena copy
+        ex.run(x)
+    cold_us = _bench(rematerialise, iters)
+
+    # -- batching: one vmapped program vs N sequential calls -----------------
+    seq_out = np.stack([ses.run(xi).output_int8 for xi in X])
+    bit_exact = bool(np.array_equal(ses.run_batch(X).output_int8, seq_out))
+    seq_us = _bench(lambda: [ses.run(xi) for xi in X], max(3, iters // 3))
+    batch_us = _bench(lambda: ses.run_batch(X), max(3, iters // 3))
+
+    return [
+        {
+            "name": "table4_serving/arena_residency",
+            "us_per_call": steady_us,
+            "derived": (f"rematerialise_us={cold_us:.0f} "
+                        f"resident_speedup={cold_us/steady_us:.2f}x "
+                        f"arena_bytes={ex.size}"),
+        },
+        {
+            "name": f"table4_serving/batched_n{BATCH}",
+            "us_per_call": batch_us / BATCH,
+            "derived": (f"sequential_us_per_img={seq_us/BATCH:.0f} "
+                        f"batch_throughput_speedup={seq_us/batch_us:.2f}x "
+                        f"bit_exact_vs_sequential={bit_exact}"),
+        },
+    ]

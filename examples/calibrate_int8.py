@@ -2,15 +2,17 @@
 
     PYTHONPATH=src python examples/calibrate_int8.py
 
-Generates the per-layer calibration table for ResNet-18 from sample batches,
-shows the JSON the NVDLA compiler expects, and quantifies the INT8 accuracy
-impact vs the fp32 reference across calibration percentiles.
+Runs the pipeline's ``calibrate`` stage for ResNet-18 on sample batches, shows
+the JSON the NVDLA compiler expects, then quantifies the INT8 accuracy impact
+vs the fp32 reference across calibration percentiles using a serving Session.
 """
 
 import numpy as np
 
-from repro.core import api, graph, quant
+from repro.core import graph
 from repro.core.loadable import calibrate
+from repro.core.pipeline import CompilerPipeline
+from repro.runtime import Session
 
 
 def main():
@@ -20,7 +22,8 @@ def main():
     samples = rng.normal(0, 1, (4,) + g.input_shape).astype(np.float32)
 
     print("== calibration table (first layers) ==")
-    cal = calibrate(g, params, samples)
+    pipe = CompilerPipeline(g, params, samples)
+    cal = pipe.run_stage("calibrate")       # staged: only calibration runs here
     text = cal.to_json()
     print("\n".join(text.splitlines()[:10]), "\n  ...")
 
@@ -28,15 +31,16 @@ def main():
     x_eval = rng.normal(0, 1, (8,) + g.input_shape).astype(np.float32)
     for pct in (100.0, 99.99, 99.9, 99.0):
         cal = calibrate(g, params, samples, percentile=pct)
-        art = api.compile_network(g, params, samples, sample_input=x_eval[0])
-        ex = api.make_executor(art, "baremetal")
+        art = CompilerPipeline(g, params, samples, sample_input=x_eval[0],
+                               calibration=cal).run()
+        ses = Session(art)
+        from tests.test_system import _fp32_forward
+        out = ses.run_batch(x_eval)         # one vmapped program for the sweep
         agree, err = 0, []
-        for x in x_eval:
-            out = ex.run(x)
-            from tests.test_system import _fp32_forward
+        for x, y in zip(x_eval, out.output):
             ref = _fp32_forward(g, params, x)
-            agree += int(ref.argmax() == out.output.argmax())
-            err.append(np.abs(ref - out.output).max() / (np.abs(ref).max() + 1e-9))
+            agree += int(ref.argmax() == y.argmax())
+            err.append(np.abs(ref - y).max() / (np.abs(ref).max() + 1e-9))
         print(f"  pct={pct:7.2f}  top1_agreement={agree}/{len(x_eval)}  "
               f"max_rel_err={np.mean(err):.4f}")
 

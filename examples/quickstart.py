@@ -1,23 +1,38 @@
-"""Quickstart: the paper's full toolflow on LeNet-5, end to end.
+"""Quickstart: the paper's toolflow as a staged pipeline + serving Session.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Steps (paper Fig. 1): Caffe-style model -> INT8 calibration -> loadable ->
+Compiler (paper Fig. 1), stage by stage: INT8 calibration -> loadable ->
 virtual-platform run (CSB/DBB logs) -> configuration file + weight image ->
-RV32I assembly -> bare-metal execution, compared against the linux-stack
-baseline and the fp32 reference.
+RV32I assembly.  The artifact bundle (the paper's three files) is saved to
+disk and served back by a Session — batched, multi-backend, and with no
+recompilation or VP re-execution.
 """
+
+import tempfile
 
 import numpy as np
 
-from repro.core import api, graph
+from repro.core import graph
+from repro.core.pipeline import Artifacts, CompilerPipeline
+from repro.runtime import Session, backend_names
+
 
 def main():
     g = graph.lenet5()
     print(f"model: {g.name}  layers={len(g.layers)}  params={g.num_params():,}  "
           f"MACs={g.macs():,}")
 
-    art = api.compile_network(g)
+    # -- compiler: run the staged pipeline, inspecting intermediates ---------
+    pipe = CompilerPipeline(g)
+    cal = pipe.run_stage("calibrate")
+    print(f"\n== stage 'calibrate' ==\n  per-layer scales: "
+          f"{ {k: round(v, 4) for k, v in list(cal.scales.items())[:4]} } ...")
+    vp = pipe.run_stage("vp_run")
+    print(f"== stage 'vp_run' ==\n  CSB writes={vp.n_csb_writes}  "
+          f"reads={vp.n_csb_reads}  DBB bytes={vp.dbb_bytes:,}")
+    art = pipe.run()
+
     rep = art.storage_report()
     print("\n== bare-metal artifacts (all the SoC needs) ==")
     print(f"  configuration file : {rep['config_file_bytes']:,} B "
@@ -30,14 +45,32 @@ def main():
     print("\n== assembly preview ==")
     print("\n".join(art.asm_text.splitlines()[:8]), "\n  ...")
 
-    x = np.random.default_rng(1).normal(0, 1, g.input_shape).astype(np.float32)
-    bm = api.make_executor(art, "baremetal").run(x)
-    ls = api.make_executor(art, "linuxstack").run(x)
+    # -- ship the bundle, serve it back --------------------------------------
+    with tempfile.TemporaryDirectory(prefix="lenet5_bundle_") as tmp:
+        bundle = art.save(tmp)
+        print(f"\n== bundle saved ==\n  {bundle}: "
+              f"{', '.join(sorted(f.name for f in bundle.iterdir()))}")
+        ses = Session.from_bundle(bundle)        # no recompile, no VP run
+        ses.load(Artifacts.load(bundle), name="lenet5-baseline",
+                 backend="linuxstack")
+    print(f"  backends registered: {', '.join(backend_names())}")
+    print(f"  resident networks  : {', '.join(ses.networks)}")
+
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 1, g.input_shape).astype(np.float32)
+    bm = ses.run(x)
+    ls = ses.run(x, net="lenet5-baseline")
     same = np.array_equal(bm.output_int8, ls.output_int8)
     print("\n== execution ==")
     print(f"  bare-metal logits : {np.round(bm.output, 3)}")
     print(f"  linux-stack match : {same} (bit-exact INT8)")
     print(f"  predicted class   : {int(bm.output.argmax())}")
+
+    X = rng.normal(0, 1, (8,) + g.input_shape).astype(np.float32)
+    batch = ses.run_batch(X)                     # one vmapped XLA program
+    seq = np.stack([ses.run(xi).output_int8 for xi in X])
+    print(f"  batch(8) vs 8 runs: bit-exact={np.array_equal(batch.output_int8, seq)}")
+    print(f"  session stats     : {ses.stats()}")
 
 
 if __name__ == "__main__":

@@ -1,61 +1,46 @@
-"""End-to-end toolflow (paper Fig. 1): Caffe-style model -> bare-metal artifacts.
+"""Core API — now two composable layers (compiler / runtime).
 
-    artifacts = compile_network(graph, params, calib_samples)
-      1. calibrate INT8 scales               (paper future work, implemented)
-      2. build Loadable                      (NVDLA-compiler stage)
-      3. run once on the Virtual Platform    (QEMU+SystemC analogue) -> logs
-      4. parse CSB log -> configuration file (trace)
-      5. parse DBB log -> weight image       (first-occurrence dedup)
-      6. assemble trace -> RV32I binary      (program memory image)
+**Compiler** (``repro.core.pipeline``): the paper's toolflow (Fig. 1) as a
+``CompilerPipeline`` of named, individually-runnable stages —
 
-    ex = BareMetalExecutor(artifacts.trace, artifacts.weight_image, ...)
-    ex.run(image)
+    calibrate -> build_loadable -> vp_run -> parse_trace -> assemble
+                                          -> extract_weights
+                 build_loadable -> cost_model
+
+    pipe = CompilerPipeline(graph)
+    cal  = pipe.run_stage("calibrate")      # any intermediate, on demand
+    art  = pipe.run()                       # full Artifacts
+    art.save("bundle/")                     # trace.cfg + weights.img + program.bin
+    art2 = Artifacts.load("bundle/")        # runnable again, no VP re-execution
+
+**Runtime** (``repro.runtime``): a ``Session`` serving one or more compiled
+networks over registered executor backends (``baremetal`` / ``linuxstack`` /
+``ref``; extensible via ``@register_backend``):
+
+    ses = Session(art)                      # arena resident on device
+    ses.run(x)                              # single image
+    ses.run_batch(X)                        # one vmapped program per batch
+
+**Migration from the old one-shot API** (both shims below still work but emit
+``DeprecationWarning``):
+
+    compile_network(g, ...)         -> CompilerPipeline(g, ...).run()
+    make_executor(art, "baremetal") -> Session(art, backend="baremetal")
+                                       (or repro.runtime.create_executor)
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional
+import warnings
+from typing import Optional
 
 import numpy as np
 
-from repro.core import asm as asm_mod
-from repro.core import engine, memory, quant, tracegen
-from repro.core.executor import BareMetalExecutor, LinuxStackExecutor
+from repro.core import engine
 from repro.core.graph import NetGraph
-from repro.core.loadable import Loadable, build_loadable, calibrate
-from repro.core.perfmodel import ModelCost, model_cost
-from repro.core.vp import VirtualPlatform
+from repro.core.pipeline import Artifacts, CompilerPipeline
 
-
-@dataclasses.dataclass
-class Artifacts:
-    """Everything the bare-metal SoC needs (and nothing else)."""
-    graph_name: str
-    cfg: engine.EngineConfig
-    trace: tracegen.Trace            # configuration file
-    trace_text: str                  # its serialised form
-    weight_image: Dict[int, bytes]   # extracted, deduped preload image
-    asm_text: str                    # RISC-V assembly
-    program_binary: bytes            # assembled program-memory image
-    input_scale: float
-    output_scale: float
-    output_elems: int
-    loadable: Loadable               # kept for tests/benchmarks (not shipped)
-    vp_output: np.ndarray            # VP reference output (float)
-    vp_output_int8: np.ndarray
-    cost: ModelCost                  # cycle model (Tables II/III)
-
-    # -- storage accounting (Table I analogue) -------------------------------
-    def storage_report(self) -> Dict[str, int]:
-        wbytes = sum(len(b) for b in self.weight_image.values())
-        return {
-            "config_file_bytes": len(self.trace_text.encode()),
-            "program_binary_bytes": len(self.program_binary),
-            "weight_image_bytes": wbytes,
-            "n_write_reg": self.trace.n_writes,
-            "n_read_reg": self.trace.n_reads,
-        }
+__all__ = ["Artifacts", "CompilerPipeline", "compile_network", "make_executor"]
 
 
 def compile_network(graph: NetGraph, params=None,
@@ -63,32 +48,21 @@ def compile_network(graph: NetGraph, params=None,
                     cfg: engine.EngineConfig = engine.NV_SMALL,
                     sample_input: Optional[np.ndarray] = None,
                     seed: int = 0) -> Artifacts:
-    params = params if params is not None else graph.init_params(seed)
-    if calib_samples is None:
-        rng = np.random.default_rng(seed + 1)
-        calib_samples = rng.normal(0, 1, (2,) + graph.input_shape).astype(np.float32)
-    cal = calibrate(graph, params, calib_samples)
-    ld = build_loadable(graph, params, cal, cfg)
-
-    vp = VirtualPlatform(ld)
-    x0 = sample_input if sample_input is not None else calib_samples[0]
-    res = vp.run(x0)
-
-    trace = tracegen.parse_csb(res.log)
-    weight_image = memory.extract_weights(tracegen.parse_dbb(res.log))
-    asm_text, binary = asm_mod.assemble(trace)
-    cost = model_cost(ld.descriptors, cfg, ld.desc_layers)
-    n_out = int(np.prod(graph.by_name()[graph.output].out_shape))
-    return Artifacts(
-        graph_name=graph.name, cfg=cfg, trace=trace, trace_text=trace.to_text(),
-        weight_image=weight_image, asm_text=asm_text, program_binary=binary,
-        input_scale=ld.input_scale, output_scale=ld.output_scale,
-        output_elems=n_out, loadable=ld, vp_output=res.output,
-        vp_output_int8=res.output_int8, cost=cost)
+    """Deprecated one-shot compile; use ``CompilerPipeline(graph, ...).run()``."""
+    warnings.warn(
+        "compile_network() is deprecated; use "
+        "repro.core.pipeline.CompilerPipeline(graph, ...).run()",
+        DeprecationWarning, stacklevel=2)
+    return CompilerPipeline(graph, params=params, calib_samples=calib_samples,
+                            cfg=cfg, sample_input=sample_input, seed=seed).run()
 
 
 def make_executor(art: Artifacts, kind: str = "baremetal"):
-    cls = BareMetalExecutor if kind == "baremetal" else LinuxStackExecutor
-    return cls(art.trace, art.weight_image, art.cfg,
-               input_scale=art.input_scale, output_scale=art.output_scale,
-               output_elems=art.output_elems)
+    """Deprecated executor factory; use ``repro.runtime.Session`` (or
+    ``repro.runtime.create_executor``).  Unknown kinds raise ``ValueError``."""
+    warnings.warn(
+        "make_executor() is deprecated; use repro.runtime.Session(artifacts, "
+        "backend=...) or repro.runtime.create_executor(kind, artifacts)",
+        DeprecationWarning, stacklevel=2)
+    from repro.runtime import create_executor
+    return create_executor(kind, art)

@@ -60,6 +60,27 @@ def _clip8(x):
     return jnp.clip(x, -128, 127).astype(jnp.int8)
 
 
+def _dot_i8(a, b, dnums, contract_k: int):
+    """int8 x int8 -> int32 dot_general, via f32 when provably bit-exact.
+
+    XLA CPU lowers integer GEMMs to scalar loops; the f32 units are far wider.
+    Every int8*int8 product has magnitude <= 128*128 = 16384 (both operands can
+    be -128), so as long as the worst-case accumulator K * 16384 stays within
+    2^24 every partial sum is an exactly representable f32 integer regardless
+    of summation order — the float GEMM returns bit-identical int32
+    accumulators.  Larger contractions keep the integer path.
+    """
+    if contract_k * 128 * 128 <= (1 << 24):
+        # Precision.HIGHEST forces true f32 accumulation — the default matmul
+        # precision is tf32/bf16 on GPU/TPU, which would break the exactness
+        # proof (products need 15 significand bits).
+        acc = jax.lax.dot_general(a.astype(jnp.float32), b.astype(jnp.float32),
+                                  dnums, preferred_element_type=jnp.float32,
+                                  precision=jax.lax.Precision.HIGHEST)
+        return acc.astype(jnp.int32)
+    return jax.lax.dot_general(a, b, dnums, preferred_element_type=jnp.int32)
+
+
 def _im2col(x, k, stride, pad):
     """(C,H,W) int8 -> (C*k*k, P*Q) int8, static shapes."""
     c, h, w = x.shape
@@ -80,15 +101,13 @@ def _conv_int8(x, wq, bias, words, k, stride, pad, groups, relu):
     q = (w_in + 2 * pad - k) // stride + 1
     if groups == 1:
         cols = _im2col(x, k, stride, pad)
-        acc = jax.lax.dot_general(wq, cols, (((1,), (0,)), ((), ())),
-                                  preferred_element_type=jnp.int32)
+        acc = _dot_i8(wq, cols, (((1,), (0,)), ((), ())), c * k * k)
     else:
         cg, kg = c // groups, kk // groups
         xg = x.reshape(groups, cg, h, w_in)
         colsg = jax.vmap(lambda xx: _im2col(xx, k, stride, pad))(xg)
         wg = wq.reshape(groups, kg, cg * k * k)
-        acc = jax.lax.dot_general(wg, colsg, (((2,), (1,)), ((0,), (0,))),
-                                  preferred_element_type=jnp.int32)
+        acc = _dot_i8(wg, colsg, (((2,), (1,)), ((0,), (0,))), cg * k * k)
         acc = acc.reshape(kk, p * q)
     acc = acc + bias[:, None]
     m, pre, post = _unpack_words(words)
@@ -99,8 +118,8 @@ def _conv_int8(x, wq, bias, words, k, stride, pad, groups, relu):
 
 
 def _fc_int8(x, wq, bias, words, relu):
-    acc = jax.lax.dot_general(wq, x.reshape(-1), (((1,), (0,)), ((), ())),
-                              preferred_element_type=jnp.int32) + bias
+    acc = _dot_i8(wq, x.reshape(-1), (((1,), (0,)), ((), ())),
+                  int(wq.shape[1])) + bias
     m, pre, post = _unpack_words(words)
     out = _apply_scale(acc, m, pre, post)
     if relu:
@@ -200,6 +219,107 @@ def _op_from_descriptor(d: engine.Descriptor, base: int, elem_bytes: int):
     return op
 
 
+def _overlaps(a: tuple, b: tuple) -> bool:
+    return a[0] < b[0] + b[1] and b[0] < a[0] + a[1]
+
+
+def _batch_plan(descs, input_region: tuple):
+    """Dataflow analysis for the batched program.
+
+    For op ``i``: ``fwd[i]`` — its source region is exactly the previous
+    producer's destination (the previous op, or the input surface for op 0),
+    so the value is forwarded tensor-to-tensor instead of read back from the
+    activation arena; ``store[i]`` — some *other* later read overlaps its
+    destination (concat consumers, EW residuals, partial reads), so the value
+    must also be stored to the arena.  Forwarding changes only where bytes are
+    read from, never their values — the batch path stays bit-exact.
+    """
+    n = len(descs)
+    src_r = [(d.src_addr, _surface_bytes(d.src_dims, 1)) for d in descs]
+    dst_r = [(d.dst_addr, _surface_bytes(d.dst_dims, 1)) for d in descs]
+    aux_r = [(d.aux_addr, _surface_bytes(d.src_dims, 1)) if d.unit == "EW"
+             else None for d in descs]
+    fwd = [src_r[i] == (dst_r[i - 1] if i else input_region) for i in range(n)]
+
+    def store_needed(region: tuple, producer: int) -> bool:
+        for j in range(producer + 1, n):
+            if _overlaps(region, src_r[j]) and not (j == producer + 1 and fwd[j]):
+                return True
+            if aux_r[j] is not None and _overlaps(region, aux_r[j]):
+                return True
+        return False
+
+    store = [store_needed(dst_r[i], i) for i in range(n - 1)]
+    store.append(False)          # final output is forwarded out of the program
+    store_input = store_needed(input_region, -1)
+    return fwd, store, store_input
+
+
+def _batched_op_from_descriptor(d: engine.Descriptor, base: int, act_lo: int,
+                                fwd: bool, store: bool):
+    """Build f(weights, act, y_prev)->(act, y_flat) for the vmapped batch path.
+
+    ``weights`` is the full preload arena, shared (unbatched) across lanes and
+    read with *static* slices; ``act`` is a small per-lane arena covering only
+    the activation region — so per-op data movement under vmap is
+    O(batch * live activations), not O(batch * whole arena).
+    """
+    _, c, h, w = d.src_dims
+    _, k, p, q = d.dst_dims
+    so = d.src_addr - base - act_lo
+    do = d.dst_addr - base - act_lo
+    s_sz = _surface_bytes(d.src_dims, 1)
+
+    def read_src(act, y_prev):
+        if fwd:
+            return y_prev.reshape(c, h, w)
+        return jax.lax.dynamic_slice(act, (so,), (s_sz,)).reshape(c, h, w)
+
+    def finish(act, y):
+        y_flat = y.reshape(-1)
+        if store:
+            act = jax.lax.dynamic_update_slice(act, y_flat, (do,))
+        return act, y_flat
+
+    if d.unit in ("CONV", "FC"):
+        r, s = d.kernel
+        cin_g = c // d.groups if d.unit == "CONV" else c * h * w
+        wt_n = k * cin_g * (r * s if d.unit == "CONV" else 1)
+        wo, bo, sco = d.wt_addr - base, d.bias_addr - base, d.scale_addr - base
+
+        def op(weights, act, y_prev):
+            x = read_src(act, y_prev)
+            wq = weights[wo:wo + wt_n].reshape(k, -1)
+            bias = jax.lax.bitcast_convert_type(
+                weights[bo:bo + 4 * k].reshape(k, 4), jnp.int32)
+            words = jax.lax.bitcast_convert_type(
+                weights[sco:sco + 4 * k].reshape(k, 4), jnp.int32)
+            if d.unit == "CONV":
+                y = _conv_int8(x, wq, bias, words, r, d.stride, d.pad, d.groups, d.relu)
+            else:
+                y = _fc_int8(x, wq, bias, words, d.relu)
+            return finish(act, y)
+    elif d.unit == "PDP":
+        word = engine._pack_scale(d.out_scale)
+
+        def op(weights, act, y_prev):
+            y = _pool_int8(read_src(act, y_prev), d.kernel, d.stride, d.pad,
+                           d.pool_mode, word)
+            return finish(act, y)
+    elif d.unit == "EW":
+        ao = d.aux_addr - base - act_lo
+        wa, wb = engine._pack_scale(d.out_scale), engine._pack_scale(d.aux_scale)
+
+        def op(weights, act, y_prev):
+            a = read_src(act, y_prev)
+            b = jax.lax.dynamic_slice(act, (ao,), (s_sz,)).reshape(c, h, w)
+            y = _add_int8(a, b, wa, wb, d.relu)
+            return finish(act, y)
+    else:
+        raise ValueError(d.unit)
+    return op
+
+
 # ---------------------------------------------------------------------------
 # Executors
 # ---------------------------------------------------------------------------
@@ -253,24 +373,83 @@ class _ExecutorBase:
     def _dequant_out(self, y_i8: np.ndarray) -> np.ndarray:
         return y_i8.astype(np.float32) * self.output_scale
 
+    def run_batch(self, X: np.ndarray) -> ExecResult:
+        """Batched inference, default: N sequential runs, stacked."""
+        outs = [self.run(x) for x in np.asarray(X)]
+        return ExecResult(output_int8=np.stack([o.output_int8 for o in outs]),
+                          output=np.stack([o.output for o in outs]))
+
 
 class BareMetalExecutor(_ExecutorBase):
     """One fused XLA executable over a flat arena — the bare-metal binary."""
 
     def __init__(self, *args, donate: bool = True, **kw):
+        # ``donate`` is accepted for backward compatibility and ignored: the
+        # preloaded arena now stays resident on device across calls, which
+        # requires the buffer NOT to be donated (the program reads it, threads
+        # its own copy, and returns only the output surface — XLA elides the
+        # stores of activations that are never read back).
+        del donate
         super().__init__(*args, **kw)
         ops = [_op_from_descriptor(d, self.base, 1) for d in self.descs]
         n_out = self.output_elems
         out_off = self.output_off
 
-        def run_all(arena, x_flat):
+        def replay(arena, x_flat):
             arena = jax.lax.dynamic_update_slice(arena, x_flat, (self.input_off,))
             for op in ops:
                 arena = op(arena)
             return jax.lax.dynamic_slice(arena, (out_off,), (n_out,))
 
-        self._fn = jax.jit(run_all, donate_argnums=(0,) if donate else ())
-        self._arena_dev = jnp.asarray(self.arena0.view(np.int8))
+        # Single-image path: the resident arena transfers host->device once;
+        # steady-state serving moves only the input surface per call.
+        self._fn = jax.jit(replay)
+        # Batch path: the immutable weight region stays shared across lanes;
+        # only the activation region [act_lo, act_hi) is vmapped per lane, so
+        # each op moves O(batch * activations), not O(batch * whole arena).
+        act_offs = []
+        for d in self.descs:
+            act_offs.append((d.src_addr - self.base,
+                             d.src_addr - self.base + _surface_bytes(d.src_dims, 1)))
+            act_offs.append((d.dst_addr - self.base,
+                             d.dst_addr - self.base + _surface_bytes(d.dst_dims, 1)))
+            if d.unit == "EW":
+                act_offs.append((d.aux_addr - self.base,
+                                 d.aux_addr - self.base + _surface_bytes(d.src_dims, 1)))
+        act_lo = min(lo for lo, _ in act_offs)
+        act_hi = max(hi for _, hi in act_offs)
+        self._act_lo, self._act_hi = act_lo, act_hi
+        in_region = (self.base + self.input_off,
+                     _surface_bytes(self.input_dims, 1))
+        fwd, store, store_input = _batch_plan(self.descs, in_region)
+        bops = [_batched_op_from_descriptor(d, self.base, act_lo, fwd[i], store[i])
+                for i, d in enumerate(self.descs)]
+
+        def batch_replay(weights, act0, xs):
+            def one(x_flat):
+                act = act0
+                if store_input:
+                    act = jax.lax.dynamic_update_slice(
+                        act, x_flat, (self.input_off - act_lo,))
+                y = x_flat
+                for bop in bops:
+                    act, y = bop(weights, act, y)
+                return y[:n_out]
+            return jax.vmap(one)(xs)
+
+        self._batch_fn = jax.jit(batch_replay)
+        self._arena_dev = None      # created lazily from arena0
+        self._batch_state = None    # (weights, act0) device pair, lazy
+
+    def _ensure_arena(self):
+        if self._arena_dev is None:
+            self._arena_dev = jnp.asarray(self.arena0.view(np.int8))
+        return self._arena_dev
+
+    def reset_arena(self) -> None:
+        """Drop the device-resident arena (next run re-materialises arena0)."""
+        self._arena_dev = None
+        self._batch_state = None
 
     def compile(self):
         """AOT-compile the fused program (the 'binary')."""
@@ -280,12 +459,20 @@ class BareMetalExecutor(_ExecutorBase):
 
     def run(self, x: np.ndarray) -> ExecResult:
         xq = self._quant_in(x).reshape(-1)
-        # donated arg: re-materialise the preloaded arena per call (cheap host
-        # copy; in steady-state serving the arena stays resident on device and
-        # only the input surface is rewritten).
-        arena = jnp.asarray(self.arena0.view(np.int8))
-        y = np.asarray(self._fn(arena, jnp.asarray(xq.view(np.int8))))
-        y_i8 = y.view(np.int8)[:self.output_elems]
+        y = self._fn(self._ensure_arena(), jnp.asarray(xq.view(np.int8)))
+        y_i8 = np.asarray(y).view(np.int8)[:self.output_elems]
+        return ExecResult(output_int8=y_i8, output=self._dequant_out(y_i8))
+
+    def run_batch(self, X: np.ndarray) -> ExecResult:
+        """Run a batch as ONE vmapped XLA program (bit-exact vs N run calls)."""
+        X = np.asarray(X)
+        xq = self._quant_in(X).reshape(X.shape[0], -1)
+        if self._batch_state is None:
+            self._batch_state = jnp.asarray(
+                self.arena0.view(np.int8)[self._act_lo:self._act_hi])
+        y = np.asarray(self._batch_fn(self._ensure_arena(), self._batch_state,
+                                      jnp.asarray(xq.view(np.int8))))
+        y_i8 = y.view(np.int8)[:, :self.output_elems]
         return ExecResult(output_int8=y_i8, output=self._dequant_out(y_i8))
 
 

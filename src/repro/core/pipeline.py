@@ -1,0 +1,343 @@
+"""Staged compiler pipeline (paper Fig. 1), with inspectable intermediates.
+
+The paper's toolflow is a *pipeline*, not one opaque call:
+
+    calibrate -> build_loadable -> vp_run -> {parse_trace, extract_weights}
+                                          -> assemble
+                 build_loadable -> cost_model
+
+``CompilerPipeline`` exposes exactly those stages by name.  Each stage is
+individually runnable (``pipe.run_stage("parse_trace")`` runs only the stages
+it depends on) and its output is kept on the pipeline for inspection.  Stage
+outputs are also memoised in a process-wide content-hash cache, so recompiling
+an identical (graph, params, calibration, config) is free — the key is a
+SHA-256 over the actual stage inputs, chained through the dependency graph.
+
+``Artifacts`` is the pipeline's end product.  ``Artifacts.save(path)`` ships
+exactly the paper's bare-metal bundle — the configuration trace, the extracted
+weight image and the RV32I program binary (plus a small JSON manifest with the
+I/O scales the host needs) — and ``Artifacts.load(path)`` rebuilds a runnable
+artifact set from that bundle alone, with no VP re-execution.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import asm as asm_mod
+from repro.core import engine, memory, tracegen
+from repro.core.graph import NetGraph
+from repro.core.loadable import Loadable, build_loadable, calibrate
+from repro.core.perfmodel import ModelCost, model_cost
+from repro.core.tracegen import Trace
+from repro.core.vp import VirtualPlatform
+
+# ---------------------------------------------------------------------------
+# Artifacts: the pipeline's product, and the shippable bare-metal bundle
+# ---------------------------------------------------------------------------
+_BUNDLE_FILES = ("trace.cfg", "weights.img", "program.bin", "manifest.json")
+
+
+@dataclasses.dataclass
+class Artifacts:
+    """Everything the bare-metal SoC needs (and nothing else).
+
+    The first block is the shipped bundle (the paper's three files + scales);
+    the second block holds compile-time intermediates that only exist on a
+    freshly compiled artifact set (``None`` after ``Artifacts.load``).
+    """
+    graph_name: str
+    cfg: engine.EngineConfig
+    trace: Trace                     # configuration file
+    trace_text: str                  # its serialised form
+    weight_image: Dict[int, bytes]   # extracted, deduped preload image
+    program_binary: bytes            # assembled program-memory image
+    input_scale: float
+    output_scale: float
+    output_elems: int
+    # -- compile-time intermediates (not shipped) ----------------------------
+    asm_text: str = ""               # RISC-V assembly listing
+    loadable: Optional[Loadable] = None
+    vp_output: Optional[np.ndarray] = None      # VP reference output (float)
+    vp_output_int8: Optional[np.ndarray] = None
+    cost: Optional[ModelCost] = None            # cycle model (Tables II/III)
+
+    # -- storage accounting (Table I analogue) -------------------------------
+    def storage_report(self) -> Dict[str, int]:
+        wbytes = sum(len(b) for b in self.weight_image.values())
+        return {
+            "config_file_bytes": len(self.trace_text.encode()),
+            "program_binary_bytes": len(self.program_binary),
+            "weight_image_bytes": wbytes,
+            "n_write_reg": self.trace.n_writes,
+            "n_read_reg": self.trace.n_reads,
+        }
+
+    # -- bundle serialisation ------------------------------------------------
+    def save(self, path) -> pathlib.Path:
+        """Write the bare-metal bundle: trace.cfg + weights.img + program.bin.
+
+        The weight image is stored as one flat blob; the manifest records the
+        (address, length) segment table plus the engine config and I/O scales.
+        """
+        p = pathlib.Path(path)
+        p.mkdir(parents=True, exist_ok=True)
+        segs = sorted(self.weight_image.items())
+        (p / "trace.cfg").write_text(self.trace_text)
+        (p / "weights.img").write_bytes(b"".join(b for _, b in segs))
+        (p / "program.bin").write_bytes(self.program_binary)
+        manifest = {
+            "format": 1,
+            "graph_name": self.graph_name,
+            "cfg": dataclasses.asdict(self.cfg),
+            "input_scale": self.input_scale,
+            "output_scale": self.output_scale,
+            "output_elems": self.output_elems,
+            "weight_segments": [[addr, len(b)] for addr, b in segs],
+        }
+        (p / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        return p
+
+    @classmethod
+    def load(cls, path) -> "Artifacts":
+        """Rebuild a runnable artifact set from a saved bundle (no recompile)."""
+        p = pathlib.Path(path)
+        missing = [f for f in _BUNDLE_FILES if not (p / f).exists()]
+        if missing:
+            raise FileNotFoundError(f"{p} is not an artifact bundle "
+                                    f"(missing {', '.join(missing)})")
+        manifest = json.loads((p / "manifest.json").read_text())
+        trace_text = (p / "trace.cfg").read_text()
+        blob = (p / "weights.img").read_bytes()
+        weight_image: Dict[int, bytes] = {}
+        off = 0
+        for addr, n in manifest["weight_segments"]:
+            weight_image[addr] = blob[off:off + n]
+            off += n
+        return cls(
+            graph_name=manifest["graph_name"],
+            cfg=engine.EngineConfig(**manifest["cfg"]),
+            trace=Trace.from_text(trace_text),
+            trace_text=trace_text,
+            weight_image=weight_image,
+            program_binary=(p / "program.bin").read_bytes(),
+            input_scale=manifest["input_scale"],
+            output_scale=manifest["output_scale"],
+            output_elems=manifest["output_elems"],
+        )
+
+
+# ---------------------------------------------------------------------------
+# Content-hash stage cache (process-wide)
+#
+# Bounded LRU: stage outputs (Loadables, VP logs, traces) are heavyweight, so
+# the cache evicts least-recently-used entries past _CACHE_MAX to keep a
+# long-lived process from growing without bound.  Cached objects are shared
+# between pipelines with equal fingerprints — treat stage outputs and the
+# Artifacts built from them as immutable.
+# ---------------------------------------------------------------------------
+_CACHE: "collections.OrderedDict[str, Any]" = collections.OrderedDict()
+_CACHE_MAX = 128
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+
+
+def cache_stats() -> Dict[str, int]:
+    return dict(_CACHE_STATS, entries=len(_CACHE))
+
+
+def _cache_put(key: str, value: Any) -> None:
+    _CACHE[key] = value
+    _CACHE.move_to_end(key)
+    while len(_CACHE) > _CACHE_MAX:
+        _CACHE.popitem(last=False)
+
+
+def _hash_update_array(h, a: Optional[np.ndarray]) -> None:
+    if a is None:
+        h.update(b"none")
+    else:
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+
+
+def _fingerprint(graph: NetGraph, params, calib_samples, cfg, sample_input,
+                 calibration=None) -> str:
+    """SHA-256 over everything the pipeline's output depends on."""
+    h = hashlib.sha256()
+    if calibration is not None:
+        h.update(repr(sorted(calibration.scales.items())).encode())
+    h.update(graph.name.encode())
+    h.update(str(graph.input_shape).encode())
+    for l in graph.layers:
+        h.update(repr(dataclasses.astuple(l)).encode())
+    for lname in sorted(params):
+        h.update(lname.encode())
+        for k in sorted(params[lname]):
+            _hash_update_array(h, params[lname][k])
+    _hash_update_array(h, calib_samples)
+    _hash_update_array(h, sample_input)
+    h.update(repr(dataclasses.astuple(cfg)).encode())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Stage graph
+# ---------------------------------------------------------------------------
+def _stage_calibrate(p: "CompilerPipeline"):
+    return calibrate(p.graph, p.params, p.calib_samples)
+
+
+def _stage_build_loadable(p: "CompilerPipeline"):
+    return build_loadable(p.graph, p.params, p.stage("calibrate"), p.cfg)
+
+
+def _stage_vp_run(p: "CompilerPipeline"):
+    return VirtualPlatform(p.stage("build_loadable")).run(p.sample_input)
+
+
+def _stage_parse_trace(p: "CompilerPipeline"):
+    return tracegen.parse_csb(p.stage("vp_run").log)
+
+
+def _stage_extract_weights(p: "CompilerPipeline"):
+    return memory.extract_weights(tracegen.parse_dbb(p.stage("vp_run").log))
+
+
+def _stage_assemble(p: "CompilerPipeline"):
+    return asm_mod.assemble(p.stage("parse_trace"))
+
+
+def _stage_cost_model(p: "CompilerPipeline"):
+    ld = p.stage("build_loadable")
+    return model_cost(ld.descriptors, p.cfg, ld.desc_layers)
+
+
+_STAGES: Dict[str, Tuple[Tuple[str, ...], Callable]] = {
+    # name            -> (dependencies, fn)
+    "calibrate":       ((), _stage_calibrate),
+    "build_loadable":  (("calibrate",), _stage_build_loadable),
+    "vp_run":          (("build_loadable",), _stage_vp_run),
+    "parse_trace":     (("vp_run",), _stage_parse_trace),
+    "extract_weights": (("vp_run",), _stage_extract_weights),
+    "assemble":        (("parse_trace",), _stage_assemble),
+    "cost_model":      (("build_loadable",), _stage_cost_model),
+}
+
+STAGE_NAMES = tuple(_STAGES)
+
+
+class CompilerPipeline:
+    """The paper's toolflow as named, individually-runnable stages.
+
+        pipe = CompilerPipeline(graph)
+        cal = pipe.run_stage("calibrate")      # inspect any intermediate
+        art = pipe.run()                       # full Artifacts
+
+    Stage outputs are memoised per-pipeline and in a process-wide
+    content-hash cache, so identical inputs never recompile.
+    """
+
+    stages = STAGE_NAMES
+
+    def __init__(self, graph: NetGraph, params=None,
+                 calib_samples: Optional[np.ndarray] = None,
+                 cfg: engine.EngineConfig = engine.NV_SMALL,
+                 sample_input: Optional[np.ndarray] = None,
+                 seed: int = 0, use_cache: bool = True,
+                 calibration=None):
+        self.graph = graph
+        self.cfg = cfg
+        self.use_cache = use_cache
+        self.params = params if params is not None else graph.init_params(seed)
+        if calib_samples is None:
+            rng = np.random.default_rng(seed + 1)
+            calib_samples = rng.normal(
+                0, 1, (2,) + graph.input_shape).astype(np.float32)
+        self.calib_samples = calib_samples
+        self.sample_input = (sample_input if sample_input is not None
+                             else calib_samples[0])
+        self._results: Dict[str, Any] = {}
+        # a pre-computed CalibrationTable overrides the calibrate stage
+        # (e.g. a different percentile); it seeds the stage-result map so the
+        # content hash must cover it too.
+        if calibration is not None:
+            self._results["calibrate"] = calibration
+        self._root = _fingerprint(graph, self.params, self.calib_samples,
+                                  cfg, self.sample_input, calibration)
+        self._keys: Dict[str, str] = {}
+
+    # -- cache keys, chained through the stage dependency graph --------------
+    def _key(self, name: str) -> str:
+        if name not in self._keys:
+            deps, _ = _STAGES[name]
+            h = hashlib.sha256(self._root.encode())
+            h.update(name.encode())
+            for d in deps:
+                h.update(self._key(d).encode())
+            self._keys[name] = h.hexdigest()
+        return self._keys[name]
+
+    # -- execution -----------------------------------------------------------
+    def run_stage(self, name: str):
+        """Run one stage (and any stages it depends on); return its output."""
+        if name not in _STAGES:
+            raise ValueError(f"unknown stage {name!r}; stages: "
+                             f"{', '.join(STAGE_NAMES)}")
+        if name in self._results:
+            return self._results[name]
+        key = self._key(name)
+        if self.use_cache and key in _CACHE:
+            _CACHE_STATS["hits"] += 1
+            _CACHE.move_to_end(key)
+            out = _CACHE[key]
+        else:
+            deps, fn = _STAGES[name]
+            for d in deps:
+                self.run_stage(d)
+            _CACHE_STATS["misses"] += 1
+            out = fn(self)
+            if self.use_cache:
+                _cache_put(key, out)
+        self._results[name] = out
+        return out
+
+    # alias used by the stage functions themselves
+    stage = run_stage
+
+    @property
+    def results(self) -> Dict[str, Any]:
+        """Stage outputs computed so far (inspectable intermediates)."""
+        return dict(self._results)
+
+    def run(self) -> Artifacts:
+        """Run every stage and assemble the final Artifacts."""
+        for name in STAGE_NAMES:
+            self.run_stage(name)
+        r = self._results
+        trace: Trace = r["parse_trace"]
+        asm_text, binary = r["assemble"]
+        ld: Loadable = r["build_loadable"]
+        vp = r["vp_run"]
+        out_shape = self.graph.by_name()[self.graph.output].out_shape
+        return Artifacts(
+            graph_name=self.graph.name, cfg=self.cfg,
+            trace=trace, trace_text=trace.to_text(),
+            weight_image=r["extract_weights"],
+            program_binary=binary, asm_text=asm_text,
+            input_scale=ld.input_scale, output_scale=ld.output_scale,
+            output_elems=int(np.prod(out_shape)),
+            loadable=ld, vp_output=vp.output, vp_output_int8=vp.output_int8,
+            cost=r["cost_model"])

@@ -1,0 +1,15 @@
+"""Runtime layer: executor-backend registry + serving Session.
+
+Importing this package registers the built-in backends (``baremetal``,
+``linuxstack``, ``ref``).  See ``repro.runtime.session.Session`` for the
+serving API and ``repro.runtime.registry.register_backend`` for adding
+custom backends.
+"""
+
+from repro.runtime import backends as _backends  # noqa: F401  (registers builtins)
+from repro.runtime.registry import backend_names, create as create_executor, \
+    register_backend
+from repro.runtime.session import NetStats, Session
+
+__all__ = ["Session", "NetStats", "register_backend", "create_executor",
+           "backend_names"]

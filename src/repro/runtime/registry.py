@@ -1,0 +1,42 @@
+"""Executor-backend registry.
+
+Backends register themselves with the ``@register_backend("name")`` decorator;
+``create(kind, artifacts)`` instantiates one from an :class:`Artifacts` set.
+Unknown backend names raise with the list of registered backends — no silent
+fallback.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+
+_BACKENDS: Dict[str, Callable] = {}
+
+
+def register_backend(name: str) -> Callable:
+    """Decorator: register ``factory(artifacts, **kw) -> executor`` as ``name``."""
+    def deco(factory: Callable) -> Callable:
+        if name in _BACKENDS:
+            raise ValueError(f"backend {name!r} already registered")
+        _BACKENDS[name] = factory
+        return factory
+    return deco
+
+
+def backend_names() -> List[str]:
+    return sorted(_BACKENDS)
+
+
+def create(kind: str, artifacts, **kw):
+    """Instantiate the ``kind`` backend over ``artifacts``.
+
+    Raises ``ValueError`` naming the registered backends for unknown kinds.
+    """
+    try:
+        factory = _BACKENDS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown executor backend {kind!r}; registered backends: "
+            f"{', '.join(backend_names())}") from None
+    return factory(artifacts, **kw)

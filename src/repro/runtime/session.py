@@ -1,0 +1,136 @@
+"""Serving-side Session API.
+
+A ``Session`` owns one or more compiled networks, each bound to a registered
+executor backend, and serves single inputs (``run``) or batches
+(``run_batch``).  The bare-metal backend keeps its preloaded DRAM arena
+resident on device across calls and executes batches as one vmapped XLA
+program, so steady-state serving pays only the input-surface transfer.
+
+    art = CompilerPipeline(graph.lenet5()).run()
+    ses = Session(art)                       # default backend: baremetal
+    y = ses.run(x)                           # one image
+    ys = ses.run_batch(X)                    # (N, ...) batch, bit-exact vs N runs
+
+    ses.load(other_art, backend="linuxstack")  # multi-network residency
+    ses.run(x2, net=other_art.graph_name)
+
+    ses = Session.from_bundle("bundle_dir/")   # serve a saved bundle,
+                                               # no recompilation or VP run
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.executor import ExecResult
+from repro.core.pipeline import Artifacts
+from repro.runtime import registry
+
+
+@dataclasses.dataclass
+class NetStats:
+    """Per-network serving counters."""
+    calls: int = 0
+    batch_calls: int = 0
+    images: int = 0
+
+
+@dataclasses.dataclass
+class _Net:
+    name: str
+    backend: str
+    executor: object
+    artifacts: Artifacts
+    stats: NetStats = dataclasses.field(default_factory=NetStats)
+
+
+class Session:
+    """Multi-network inference session over registered executor backends."""
+
+    def __init__(self, artifacts: Optional[Artifacts] = None,
+                 backend: str = "baremetal", name: Optional[str] = None):
+        self._nets: Dict[str, _Net] = {}
+        self._order: List[str] = []
+        self.default_backend = backend
+        if artifacts is not None:
+            self.load(artifacts, name=name, backend=backend)
+
+    # -- residency -----------------------------------------------------------
+    def load(self, artifacts: Artifacts, name: Optional[str] = None,
+             backend: Optional[str] = None, replace: bool = False,
+             **executor_kw) -> str:
+        """Make ``artifacts`` resident under ``name``; returns the name."""
+        name = name or artifacts.graph_name
+        backend = backend or self.default_backend
+        if name in self._nets and not replace:
+            raise ValueError(f"network {name!r} already resident "
+                             f"(pass replace=True or a different name)")
+        ex = registry.create(backend, artifacts, **executor_kw)
+        if name not in self._nets:
+            self._order.append(name)
+        self._nets[name] = _Net(name=name, backend=backend, executor=ex,
+                                artifacts=artifacts)
+        return name
+
+    def unload(self, name: str) -> None:
+        self._resolve(name)
+        del self._nets[name]
+        self._order.remove(name)
+
+    @classmethod
+    def from_bundle(cls, path, backend: str = "baremetal",
+                    name: Optional[str] = None) -> "Session":
+        """Build a Session straight from a saved bundle — no recompilation."""
+        return cls(Artifacts.load(path), backend=backend, name=name)
+
+    # -- lookup --------------------------------------------------------------
+    @property
+    def networks(self) -> List[str]:
+        return list(self._order)
+
+    def _resolve(self, net: Optional[str]) -> _Net:
+        if net is None:
+            if not self._order:
+                raise ValueError("session has no resident network; "
+                                 "load(artifacts) first")
+            net = self._order[0]
+        try:
+            return self._nets[net]
+        except KeyError:
+            raise KeyError(f"no resident network {net!r}; resident: "
+                           f"{', '.join(self._order) or '(none)'}") from None
+
+    def executor(self, net: Optional[str] = None):
+        return self._resolve(net).executor
+
+    def artifacts(self, net: Optional[str] = None) -> Artifacts:
+        return self._resolve(net).artifacts
+
+    def stats(self, net: Optional[str] = None) -> NetStats:
+        return self._resolve(net).stats
+
+    # -- serving -------------------------------------------------------------
+    def run(self, x: np.ndarray, net: Optional[str] = None) -> ExecResult:
+        """One inference on one input image."""
+        n = self._resolve(net)
+        res = n.executor.run(x)
+        n.stats.calls += 1
+        n.stats.images += 1
+        return res
+
+    def run_batch(self, X: np.ndarray, net: Optional[str] = None) -> ExecResult:
+        """Batched inference over ``X`` of shape ``(N, ...)``.
+
+        Bit-exact (INT8) against N sequential ``run`` calls; on the bare-metal
+        backend the whole batch executes as a single vmapped XLA program over
+        the resident arena.
+        """
+        X = np.asarray(X)
+        n = self._resolve(net)
+        res = n.executor.run_batch(X)
+        n.stats.batch_calls += 1
+        n.stats.images += int(X.shape[0])
+        return res

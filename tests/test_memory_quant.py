@@ -2,6 +2,9 @@
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import engine, graph, memory, quant

@@ -1,0 +1,258 @@
+"""Pipeline + Session API tests: staging, caching, bundles, batching, registry."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import api, graph, pipeline
+from repro.runtime import Session, backend_names, create_executor, \
+    register_backend
+
+
+def _residual_net() -> graph.NetGraph:
+    """Small residual net: exercises the EW aux path of the batch dataflow plan."""
+    g = graph.NetGraph("resid", (3, 12, 12))
+    g.layer(name="data", type="input", inputs=[])
+    x = g.layer(name="stem", type="conv", inputs=["data"], out_channels=6,
+                kernel=3, pad=1, relu=True)
+    c1 = g.layer(name="c1", type="conv", inputs=[x], out_channels=6,
+                 kernel=3, pad=1, relu=True)
+    c2 = g.layer(name="c2", type="conv", inputs=[c1], out_channels=6,
+                 kernel=3, pad=1)
+    x = g.layer(name="add", type="add", inputs=[c2, x], relu=True)
+    x = g.layer(name="gap", type="pool", inputs=[x], pool_mode="gap")
+    g.layer(name="fc", type="fc", inputs=[x], out_channels=4)
+    return g.infer_shapes()
+
+
+def _stride_pad_net() -> graph.NetGraph:
+    """Stride/pad-heavy graph: odd strides + asymmetric-ish padding paths."""
+    g = graph.NetGraph("stride_pad", (3, 17, 17))
+    g.layer(name="data", type="input", inputs=[])
+    x = g.layer(name="c1", type="conv", inputs=["data"], out_channels=8,
+                kernel=5, stride=2, pad=2, relu=True)
+    x = g.layer(name="c2", type="conv", inputs=[x], out_channels=12,
+                kernel=3, stride=2, pad=1, relu=True)
+    x = g.layer(name="p1", type="pool", inputs=[x], kernel=3, stride=2, pad=1,
+                pool_mode="max")
+    x = g.layer(name="c3", type="conv", inputs=[x], out_channels=16,
+                kernel=3, stride=1, pad=0, relu=True)
+    g.layer(name="fc", type="fc", inputs=[x], out_channels=5)
+    return g.infer_shapes()
+
+
+@pytest.fixture(scope="module")
+def lenet_art():
+    return pipeline.CompilerPipeline(graph.lenet5()).run()
+
+
+@pytest.fixture(scope="module")
+def stride_art():
+    return pipeline.CompilerPipeline(_stride_pad_net()).run()
+
+
+@pytest.fixture(scope="module")
+def resid_art():
+    return pipeline.CompilerPipeline(_residual_net()).run()
+
+
+# ---------------------------------------------------------------------------
+# CompilerPipeline: staged execution + content-hash caching
+# ---------------------------------------------------------------------------
+class TestPipeline:
+    def test_stages_run_individually(self):
+        pipe = pipeline.CompilerPipeline(graph.lenet5())
+        cal = pipe.run_stage("calibrate")
+        assert set(pipe.results) == {"calibrate"}
+        assert "data" in cal.scales
+        trace = pipe.run_stage("parse_trace")
+        assert trace.n_writes > 0
+        # parse_trace pulled in its deps but not the independent stages
+        assert "assemble" not in pipe.results
+        assert "cost_model" not in pipe.results
+
+    def test_cost_model_skips_vp(self):
+        """cost_model depends only on the loadable — no VP execution."""
+        pipe = pipeline.CompilerPipeline(_stride_pad_net(), use_cache=False)
+        cost = pipe.run_stage("cost_model")
+        assert cost.total_cycles > 0
+        assert "vp_run" not in pipe.results
+
+    def test_unknown_stage_raises(self):
+        pipe = pipeline.CompilerPipeline(graph.lenet5())
+        with pytest.raises(ValueError, match="unknown stage"):
+            pipe.run_stage("link")
+
+    def test_content_hash_cache(self):
+        g = _stride_pad_net()
+        pipeline.clear_cache()
+        art1 = pipeline.CompilerPipeline(g).run()
+        misses = pipeline.cache_stats()["misses"]
+        art2 = pipeline.CompilerPipeline(_stride_pad_net()).run()
+        stats = pipeline.cache_stats()
+        assert stats["misses"] == misses          # second compile: all hits
+        assert stats["hits"] >= len(pipeline.STAGE_NAMES)
+        assert art2.trace_text == art1.trace_text
+        # different params -> different content hash -> recompile (the register
+        # trace is param-independent; the extracted weight image is not)
+        art3 = pipeline.CompilerPipeline(g, params=g.init_params(1)).run()
+        assert pipeline.cache_stats()["misses"] > misses
+        assert art3.weight_image != art1.weight_image
+
+    def test_matches_legacy_compile_network(self, lenet_art):
+        with pytest.warns(DeprecationWarning):
+            legacy = api.compile_network(graph.lenet5())
+        assert legacy.trace_text == lenet_art.trace_text
+        assert legacy.program_binary == lenet_art.program_binary
+
+
+# ---------------------------------------------------------------------------
+# Artifacts bundle: save/load round-trip, no recompilation
+# ---------------------------------------------------------------------------
+class TestBundle:
+    def test_roundtrip_bit_exact_without_vp(self, lenet_art, tmp_path,
+                                            monkeypatch):
+        bundle = lenet_art.save(tmp_path / "lenet")
+        assert sorted(f.name for f in bundle.iterdir()) == \
+            ["manifest.json", "program.bin", "trace.cfg", "weights.img"]
+
+        # loading + serving the bundle must never touch the VP or compiler
+        import repro.core.vp
+        monkeypatch.setattr(repro.core.vp.VirtualPlatform, "run",
+                            lambda *a, **k: pytest.fail("VP re-executed"))
+        ses = Session.from_bundle(bundle)
+        x = np.random.default_rng(3).normal(0, 1, (1, 28, 28)).astype(np.float32)
+        fresh = Session(lenet_art).run(x)
+        np.testing.assert_array_equal(ses.run(x).output_int8, fresh.output_int8)
+
+    def test_loaded_artifacts_report_same_storage(self, lenet_art, tmp_path):
+        loaded = pipeline.Artifacts.load(lenet_art.save(tmp_path / "b"))
+        assert loaded.storage_report() == lenet_art.storage_report()
+        assert loaded.loadable is None and loaded.cost is None
+
+    def test_load_rejects_non_bundle(self, tmp_path):
+        with pytest.raises(FileNotFoundError, match="not an artifact bundle"):
+            pipeline.Artifacts.load(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# Session: batching, multi-network residency, stats
+# ---------------------------------------------------------------------------
+class TestSession:
+    @pytest.mark.parametrize("backend", ["baremetal", "linuxstack"])
+    @pytest.mark.parametrize("which", ["lenet", "stride", "resid"])
+    def test_run_batch_bitexact_vs_sequential(self, backend, which, lenet_art,
+                                              stride_art, resid_art, request):
+        art = {"lenet": lenet_art, "stride": stride_art,
+               "resid": resid_art}[which]
+        shape = {"lenet": (1, 28, 28), "stride": (3, 17, 17),
+                 "resid": (3, 12, 12)}[which]
+        ses = Session(art, backend=backend)
+        X = np.random.default_rng(5).normal(0, 1, (8,) + shape).astype(np.float32)
+        batched = ses.run_batch(X)
+        seq_i8 = np.stack([ses.run(x).output_int8 for x in X])
+        assert batched.output_int8.shape == (8, art.output_elems)
+        np.testing.assert_array_equal(batched.output_int8, seq_i8)
+
+    def test_dot_i8_exactness_bound(self):
+        """Adversarial int8 data at the f32-exactness boundary (K around 1024).
+
+        K=1024 is the largest contraction where the worst-case accumulator
+        K*16384 = 2^24 is still an exact f32 integer; K=1025 must take the
+        int32 path (all-(-128) operands would round in f32).
+        """
+        import jax.numpy as jnp
+        from repro.core.executor import _dot_i8
+        dn = (((1,), (0,)), ((), ()))
+        for k_dim in (1024, 1025, 1031):
+            a = jnp.full((2, k_dim), -128, jnp.int8)
+            b = jnp.full((k_dim,), -128, jnp.int8)
+            b = b.at[0].set(-127)           # true sum = K*16384 - 128
+            got = np.asarray(_dot_i8(a, b, dn, k_dim))
+            want = (np.full((2, k_dim), -128, np.int64)
+                    @ np.asarray(b, np.int64)).astype(np.int32)
+            np.testing.assert_array_equal(got, want)
+
+    def test_large_contraction_int32_path(self):
+        """K*128*128 > 2^24 disables the exact-f32 GEMM; must stay VP-exact."""
+        from repro.core.vp import VirtualPlatform
+        g = graph.NetGraph("bigk", (520, 4, 4))     # K = 520*9 = 4680
+        g.layer(name="data", type="input", inputs=[])
+        x = g.layer(name="c1", type="conv", inputs=["data"], out_channels=8,
+                    kernel=3, pad=1, relu=True)
+        g.layer(name="fc", type="fc", inputs=[x], out_channels=3)
+        art = pipeline.CompilerPipeline(g.infer_shapes()).run()
+        xi = np.random.default_rng(0).normal(0, 1, g.input_shape).astype(np.float32)
+        vp = VirtualPlatform(art.loadable).run(xi)
+        ex = create_executor("baremetal", art)
+        np.testing.assert_array_equal(ex.run(xi).output_int8, vp.output_int8)
+        X = np.random.default_rng(1).normal(0, 1, (4,) + g.input_shape).astype(np.float32)
+        np.testing.assert_array_equal(
+            ex.run_batch(X).output_int8,
+            np.stack([ex.run(v).output_int8 for v in X]))
+
+    def test_ref_backend_parity(self, stride_art):
+        x = np.random.default_rng(6).normal(0, 1, (3, 17, 17)).astype(np.float32)
+        out = {b: create_executor(b, stride_art).run(x).output_int8
+               for b in ("baremetal", "linuxstack", "ref")}
+        np.testing.assert_array_equal(out["ref"], out["baremetal"])
+        np.testing.assert_array_equal(out["ref"], out["linuxstack"])
+
+    def test_multi_network_residency(self, lenet_art, stride_art):
+        ses = Session(lenet_art)
+        ses.load(stride_art, backend="linuxstack")
+        assert ses.networks == ["lenet5", "stride_pad"]
+        x = np.random.default_rng(7).normal(0, 1, (3, 17, 17)).astype(np.float32)
+        y = ses.run(x, net="stride_pad")
+        assert y.output_int8.shape == (stride_art.output_elems,)
+        assert ses.stats("stride_pad").calls == 1
+        assert ses.stats("lenet5").calls == 0
+        with pytest.raises(ValueError, match="already resident"):
+            ses.load(lenet_art)
+        with pytest.raises(KeyError, match="no resident network"):
+            ses.run(x, net="resnet99")
+
+    def test_arena_stays_resident(self, lenet_art):
+        ex = create_executor("baremetal", lenet_art)
+        x = np.random.default_rng(8).normal(0, 1, (1, 28, 28)).astype(np.float32)
+        first = ex.run(x)
+        arena_after_first = ex._arena_dev
+        assert arena_after_first is not None
+        second = ex.run(x)              # replays over the dirty resident arena
+        np.testing.assert_array_equal(first.output_int8, second.output_int8)
+        ex.reset_arena()
+        third = ex.run(x)
+        np.testing.assert_array_equal(first.output_int8, third.output_int8)
+
+
+# ---------------------------------------------------------------------------
+# Registry + deprecation shims
+# ---------------------------------------------------------------------------
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert {"baremetal", "linuxstack", "ref"} <= set(backend_names())
+
+    def test_unknown_backend_raises_with_list(self, lenet_art):
+        with pytest.raises(ValueError, match="baremetal, linuxstack, ref"):
+            create_executor("gpu", lenet_art)
+        with pytest.warns(DeprecationWarning), \
+                pytest.raises(ValueError, match="registered backends"):
+            api.make_executor(lenet_art, "typo")
+
+    def test_custom_backend_decorator(self, lenet_art):
+        @register_backend("echo-test")
+        def _echo(art, **kw):
+            return ("echo", art.graph_name)
+        try:
+            assert create_executor("echo-test", lenet_art) == ("echo", "lenet5")
+        finally:
+            from repro.runtime import registry
+            registry._BACKENDS.pop("echo-test", None)
+
+    def test_make_executor_shim_warns_and_works(self, lenet_art):
+        x = np.random.default_rng(9).normal(0, 1, (1, 28, 28)).astype(np.float32)
+        with pytest.warns(DeprecationWarning):
+            ex = api.make_executor(lenet_art, "baremetal")
+        ref = Session(lenet_art).run(x)
+        np.testing.assert_array_equal(ex.run(x).output_int8, ref.output_int8)
