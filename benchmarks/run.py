@@ -1,17 +1,26 @@
 """Benchmark harness: one module per paper table.  Prints name,us_per_call,derived.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--table N]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke] [--table N]
+                                            [--out DIR]
 
 Tables:
   1  storage / resource accounting of the bare-metal artifacts   (paper Table I)
   2  nv_small INT8 inference latency + bare-metal vs linux-stack (paper Table II)
   3  nv_full bf16 cycle counts, six networks                     (paper Table III)
-  4  serving microbenchmarks: arena residency + batched Session  (runtime layer)
+  4  serving microbenchmarks: arena residency, batching, coalesced
+     submit through the Session scheduler                        (runtime layer)
+
+``--smoke`` runs every table in reduced-size mode (implies ``--fast``) and
+writes one ``BENCH_table<N>.json`` per table into ``--out`` (default ``.``) —
+CI uploads these as workflow artifacts so perf history rides along with every
+run.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 
 
@@ -19,21 +28,35 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="small subset (CI); full run covers all models")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced-size run of every table + BENCH_*.json files")
     ap.add_argument("--table", type=int, default=0, help="run one table only")
+    ap.add_argument("--out", default=".",
+                    help="directory for --smoke JSON output")
     args = ap.parse_args()
+    fast = args.fast or args.smoke
 
     from benchmarks import (table1_storage, table2_nvsmall, table3_nvfull,
                             table4_serving)
     tables = {1: table1_storage, 2: table2_nvsmall, 3: table3_nvfull,
               4: table4_serving}
-    picked = [tables[args.table]] if args.table else list(tables.values())
+    picked = {args.table: tables[args.table]} if args.table else tables
+
+    out_dir = pathlib.Path(args.out)
+    if args.smoke:
+        out_dir.mkdir(parents=True, exist_ok=True)
 
     print("name,us_per_call,derived")
     ok = True
-    for mod in picked:
+    for num, mod in picked.items():
         try:
-            for row in mod.run(fast=args.fast):
+            rows = mod.run(fast=fast)
+            for row in rows:
                 print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+            if args.smoke:
+                (out_dir / f"BENCH_table{num}.json").write_text(
+                    json.dumps({"table": num, "mode": "smoke", "rows": rows},
+                               indent=1))
         except Exception as e:                      # pragma: no cover
             ok = False
             print(f"{mod.__name__},ERROR,{type(e).__name__}: {e}", file=sys.stderr)

@@ -26,10 +26,13 @@ MODELS = ["lenet5", "resnet18", "resnet50"]
 
 
 def _time_run(ses: Session, x, iters: int, net: str) -> float:
-    ses.run(x, net=net)                         # warmup/compile
+    # executor-direct, like table4's arena row: Table II compares engine
+    # latency, so keep the scheduler's submit->future hop out of the numbers
+    ex = ses.executor(net)
+    ex.run(x)                                   # warmup/compile
     t0 = time.perf_counter()
     for _ in range(iters):
-        ses.run(x, net=net)
+        ex.run(x)
     return (time.perf_counter() - t0) / iters * 1e6
 
 

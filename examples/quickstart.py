@@ -67,10 +67,19 @@ def main():
     print(f"  predicted class   : {int(bm.output.argmax())}")
 
     X = rng.normal(0, 1, (8,) + g.input_shape).astype(np.float32)
-    batch = ses.run_batch(X)                     # one vmapped XLA program
+    batch = ses.run_batch(X)                     # coalesced into one vmapped program
     seq = np.stack([ses.run(xi).output_int8 for xi in X])
     print(f"  batch(8) vs 8 runs: bit-exact={np.array_equal(batch.output_int8, seq)}")
-    print(f"  session stats     : {ses.stats()}")
+
+    # async serving: submit returns futures; the scheduler coalesces them
+    futs = [ses.submit(xi) for xi in X]
+    asy = np.stack([f.result().output_int8 for f in futs])
+    print(f"  8 async submits   : bit-exact={np.array_equal(asy, seq)}")
+    st = ses.stats()
+    print(f"  session stats     : {st}")
+    print(f"  latency (us)      : {st.latency_summary()}  "
+          f"coalesce_mean={st.coalesce_mean:.1f}")
+    ses.close()
 
 
 if __name__ == "__main__":

@@ -53,8 +53,11 @@ def compile_network(graph: NetGraph, params=None,
         "compile_network() is deprecated; use "
         "repro.core.pipeline.CompilerPipeline(graph, ...).run()",
         DeprecationWarning, stacklevel=2)
+    # use_cache=False: legacy callers expect a real compile returning fresh,
+    # independently-owned artifacts — not aliases into the shared stage cache
     return CompilerPipeline(graph, params=params, calib_samples=calib_samples,
-                            cfg=cfg, sample_input=sample_input, seed=seed).run()
+                            cfg=cfg, sample_input=sample_input, seed=seed,
+                            use_cache=False).run()
 
 
 def make_executor(art: Artifacts, kind: str = "baremetal"):

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -329,6 +329,46 @@ class ExecResult:
     output: np.ndarray
 
 
+@dataclasses.dataclass(frozen=True)
+class ExecutorCapabilities:
+    """What a backend can do — consulted by the scheduler instead of
+    special-casing backend names or classes.
+
+    ``native_batching``  — ``run_batch`` executes the whole batch as one
+                           program (vs the sequential fallback loop).
+    ``resident_arena``   — keeps device state across calls (``reset_arena``).
+    ``shardable``        — the batch program honours ``batch_sharding`` (a
+                           ``NamedSharding`` over a 1-axis data mesh) to
+                           split lanes across devices.
+    ``max_batch``        — hard batch-size ceiling, or ``None`` (unbounded).
+    """
+    native_batching: bool = False
+    resident_arena: bool = False
+    shardable: bool = False
+    max_batch: Optional[int] = None
+    dtype: str = "int8"
+
+
+@runtime_checkable
+class ExecutorBackend(Protocol):
+    """Uniform executor contract every registered backend must satisfy.
+
+    ``run(x)`` serves one input.  ``run_batch(X, lanes=None)`` serves a
+    (possibly padded) batch ``X`` of shape ``(N, ...)`` and returns results
+    for the first ``lanes`` lanes (all ``N`` when ``lanes`` is ``None``) —
+    padding and lane masking are owned by the *scheduler*, never by the
+    backend.  ``capabilities()`` declares what the backend supports so
+    callers never have to special-case backend names.
+    """
+
+    def run(self, x: np.ndarray) -> ExecResult: ...
+
+    def run_batch(self, X: np.ndarray,
+                  lanes: Optional[int] = None) -> ExecResult: ...
+
+    def capabilities(self) -> ExecutorCapabilities: ...
+
+
 class _ExecutorBase:
     """Common decode/bind logic from the two bare-metal artifacts."""
 
@@ -373,9 +413,20 @@ class _ExecutorBase:
     def _dequant_out(self, y_i8: np.ndarray) -> np.ndarray:
         return y_i8.astype(np.float32) * self.output_scale
 
-    def run_batch(self, X: np.ndarray) -> ExecResult:
-        """Batched inference, default: N sequential runs, stacked."""
-        outs = [self.run(x) for x in np.asarray(X)]
+    def capabilities(self) -> ExecutorCapabilities:
+        """Default: sequential batching, no device residency, not shardable."""
+        return ExecutorCapabilities(dtype=self.cfg.dtype)
+
+    def run_batch(self, X: np.ndarray,
+                  lanes: Optional[int] = None) -> ExecResult:
+        """Batched inference, default: sequential runs, stacked.
+
+        Only the first ``lanes`` rows are executed (the rest are padding the
+        scheduler added to hit a bucket size); ``lanes=None`` runs them all.
+        """
+        X = np.asarray(X)
+        n = X.shape[0] if lanes is None else lanes
+        outs = [self.run(x) for x in X[:n]]
         return ExecResult(output_int8=np.stack([o.output_int8 for o in outs]),
                           output=np.stack([o.output for o in outs]))
 
@@ -440,6 +491,10 @@ class BareMetalExecutor(_ExecutorBase):
         self._batch_fn = jax.jit(batch_replay)
         self._arena_dev = None      # created lazily from arena0
         self._batch_state = None    # (weights, act0) device pair, lazy
+        # Optional NamedSharding over a 1-axis data mesh: when set (by the
+        # scheduler's dispatcher), batch lanes are placed across devices and
+        # GSPMD partitions the vmapped program; weights/activations replicate.
+        self.batch_sharding = None
 
     def _ensure_arena(self):
         if self._arena_dev is None:
@@ -463,16 +518,30 @@ class BareMetalExecutor(_ExecutorBase):
         y_i8 = np.asarray(y).view(np.int8)[:self.output_elems]
         return ExecResult(output_int8=y_i8, output=self._dequant_out(y_i8))
 
-    def run_batch(self, X: np.ndarray) -> ExecResult:
-        """Run a batch as ONE vmapped XLA program (bit-exact vs N run calls)."""
+    def capabilities(self) -> ExecutorCapabilities:
+        return ExecutorCapabilities(native_batching=True, resident_arena=True,
+                                    shardable=True, dtype=self.cfg.dtype)
+
+    def run_batch(self, X: np.ndarray,
+                  lanes: Optional[int] = None) -> ExecResult:
+        """Run a batch as ONE vmapped XLA program (bit-exact vs N run calls).
+
+        ``lanes`` trims the returned results to the first ``lanes`` rows (the
+        rest being scheduler padding); the program itself always executes the
+        full padded shape so each bucket size compiles exactly once.
+        """
         X = np.asarray(X)
         xq = self._quant_in(X).reshape(X.shape[0], -1)
         if self._batch_state is None:
             self._batch_state = jnp.asarray(
                 self.arena0.view(np.int8)[self._act_lo:self._act_hi])
+        xs = jnp.asarray(xq.view(np.int8))
+        if self.batch_sharding is not None and X.shape[0] % \
+                self.batch_sharding.mesh.size == 0:
+            xs = jax.device_put(xs, self.batch_sharding)
         y = np.asarray(self._batch_fn(self._ensure_arena(), self._batch_state,
-                                      jnp.asarray(xq.view(np.int8))))
-        y_i8 = y.view(np.int8)[:, :self.output_elems]
+                                      xs))
+        y_i8 = y.view(np.int8)[:lanes, :self.output_elems]
         return ExecResult(output_int8=y_i8, output=self._dequant_out(y_i8))
 
 

@@ -26,7 +26,10 @@ import collections
 import dataclasses
 import hashlib
 import json
+import os
 import pathlib
+import pickle
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
@@ -107,15 +110,41 @@ class Artifacts:
 
     @classmethod
     def load(cls, path) -> "Artifacts":
-        """Rebuild a runnable artifact set from a saved bundle (no recompile)."""
+        """Rebuild a runnable artifact set from a saved bundle (no recompile).
+
+        Raises ``FileNotFoundError`` when bundle files are missing, and
+        ``ValueError`` (naming the file and the problem) for a corrupt
+        manifest, an unsupported bundle format version, or a weight image
+        shorter than its manifest segment table claims.
+        """
         p = pathlib.Path(path)
         missing = [f for f in _BUNDLE_FILES if not (p / f).exists()]
         if missing:
             raise FileNotFoundError(f"{p} is not an artifact bundle "
                                     f"(missing {', '.join(missing)})")
-        manifest = json.loads((p / "manifest.json").read_text())
+        try:
+            manifest = json.loads((p / "manifest.json").read_text())
+        except json.JSONDecodeError as e:
+            raise ValueError(f"{p / 'manifest.json'}: corrupt manifest "
+                             f"(not valid JSON: {e})") from None
+        fmt = manifest.get("format")
+        if fmt != 1:
+            raise ValueError(f"{p / 'manifest.json'}: unsupported bundle "
+                             f"format version {fmt!r} (this build reads "
+                             f"format 1)")
+        required = ("graph_name", "cfg", "input_scale", "output_scale",
+                    "output_elems", "weight_segments")
+        absent = [k for k in required if k not in manifest]
+        if absent:
+            raise ValueError(f"{p / 'manifest.json'}: manifest missing "
+                             f"required keys: {', '.join(absent)}")
         trace_text = (p / "trace.cfg").read_text()
         blob = (p / "weights.img").read_bytes()
+        need = sum(n for _, n in manifest["weight_segments"])
+        if need > len(blob):
+            raise ValueError(
+                f"{p / 'weights.img'}: truncated weight image — manifest "
+                f"segment table needs {need} bytes, file has {len(blob)}")
         weight_image: Dict[int, bytes] = {}
         off = 0
         for addr, n in manifest["weight_segments"]:
@@ -135,22 +164,33 @@ class Artifacts:
 
 
 # ---------------------------------------------------------------------------
-# Content-hash stage cache (process-wide)
+# Content-hash stage cache (process-wide, plus opt-in disk tier)
 #
 # Bounded LRU: stage outputs (Loadables, VP logs, traces) are heavyweight, so
 # the cache evicts least-recently-used entries past _CACHE_MAX to keep a
 # long-lived process from growing without bound.  Cached objects are shared
 # between pipelines with equal fingerprints — treat stage outputs and the
 # Artifacts built from them as immutable.
+#
+# The disk tier (``CompilerPipeline(cache_dir=...)``) persists pickled stage
+# outputs keyed by the same content hash, so a *second process* compiling the
+# same (graph, params, calibration, config) skips every stage — including the
+# VP run.  Writes are atomic (tmp + rename); unreadable entries are treated
+# as misses and deleted; total size is capped by ``cache_dir_max_bytes``
+# with least-recently-*used* eviction (hits refresh the file mtime).
 # ---------------------------------------------------------------------------
 _CACHE: "collections.OrderedDict[str, Any]" = collections.OrderedDict()
 _CACHE_MAX = 128
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_CACHE_STATS = {"hits": 0, "misses": 0, "disk_hits": 0, "disk_misses": 0}
+
+DEFAULT_CACHE_DIR_MAX_BYTES = 1 << 30        # 1 GiB
 
 
 def clear_cache() -> None:
+    """Reset the in-memory tier and all counters (disk entries persist)."""
     _CACHE.clear()
-    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+    for k in _CACHE_STATS:
+        _CACHE_STATS[k] = 0
 
 
 def cache_stats() -> Dict[str, int]:
@@ -164,6 +204,66 @@ def _cache_put(key: str, value: Any) -> None:
         _CACHE.popitem(last=False)
 
 
+def _disk_get(cache_dir: pathlib.Path, key: str) -> Tuple[bool, Any]:
+    f = cache_dir / f"{key}.pkl"
+    if not f.exists():
+        _CACHE_STATS["disk_misses"] += 1
+        return False, None
+    try:
+        with f.open("rb") as fh:
+            value = pickle.load(fh)
+    except Exception:                        # corrupt/partial entry: a miss
+        try:
+            f.unlink(missing_ok=True)
+        except OSError:
+            pass
+        _CACHE_STATS["disk_misses"] += 1
+        return False, None
+    try:
+        os.utime(f)                          # refresh LRU recency; the file
+    except OSError:                          # may race a concurrent eviction
+        pass
+    _CACHE_STATS["disk_hits"] += 1
+    return True, value
+
+
+def _disk_put(cache_dir: pathlib.Path, key: str, value: Any,
+              max_bytes: int) -> None:
+    """Best-effort persist: an unwritable or full cache dir degrades to a
+    cache miss next process, never a compile failure."""
+    tmp = cache_dir / f".{key}.{os.getpid()}.tmp"
+    try:
+        cache_dir.mkdir(parents=True, exist_ok=True)
+        with tmp.open("wb") as fh:
+            pickle.dump(value, fh, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, cache_dir / f"{key}.pkl")
+    except Exception as e:
+        try:
+            tmp.unlink(missing_ok=True)
+        except OSError:
+            pass
+        warnings.warn(f"stage cache write to {cache_dir} failed "
+                      f"({type(e).__name__}: {e}); continuing uncached")
+        return
+    _disk_evict(cache_dir, max_bytes)
+
+
+def _disk_evict(cache_dir: pathlib.Path, max_bytes: int) -> None:
+    entries = []
+    for f in cache_dir.glob("*.pkl"):
+        try:
+            st = f.stat()
+        except OSError:
+            continue
+        entries.append((st.st_mtime, st.st_size, f))
+    total = sum(size for _, size, _ in entries)
+    for _, size, f in sorted(entries):       # oldest mtime first
+        if total <= max_bytes:
+            break
+        f.unlink(missing_ok=True)
+        total -= size
+
+
 def _hash_update_array(h, a: Optional[np.ndarray]) -> None:
     if a is None:
         h.update(b"none")
@@ -173,10 +273,17 @@ def _hash_update_array(h, a: Optional[np.ndarray]) -> None:
         h.update(np.ascontiguousarray(a).tobytes())
 
 
+# Mixed into every cache key.  Bump whenever a stage's implementation changes
+# semantics, so the *persistent* disk tier never serves stage outputs pickled
+# by an older build (the in-memory tier dies with the process; disk doesn't).
+CACHE_SCHEMA_VERSION = 2
+
+
 def _fingerprint(graph: NetGraph, params, calib_samples, cfg, sample_input,
                  calibration=None) -> str:
     """SHA-256 over everything the pipeline's output depends on."""
     h = hashlib.sha256()
+    h.update(f"schema:{CACHE_SCHEMA_VERSION}".encode())
     if calibration is not None:
         h.update(repr(sorted(calibration.scales.items())).encode())
     h.update(graph.name.encode())
@@ -257,10 +364,14 @@ class CompilerPipeline:
                  cfg: engine.EngineConfig = engine.NV_SMALL,
                  sample_input: Optional[np.ndarray] = None,
                  seed: int = 0, use_cache: bool = True,
-                 calibration=None):
+                 calibration=None, cache_dir=None,
+                 cache_dir_max_bytes: int = DEFAULT_CACHE_DIR_MAX_BYTES):
         self.graph = graph
         self.cfg = cfg
         self.use_cache = use_cache
+        # opt-in disk tier: persists stage outputs across processes
+        self.cache_dir = pathlib.Path(cache_dir) if cache_dir else None
+        self.cache_dir_max_bytes = cache_dir_max_bytes
         self.params = params if params is not None else graph.init_params(seed)
         if calib_samples is None:
             rng = np.random.default_rng(seed + 1)
@@ -303,12 +414,24 @@ class CompilerPipeline:
             _CACHE_STATS["hits"] += 1
             _CACHE.move_to_end(key)
             out = _CACHE[key]
+            # mirror memory hits to the disk tier so a warm process still
+            # populates the cross-process cache
+            if self.cache_dir is not None and \
+                    not (self.cache_dir / f"{key}.pkl").exists():
+                _disk_put(self.cache_dir, key, out, self.cache_dir_max_bytes)
         else:
-            deps, fn = _STAGES[name]
-            for d in deps:
-                self.run_stage(d)
-            _CACHE_STATS["misses"] += 1
-            out = fn(self)
+            hit = False
+            if self.use_cache and self.cache_dir is not None:
+                hit, out = _disk_get(self.cache_dir, key)
+            if not hit:
+                deps, fn = _STAGES[name]
+                for d in deps:
+                    self.run_stage(d)
+                _CACHE_STATS["misses"] += 1
+                out = fn(self)
+                if self.use_cache and self.cache_dir is not None:
+                    _disk_put(self.cache_dir, key, out,
+                              self.cache_dir_max_bytes)
             if self.use_cache:
                 _cache_put(key, out)
         self._results[name] = out

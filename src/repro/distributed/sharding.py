@@ -269,3 +269,25 @@ def logits_spec(mesh: jax.sharding.Mesh) -> P:
     dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
     dp = dp if len(dp) > 1 else dp[0]
     return P(dp, MODEL)
+
+
+# ---------------------------------------------------------------------------
+# Serving: lane (batch) sharding for the runtime scheduler's dispatcher
+# ---------------------------------------------------------------------------
+def serving_mesh(max_devices: Optional[int] = None) -> Optional[jax.sharding.Mesh]:
+    """1-axis ``('data',)`` mesh over the available devices, for splitting a
+    coalesced inference batch lane-wise.  Returns ``None`` on a single device
+    (sharding would be a no-op) so callers can gate cheaply."""
+    devs = jax.devices()
+    if max_devices is not None:
+        devs = devs[:max_devices]
+    if len(devs) < 2:
+        return None
+    return jax.sharding.Mesh(np.asarray(devs), ("data",))
+
+
+def lane_sharding(mesh: jax.sharding.Mesh) -> NamedSharding:
+    """Shard the leading (lane) axis of a batch over the data mesh; every
+    other axis — and everything else the jitted program touches (weights,
+    activation arena) — replicates."""
+    return NamedSharding(mesh, P("data"))

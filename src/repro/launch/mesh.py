@@ -14,21 +14,34 @@ from __future__ import annotations
 import jax
 
 
+def _axis_types_kw(n_axes: int) -> dict:
+    """``axis_types=`` kwarg for ``jax.make_mesh`` where supported.
+
+    ``jax.sharding.AxisType`` only exists from jax 0.5; on 0.4.x meshes are
+    implicitly Auto, so omitting the kwarg is semantically identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """jax-version-portable ``jax.make_mesh`` with Auto axis types."""
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
     """Mesh over whatever devices exist (smoke tests / examples: 1 CPU)."""
     n = len(jax.devices())
     assert n % model_parallel == 0
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model_parallel, model_parallel), ("data", "model"))
 
 
 def dp_axes(mesh: jax.sharding.Mesh):

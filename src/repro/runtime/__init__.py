@@ -1,15 +1,22 @@
-"""Runtime layer: executor-backend registry + serving Session.
+"""Runtime layer: executor-backend registry + scheduler + serving Session.
 
 Importing this package registers the built-in backends (``baremetal``,
-``linuxstack``, ``ref``).  See ``repro.runtime.session.Session`` for the
-serving API and ``repro.runtime.registry.register_backend`` for adding
-custom backends.
+``linuxstack``, ``ref``).  Layering:
+
+    Session  — residency + name resolution (``repro.runtime.session``)
+    Scheduler — request queue, adaptive micro-batching, padding/lane
+                masking, multi-device dispatch (``repro.runtime.scheduler``)
+    Backends — anything satisfying ``ExecutorBackend``
+               (``repro.runtime.registry.register_backend`` to add one)
 """
 
+from repro.core.executor import ExecutorBackend, ExecutorCapabilities
 from repro.runtime import backends as _backends  # noqa: F401  (registers builtins)
 from repro.runtime.registry import backend_names, create as create_executor, \
     register_backend
+from repro.runtime.scheduler import Scheduler, SchedulerConfig
 from repro.runtime.session import NetStats, Session
 
-__all__ = ["Session", "NetStats", "register_backend", "create_executor",
-           "backend_names"]
+__all__ = ["Session", "NetStats", "Scheduler", "SchedulerConfig",
+           "ExecutorBackend", "ExecutorCapabilities", "register_backend",
+           "create_executor", "backend_names"]

@@ -8,6 +8,13 @@
 
 All three consume ONLY the two bare-metal artifacts (configuration trace +
 weight image), so every backend can serve a bundle loaded from disk.
+
+Every backend satisfies the uniform ``ExecutorBackend`` protocol (``run`` /
+``run_batch(padded, lanes)`` / ``capabilities()``); the Session scheduler
+never special-cases a backend — it consults ``capabilities()`` to decide
+whether to coalesce into native batch programs (``baremetal``) or rely on
+the sequential ``run_batch`` fallback (``linuxstack`` / ``ref``), and
+whether a coalesced batch may be sharded lane-wise across devices.
 """
 
 from __future__ import annotations

@@ -1,14 +1,19 @@
 """Executor-backend registry.
 
 Backends register themselves with the ``@register_backend("name")`` decorator;
-``create(kind, artifacts)`` instantiates one from an :class:`Artifacts` set.
-Unknown backend names raise with the list of registered backends — no silent
-fallback.
+``create(kind, artifacts)`` instantiates one from an :class:`Artifacts` set
+and verifies it satisfies the uniform :class:`ExecutorBackend` protocol
+(``run`` / ``run_batch(padded, lanes)`` / ``capabilities()``) — the Session
+scheduler drives every backend through that contract alone, with no
+per-backend special cases.  Unknown backend names raise with the list of
+registered backends — no silent fallback.
 """
 
 from __future__ import annotations
 
 from typing import Callable, Dict, List
+
+_PROTOCOL_METHODS = ("run", "run_batch", "capabilities")
 
 
 _BACKENDS: Dict[str, Callable] = {}
@@ -31,7 +36,9 @@ def backend_names() -> List[str]:
 def create(kind: str, artifacts, **kw):
     """Instantiate the ``kind`` backend over ``artifacts``.
 
-    Raises ``ValueError`` naming the registered backends for unknown kinds.
+    Raises ``ValueError`` naming the registered backends for unknown kinds,
+    and ``TypeError`` when a factory returns an object that does not satisfy
+    the ``ExecutorBackend`` protocol.
     """
     try:
         factory = _BACKENDS[kind]
@@ -39,4 +46,13 @@ def create(kind: str, artifacts, **kw):
         raise ValueError(
             f"unknown executor backend {kind!r}; registered backends: "
             f"{', '.join(backend_names())}") from None
-    return factory(artifacts, **kw)
+    ex = factory(artifacts, **kw)
+    missing = [m for m in _PROTOCOL_METHODS
+               if not callable(getattr(ex, m, None))]
+    if missing:
+        raise TypeError(
+            f"backend {kind!r} factory returned {type(ex).__name__}, which "
+            f"does not satisfy repro.core.executor.ExecutorBackend "
+            f"(missing: {', '.join(missing)}); executors must provide "
+            f"run(x), run_batch(X, lanes=None) and capabilities()")
+    return ex

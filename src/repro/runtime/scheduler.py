@@ -1,0 +1,299 @@
+"""Async serving scheduler: request queue + adaptive micro-batching engine.
+
+``Session.submit(x)`` enqueues one inference request and returns a
+``concurrent.futures.Future``.  A background dispatcher thread drains the
+queue, coalesces pending same-network requests into one batch, pads it to a
+power-of-two bucket (so each batch shape compiles exactly once), executes it
+through the backend's ``run_batch(padded, lanes)``, and resolves each future
+with its lane's ``ExecResult`` — bit-exact versus running every request
+through sequential ``run`` calls, because the batch program itself is
+bit-exact and padding lanes are sliced off before anyone sees them.
+
+Micro-batching is *adaptive*: the dispatcher tracks an EMA of recent
+coalesce sizes.  Under solo traffic (EMA ~ 1) it dispatches immediately —
+waiting would only add latency; once concurrency is observed it holds the
+head request up to ``max_wait_us`` to let the batch fill towards
+``max_batch``.  Requests for different resident networks never coalesce.
+
+When several devices are visible and the backend reports
+``capabilities().shardable``, a coalesced batch whose bucket divides the
+device count is dispatched with its lane axis sharded over a 1-axis data
+mesh (``repro.distributed.sharding.serving_mesh``); GSPMD splits the vmapped
+program across devices and replicates the resident weight arena.
+
+Padding and lane masking live HERE, not in executors: backends receive an
+already-padded batch plus the live-lane count and stay policy-free.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core.executor import ExecResult
+
+# EMA of coalesce sizes above which the dispatcher starts holding the head
+# request for stragglers (below it, traffic is effectively solo).
+_COALESCE_THRESHOLD = 1.25
+_EMA_ALPHA = 0.2
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Micro-batching knobs.
+
+    ``max_batch``    — coalescing ceiling per dispatch.
+    ``max_wait_us``  — longest the head request is held for stragglers.
+    ``adaptive``     — skip the wait entirely while traffic is solo
+                       (EMA of coalesce sizes stays ~1).
+    ``shard``        — shard coalesced batches lane-wise across devices when
+                       the backend is shardable and >1 device is visible.
+    ``latency_window`` — ring-buffer size for per-request latency samples.
+    """
+    max_batch: int = 8
+    max_wait_us: float = 200.0
+    adaptive: bool = True
+    shard: bool = True
+    latency_window: int = 2048
+
+
+@dataclasses.dataclass
+class _Request:
+    net: object                  # the Session's _Net record
+    x: np.ndarray
+    future: Future
+    t_submit: float
+    group_n: int = 1             # size of the submit_many group this came in
+                                 # with: a pre-formed batch may exceed
+                                 # max_batch and still dispatch as one program
+
+
+def bucket_size(n: int, max_batch: int) -> int:
+    """Smallest power of two >= n, capped at max_batch for coalesced traffic
+    (compile-once shapes); oversize pre-formed groups still round up to a
+    power of two so batch shapes stay drawn from a bounded set."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, max_batch) if n <= max_batch else b
+
+
+def pad_batch(xs: List[np.ndarray], bucket: int) -> np.ndarray:
+    """Stack request inputs into a (bucket, ...) batch, zero-padding the tail
+    lanes.  Padding changes no live lane's bytes — the batch program is
+    lane-independent — so results stay bit-exact."""
+    X = np.stack([np.asarray(x) for x in xs])
+    if X.shape[0] < bucket:
+        pad = np.zeros((bucket - X.shape[0],) + X.shape[1:], X.dtype)
+        X = np.concatenate([X, pad])
+    return X
+
+
+class Scheduler:
+    """Request queue + dispatcher thread behind a ``Session``.
+
+    One scheduler serves all of a session's resident networks; requests for
+    the same network coalesce, requests for different networks dispatch in
+    arrival order without blocking each other past the current batch.
+    """
+
+    def __init__(self, config: Optional[SchedulerConfig] = None):
+        self.config = config or SchedulerConfig()
+        self._queue: "collections.deque[_Request]" = collections.deque()
+        # plain Lock (not the default RLock): the condition is hot on submit
+        self._cond = threading.Condition(threading.Lock())
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+        self._ema_coalesce = 1.0
+        self._mesh = None
+        self._mesh_checked = False
+
+    # -- client side ---------------------------------------------------------
+    def submit(self, net, x: np.ndarray) -> Future:
+        """Enqueue one request against resident network ``net``."""
+        return self.submit_many(net, [x])[0]
+
+    def submit_many(self, net, xs) -> List[Future]:
+        """Enqueue several requests atomically (one lock hold, one wake-up),
+        so a pre-formed batch reaches the dispatcher whole instead of being
+        peeled off a request at a time.  When the group reaches the head of
+        the queue it may exceed ``max_batch`` and still dispatch as one
+        program (explicit ``run_batch`` callers keep the single-program
+        semantics; the cap bounds *coalescing* of independent submits).
+        Under mixed traffic a group queued behind other requests can split
+        across dispatches — results stay bit-exact either way, and batch
+        shapes stay on the power-of-two bucket grid."""
+        now = time.perf_counter()
+        reqs = [_Request(net=net, x=x, future=Future(), t_submit=now,
+                         group_n=len(xs)) for x in xs]
+        with self._cond:
+            if self._stop:
+                raise RuntimeError("scheduler is closed; create a new Session")
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._loop, name="repro-scheduler", daemon=True)
+                self._thread.start()
+            was_empty = not self._queue
+            self._queue.extend(reqs)
+            st = net.stats
+            st.submits += len(reqs)
+            depth = sum(1 for r in self._queue if r.net is net)
+            st.queue_depth_peak = max(st.queue_depth_peak, depth)
+            # wake the dispatcher only on the transitions it acts on — queue
+            # went non-empty, or a full batch is now available.  Intermediate
+            # submits land silently (the dispatcher's hold-wait re-checks on
+            # wake or deadline), avoiding a context switch per request.
+            if was_empty or depth >= self.config.max_batch:
+                self._cond.notify()
+        return [r.future for r in reqs]
+
+    def queue_depth(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    def close(self) -> None:
+        """Stop the dispatcher; pending requests get CancelledError."""
+        with self._cond:
+            self._stop = True
+            pending = list(self._queue)
+            self._queue.clear()
+            self._cond.notify_all()
+        for req in pending:
+            req.future.cancel()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    # -- dispatcher side -----------------------------------------------------
+    def _batch_cap(self, head: _Request) -> int:
+        # a pre-formed submit_many group dispatches whole even past the
+        # config cap, but a backend's declared hard ceiling always wins
+        cap = max(self.config.max_batch, head.group_n)
+        try:
+            backend_max = head.net.executor.capabilities().max_batch
+        except Exception:
+            backend_max = None
+        if backend_max is not None:
+            cap = min(cap, backend_max)
+        return max(cap, 1)
+
+    @staticmethod
+    def _compatible(head: _Request, r: _Request) -> bool:
+        """Requests may share a dispatch: same network AND same input dtype
+        (int8 lanes pass through quantisation; stacking them with float32
+        lanes would promote the batch and re-quantise them — wrong bytes)."""
+        return r.net is head.net and \
+            getattr(r.x, "dtype", None) == getattr(head.x, "dtype", None)
+
+    def _take_same_net(self, batch: List[_Request]) -> None:
+        """Move queued requests compatible with batch[0] into ``batch``
+        (stable order for everyone else), up to the batch cap.  Caller holds
+        the lock."""
+        head, cap = batch[0], self._batch_cap(batch[0])
+        keep: "collections.deque[_Request]" = collections.deque()
+        while self._queue and len(batch) < cap:
+            r = self._queue.popleft()
+            (batch if self._compatible(head, r) else keep).append(r)
+        keep.extend(self._queue)
+        self._queue.clear()
+        self._queue.extend(keep)
+
+    def _collect(self) -> Optional[List[_Request]]:
+        """Block for the next batch: head request + same-net stragglers.
+
+        The head stays queued during the hold so the producer-side full-batch
+        wake-up condition keeps seeing the true depth; the hold ends when a
+        full batch is available or the head has waited ``max_wait_us``.
+        """
+        cfg = self.config
+        with self._cond:
+            while not self._queue and not self._stop:
+                self._cond.wait()
+            if self._stop:
+                return None
+            head = self._queue[0]
+            cap = self._batch_cap(head)
+            hold = not cfg.adaptive or self._ema_coalesce > _COALESCE_THRESHOLD
+            if hold:
+                deadline = head.t_submit + cfg.max_wait_us * 1e-6
+                while not self._stop:
+                    same = sum(1 for r in self._queue
+                               if self._compatible(head, r))
+                    if same >= cap:
+                        break
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(remaining)
+            if self._stop:
+                return None
+            batch = [self._queue.popleft()]
+            self._take_same_net(batch)
+        return batch
+
+    def _lane_sharding(self, lanes_padded: int):
+        """NamedSharding for a shardable batch, or None."""
+        if not self.config.shard:
+            return None
+        if not self._mesh_checked:
+            from repro.distributed import sharding as shard_mod
+            self._mesh = shard_mod.serving_mesh()
+            self._mesh_checked = True
+        if self._mesh is None or lanes_padded % self._mesh.size != 0:
+            return None
+        from repro.distributed import sharding as shard_mod
+        return shard_mod.lane_sharding(self._mesh)
+
+    def _dispatch(self, batch: List[_Request]) -> None:
+        net = batch[0].net
+        ex = net.executor
+        k = len(batch)
+        try:
+            caps = ex.capabilities()
+            if k == 1:
+                res = ex.run(batch[0].x)
+                outs = [res]
+            else:
+                # bucket-pad only for native batch programs (compile-once
+                # shapes); sequential fallbacks would just discard the pad.
+                # The backend's declared hard ceiling bounds even the padded
+                # shape (a non-power-of-two ceiling beats a pow2 bucket).
+                bucket = (bucket_size(k, self.config.max_batch)
+                          if caps.native_batching else k)
+                if caps.max_batch is not None:
+                    bucket = min(bucket, caps.max_batch)
+                padded = pad_batch([r.x for r in batch], bucket)
+                if caps.shardable:
+                    ex.batch_sharding = self._lane_sharding(bucket)
+                res = ex.run_batch(padded, lanes=k)
+                outs = [ExecResult(output_int8=res.output_int8[i],
+                                   output=res.output[i]) for i in range(k)]
+        except BaseException as e:          # noqa: BLE001 — forwarded to callers
+            for r in batch:
+                if not r.future.cancelled():
+                    r.future.set_exception(e)
+            return
+        done = time.perf_counter()
+        st = net.stats
+        st.dispatches += 1
+        st.coalesced_images += k
+        st.coalesce_max = max(st.coalesce_max, k)
+        for r, out in zip(batch, outs):
+            st.latencies_us.append((done - r.t_submit) * 1e6)
+            if not r.future.cancelled():
+                r.future.set_result(out)
+        self._ema_coalesce = ((1 - _EMA_ALPHA) * self._ema_coalesce
+                              + _EMA_ALPHA * k)
+
+    def _loop(self) -> None:
+        while True:
+            batch = self._collect()
+            if batch is None:
+                return
+            self._dispatch(batch)

@@ -1,26 +1,37 @@
 """Serving-side Session API.
 
 A ``Session`` owns one or more compiled networks, each bound to a registered
-executor backend, and serves single inputs (``run``) or batches
-(``run_batch``).  The bare-metal backend keeps its preloaded DRAM arena
-resident on device across calls and executes batches as one vmapped XLA
-program, so steady-state serving pays only the input-surface transfer.
+executor backend, and serves them through an async request queue with
+adaptive micro-batching (``repro.runtime.scheduler``):
 
     art = CompilerPipeline(graph.lenet5()).run()
     ses = Session(art)                       # default backend: baremetal
-    y = ses.run(x)                           # one image
-    ys = ses.run_batch(X)                    # (N, ...) batch, bit-exact vs N runs
+    fut = ses.submit(x)                      # async: Future[ExecResult]
+    y = fut.result()
+    y = ses.run(x)                           # sync sugar over submit
+    ys = ses.run_batch(X)                    # (N, ...) batch, bit-exact vs
+                                             # N sequential runs
 
     ses.load(other_art, backend="linuxstack")  # multi-network residency
     ses.run(x2, net=other_art.graph_name)
 
     ses = Session.from_bundle("bundle_dir/")   # serve a saved bundle,
                                                # no recompilation or VP run
+
+Layering: ``Session`` resolves networks and owns residency; the scheduler
+owns queueing, coalescing, padding and lane masking; backends (anything
+satisfying ``repro.core.executor.ExecutorBackend``) own execution only.
+Concurrent ``submit`` calls against the same network coalesce into one
+vmapped batch program on backends that support native batching — results
+stay bit-exact versus sequential ``run`` calls.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import weakref
+from concurrent.futures import Future
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -28,14 +39,50 @@ import numpy as np
 from repro.core.executor import ExecResult
 from repro.core.pipeline import Artifacts
 from repro.runtime import registry
+from repro.runtime.scheduler import Scheduler, SchedulerConfig
 
 
 @dataclasses.dataclass
 class NetStats:
-    """Per-network serving counters."""
-    calls: int = 0
-    batch_calls: int = 0
+    """Per-network serving counters.
+
+    The first block counts API-level traffic (kept from the pre-scheduler
+    Session); the second block is filled by the scheduler's dispatcher.
+    """
+    calls: int = 0               # Session.run invocations
+    batch_calls: int = 0         # Session.run_batch invocations
     images: int = 0
+    submits: int = 0             # requests enqueued (run/run_batch included)
+    dispatches: int = 0          # coalesced batches executed
+    coalesced_images: int = 0    # requests served through dispatches
+    coalesce_max: int = 0        # largest coalesced batch so far
+    queue_depth_peak: int = 0
+    latencies_us: "collections.deque" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=2048), repr=False)
+
+    @property
+    def coalesce_mean(self) -> float:
+        return self.coalesced_images / self.dispatches if self.dispatches else 0.0
+
+    def latency_us(self, pct: float) -> float:
+        """Submit->result latency percentile (e.g. 50, 90, 99) over the
+        recent-request window; 0.0 before any request completes."""
+        # the dispatcher thread appends concurrently; snapshot with a retry
+        # (deque appends are atomic, but iteration can observe a mutation)
+        for _ in range(8):
+            try:
+                samples = list(self.latencies_us)
+                break
+            except RuntimeError:
+                continue
+        else:
+            samples = []
+        if not samples:
+            return 0.0
+        return float(np.percentile(np.asarray(samples), pct))
+
+    def latency_summary(self) -> Dict[str, float]:
+        return {f"p{p:g}": self.latency_us(p) for p in (50, 90, 99)}
 
 
 @dataclasses.dataclass
@@ -45,16 +92,23 @@ class _Net:
     executor: object
     artifacts: Artifacts
     stats: NetStats = dataclasses.field(default_factory=NetStats)
+    input_elems: Optional[int] = None    # cached expected input size
 
 
 class Session:
     """Multi-network inference session over registered executor backends."""
 
     def __init__(self, artifacts: Optional[Artifacts] = None,
-                 backend: str = "baremetal", name: Optional[str] = None):
+                 backend: str = "baremetal", name: Optional[str] = None,
+                 scheduler: Optional[SchedulerConfig] = None):
         self._nets: Dict[str, _Net] = {}
         self._order: List[str] = []
         self.default_backend = backend
+        self._scheduler = Scheduler(scheduler)
+        # stop the dispatcher thread when the Session is garbage-collected,
+        # so un-close()d sessions don't leak threads for the process lifetime
+        self._finalizer = weakref.finalize(self, Scheduler.close,
+                                           self._scheduler)
         if artifacts is not None:
             self.load(artifacts, name=name, backend=backend)
 
@@ -71,14 +125,29 @@ class Session:
         ex = registry.create(backend, artifacts, **executor_kw)
         if name not in self._nets:
             self._order.append(name)
-        self._nets[name] = _Net(name=name, backend=backend, executor=ex,
-                                artifacts=artifacts)
+        stats = NetStats(latencies_us=collections.deque(
+            maxlen=self._scheduler.config.latency_window))
+        dims = getattr(ex, "input_dims", None)
+        self._nets[name] = _Net(
+            name=name, backend=backend, executor=ex, artifacts=artifacts,
+            stats=stats,
+            input_elems=int(np.prod(dims[1:])) if dims is not None else None)
         return name
 
     def unload(self, name: str) -> None:
         self._resolve(name)
         del self._nets[name]
         self._order.remove(name)
+
+    def close(self) -> None:
+        """Stop the scheduler thread; pending futures are cancelled."""
+        self._scheduler.close()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     @classmethod
     def from_bundle(cls, path, backend: str = "baremetal",
@@ -90,6 +159,10 @@ class Session:
     @property
     def networks(self) -> List[str]:
         return list(self._order)
+
+    @property
+    def scheduler(self) -> Scheduler:
+        return self._scheduler
 
     def _resolve(self, net: Optional[str]) -> _Net:
         if net is None:
@@ -113,24 +186,53 @@ class Session:
         return self._resolve(net).stats
 
     # -- serving -------------------------------------------------------------
-    def run(self, x: np.ndarray, net: Optional[str] = None) -> ExecResult:
-        """One inference on one input image."""
+    def _check_input(self, n: _Net, x) -> np.ndarray:
+        """Fail fast on malformed inputs so one bad submit can never poison
+        the futures of well-formed requests coalesced into the same batch,
+        and canonicalise shape/dtype so every lane of a coalesced batch
+        stacks cleanly: flat, and either int8 (pre-quantised, passed
+        through) or float32 (quantised by the backend).  The scheduler never
+        coalesces int8 with float32 lanes."""
+        x = np.asarray(x)
+        want = n.input_elems
+        if want is not None and (x.dtype == object or x.size != want):
+            raise ValueError(
+                f"bad input for network {n.name!r}: got dtype={x.dtype} "
+                f"size={x.size}, expected {want} elements")
+        if want is not None:
+            if x.dtype != np.int8:
+                x = x.astype(np.float32, copy=False)
+            x = x.reshape(-1)
+        return x
+
+    def submit(self, x: np.ndarray, net: Optional[str] = None) -> "Future[ExecResult]":
+        """Enqueue one inference; returns a Future resolving to its
+        ``ExecResult``.  Concurrent submits against the same network coalesce
+        into one padded vmapped batch (bit-exact vs sequential ``run``)."""
         n = self._resolve(net)
-        res = n.executor.run(x)
+        return self._scheduler.submit(n, self._check_input(n, x))
+
+    def run(self, x: np.ndarray, net: Optional[str] = None) -> ExecResult:
+        """One inference on one input image (synchronous ``submit``)."""
+        n = self._resolve(net)
+        fut = self._scheduler.submit(n, self._check_input(n, x))
         n.stats.calls += 1
         n.stats.images += 1
-        return res
+        return fut.result()
 
     def run_batch(self, X: np.ndarray, net: Optional[str] = None) -> ExecResult:
         """Batched inference over ``X`` of shape ``(N, ...)``.
 
-        Bit-exact (INT8) against N sequential ``run`` calls; on the bare-metal
-        backend the whole batch executes as a single vmapped XLA program over
-        the resident arena.
+        Thin wrapper over N ``submit`` calls: the scheduler coalesces them
+        (together with any other pending requests) into padded vmapped batch
+        programs.  Bit-exact (INT8) against N sequential ``run`` calls.
         """
         X = np.asarray(X)
         n = self._resolve(net)
-        res = n.executor.run_batch(X)
+        futs = self._scheduler.submit_many(
+            n, [self._check_input(n, x) for x in X])
         n.stats.batch_calls += 1
         n.stats.images += int(X.shape[0])
-        return res
+        outs = [f.result() for f in futs]
+        return ExecResult(output_int8=np.stack([o.output_int8 for o in outs]),
+                          output=np.stack([o.output for o in outs]))

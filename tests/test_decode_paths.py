@@ -62,8 +62,8 @@ class TestShardedDecode:
 
     def test_sp_fused_update_semantics(self):
         """Masked in-shard write: update lands exactly at pos (1-device mesh)."""
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"))
         rng = np.random.default_rng(1)
         q = jnp.asarray(rng.normal(0, 1, (2, 4, 1, 16)), jnp.float32)
         k = jnp.asarray(rng.normal(0, 1, (2, 2, 512, 16)), jnp.float32)

@@ -106,6 +106,46 @@ class TestPipeline:
         assert legacy.trace_text == lenet_art.trace_text
         assert legacy.program_binary == lenet_art.program_binary
 
+    def test_disk_cache_hits_across_processes(self, tmp_path, monkeypatch):
+        """Second pipeline (fresh 'process') must load stages from disk —
+        including vp_run — instead of re-executing the VP."""
+        cache = tmp_path / "stagecache"
+        g = _stride_pad_net()
+        art1 = pipeline.CompilerPipeline(g, cache_dir=cache).run()
+        assert list(cache.glob("*.pkl"))
+        pipeline.clear_cache()                  # simulate a new process
+        import repro.core.vp
+        monkeypatch.setattr(repro.core.vp.VirtualPlatform, "run",
+                            lambda *a, **k: pytest.fail("VP re-executed"))
+        art2 = pipeline.CompilerPipeline(_stride_pad_net(),
+                                         cache_dir=cache).run()
+        assert art2.trace_text == art1.trace_text
+        assert art2.weight_image == art1.weight_image
+        assert pipeline.cache_stats()["disk_hits"] >= len(pipeline.STAGE_NAMES)
+        assert pipeline.cache_stats()["misses"] == 0
+
+    def test_disk_cache_eviction_cap(self, tmp_path):
+        cache = tmp_path / "tiny"
+        pipeline.clear_cache()
+        pipeline.CompilerPipeline(_stride_pad_net(), cache_dir=cache,
+                                  cache_dir_max_bytes=0).run()
+        assert list(cache.glob("*.pkl")) == []   # everything evicted
+        cache2 = tmp_path / "big"
+        pipeline.clear_cache()
+        pipeline.CompilerPipeline(_stride_pad_net(), cache_dir=cache2).run()
+        assert len(list(cache2.glob("*.pkl"))) == len(pipeline.STAGE_NAMES)
+
+    def test_disk_cache_corrupt_entry_is_miss(self, tmp_path):
+        cache = tmp_path / "c"
+        pipeline.CompilerPipeline(_stride_pad_net(), cache_dir=cache).run()
+        for f in cache.glob("*.pkl"):
+            f.write_bytes(b"\x80garbage")
+        pipeline.clear_cache()
+        art = pipeline.CompilerPipeline(_stride_pad_net(),
+                                        cache_dir=cache).run()
+        assert art.trace.n_writes > 0            # recomputed fine
+        assert pipeline.cache_stats()["disk_hits"] == 0
+
 
 # ---------------------------------------------------------------------------
 # Artifacts bundle: save/load round-trip, no recompilation
@@ -134,6 +174,34 @@ class TestBundle:
     def test_load_rejects_non_bundle(self, tmp_path):
         with pytest.raises(FileNotFoundError, match="not an artifact bundle"):
             pipeline.Artifacts.load(tmp_path)
+
+    def test_load_truncated_weight_image(self, lenet_art, tmp_path):
+        b = lenet_art.save(tmp_path / "b")
+        img = b / "weights.img"
+        img.write_bytes(img.read_bytes()[:-16])
+        with pytest.raises(ValueError, match="truncated weight image"):
+            pipeline.Artifacts.load(b)
+
+    def test_load_manifest_version_mismatch(self, lenet_art, tmp_path):
+        import json
+        b = lenet_art.save(tmp_path / "b")
+        m = json.loads((b / "manifest.json").read_text())
+        m["format"] = 99
+        (b / "manifest.json").write_text(json.dumps(m))
+        with pytest.raises(ValueError, match="unsupported bundle format"):
+            pipeline.Artifacts.load(b)
+
+    def test_load_corrupt_manifest(self, lenet_art, tmp_path):
+        b = lenet_art.save(tmp_path / "b")
+        (b / "manifest.json").write_text("{not json at all")
+        with pytest.raises(ValueError, match="corrupt manifest"):
+            pipeline.Artifacts.load(b)
+
+    def test_load_missing_weight_image(self, lenet_art, tmp_path):
+        b = lenet_art.save(tmp_path / "b")
+        (b / "weights.img").unlink()
+        with pytest.raises(FileNotFoundError, match="weights.img"):
+            pipeline.Artifacts.load(b)
 
 
 # ---------------------------------------------------------------------------
@@ -241,14 +309,43 @@ class TestRegistry:
             api.make_executor(lenet_art, "typo")
 
     def test_custom_backend_decorator(self, lenet_art):
+        from repro.core.executor import ExecutorCapabilities
+
+        class _Echo:
+            def __init__(self, art):
+                self.name = art.graph_name
+
+            def run(self, x):
+                return ("echo", self.name)
+
+            def run_batch(self, X, lanes=None):
+                return ("echo-batch", self.name)
+
+            def capabilities(self):
+                return ExecutorCapabilities()
+
         @register_backend("echo-test")
         def _echo(art, **kw):
-            return ("echo", art.graph_name)
+            return _Echo(art)
         try:
-            assert create_executor("echo-test", lenet_art) == ("echo", "lenet5")
+            ex = create_executor("echo-test", lenet_art)
+            assert ex.run(None) == ("echo", "lenet5")
         finally:
             from repro.runtime import registry
             registry._BACKENDS.pop("echo-test", None)
+
+    def test_nonconforming_backend_rejected(self, lenet_art):
+        """Factories must return ExecutorBackend-conformant objects; anything
+        else is rejected at create() time with the missing methods named."""
+        @register_backend("broken-test")
+        def _broken(art, **kw):
+            return ("not", "an", "executor")
+        try:
+            with pytest.raises(TypeError, match="ExecutorBackend.*missing"):
+                create_executor("broken-test", lenet_art)
+        finally:
+            from repro.runtime import registry
+            registry._BACKENDS.pop("broken-test", None)
 
     def test_make_executor_shim_warns_and_works(self, lenet_art):
         x = np.random.default_rng(9).normal(0, 1, (1, 28, 28)).astype(np.float32)

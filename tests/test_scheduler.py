@@ -1,0 +1,263 @@
+"""Scheduler tests: submit/future parity, coalescing, padding, sharding.
+
+The acceptance bar: N concurrent ``submit()`` calls must be bit-exact versus
+N sequential ``run()`` calls on both the ``baremetal`` and ``ref`` backends,
+with padding/lane-masking living in the scheduler rather than the executors.
+"""
+
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import graph, pipeline
+from repro.runtime import (Session, SchedulerConfig, create_executor)
+from repro.runtime.scheduler import bucket_size, pad_batch
+
+
+def _tiny_net() -> graph.NetGraph:
+    g = graph.NetGraph("tiny", (2, 8, 8))
+    g.layer(name="data", type="input", inputs=[])
+    x = g.layer(name="c1", type="conv", inputs=["data"], out_channels=4,
+                kernel=3, pad=1, relu=True)
+    x = g.layer(name="p1", type="pool", inputs=[x], pool_mode="gap")
+    g.layer(name="fc", type="fc", inputs=[x], out_channels=3)
+    return g.infer_shapes()
+
+
+@pytest.fixture(scope="module")
+def tiny_art():
+    return pipeline.CompilerPipeline(_tiny_net()).run()
+
+
+@pytest.fixture(scope="module")
+def tiny_inputs():
+    rng = np.random.default_rng(11)
+    return rng.normal(0, 1, (8, 2, 8, 8)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Padding / bucketing units (scheduler-owned, backends never see the policy)
+# ---------------------------------------------------------------------------
+class TestPadding:
+    def test_bucket_size_powers_of_two(self):
+        assert [bucket_size(n, 8) for n in (1, 2, 3, 4, 5, 8)] == \
+            [1, 2, 4, 4, 8, 8]
+
+    def test_bucket_size_over_max(self):
+        # pre-formed oversize batches still land on power-of-two shapes
+        assert bucket_size(13, 8) == 16
+        assert bucket_size(16, 8) == 16
+
+    def test_pad_batch_zero_fills_tail(self):
+        xs = [np.full((2, 2), i, np.float32) for i in range(3)]
+        P = pad_batch(xs, 4)
+        assert P.shape == (4, 2, 2)
+        assert (P[3] == 0).all() and (P[2] == 2).all()
+
+
+# ---------------------------------------------------------------------------
+# Parity: concurrent submits == sequential runs (acceptance criterion)
+# ---------------------------------------------------------------------------
+class TestSubmitParity:
+    @pytest.mark.parametrize("backend", ["baremetal", "ref"])
+    def test_concurrent_submits_bitexact_vs_sequential(self, backend, tiny_art,
+                                                       tiny_inputs):
+        ex = create_executor(backend, tiny_art)
+        seq = np.stack([ex.run(x).output_int8 for x in tiny_inputs])
+        with Session(tiny_art, backend=backend,
+                     scheduler=SchedulerConfig(max_batch=8,
+                                               max_wait_us=2000.0)) as ses:
+            n = len(tiny_inputs)
+            futs = [None] * n
+            barrier = threading.Barrier(n)
+
+            def go(i):
+                barrier.wait()
+                futs[i] = ses.submit(tiny_inputs[i])
+
+            ts = [threading.Thread(target=go, args=(i,)) for i in range(n)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            got = np.stack([f.result(timeout=120).output_int8 for f in futs])
+            np.testing.assert_array_equal(got, seq)
+            st = ses.stats()
+            assert st.submits == n
+            assert st.dispatches >= 1
+            assert st.coalesced_images == n
+
+    def test_run_batch_is_thin_wrapper_over_submit(self, tiny_art, tiny_inputs):
+        """run_batch == scheduler-coalesced submits == sequential runs, for a
+        non-power-of-two N (exercises padding + lane masking)."""
+        with Session(tiny_art) as ses:
+            X = tiny_inputs[:5]                   # pads to bucket 8, lanes 5
+            out = ses.run_batch(X)
+            seq = np.stack([ses.run(x).output_int8 for x in X])
+            assert out.output_int8.shape == (5, tiny_art.output_elems)
+            np.testing.assert_array_equal(out.output_int8, seq)
+            assert ses.stats().batch_calls == 1
+
+    def test_preformed_batch_exceeds_max_batch_as_one_dispatch(self, tiny_art,
+                                                               tiny_inputs):
+        """max_batch caps *coalescing of independent submits*; an explicit
+        run_batch group dispatches whole as a single program (PR 1 parity)."""
+        X = np.concatenate([tiny_inputs, tiny_inputs])    # N=16
+        with Session(tiny_art,
+                     scheduler=SchedulerConfig(max_batch=4)) as ses:
+            out = ses.run_batch(X)
+            st = ses.stats()
+            assert st.dispatches == 1 and st.coalesce_max == 16
+            seq = np.stack([ses.run(x).output_int8 for x in X])
+            np.testing.assert_array_equal(out.output_int8, seq)
+
+    def test_mixed_dtype_submits_never_share_a_batch(self, tiny_art,
+                                                     tiny_inputs):
+        """Pre-quantised int8 submits must not be stacked with float32 ones
+        (promotion would re-quantise the int8 lanes): each dtype dispatches
+        separately, and every result matches its sequential run."""
+        from repro.core import quant
+        ex = create_executor("baremetal", tiny_art)
+        xf = [tiny_inputs[0], tiny_inputs[1]]
+        xi = [quant.quantize_act(x, tiny_art.input_scale) for x in
+              (tiny_inputs[2], tiny_inputs[3])]
+        want = [ex.run(x).output_int8 for x in xf + xi]
+        with Session(tiny_art,
+                     scheduler=SchedulerConfig(max_batch=4,
+                                               max_wait_us=2000.0)) as ses:
+            futs = [ses.submit(x) for x in xf + xi]
+            got = [f.result(timeout=120).output_int8 for f in futs]
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+
+    def test_solo_submit_uses_single_image_path(self, tiny_art, tiny_inputs):
+        with Session(tiny_art) as ses:
+            res = ses.submit(tiny_inputs[0]).result(timeout=120)
+            ref = create_executor("baremetal", tiny_art).run(tiny_inputs[0])
+            np.testing.assert_array_equal(res.output_int8, ref.output_int8)
+            st = ses.stats()
+            assert st.dispatches == 1 and st.coalesce_max == 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduler behaviour: multi-net isolation, stats, errors, shutdown
+# ---------------------------------------------------------------------------
+class TestSchedulerBehaviour:
+    def test_different_nets_never_coalesce(self, tiny_art, tiny_inputs):
+        with Session(tiny_art, name="a") as ses:
+            ses.load(tiny_art, name="b", backend="ref")
+            futs_a = [ses.submit(x, net="a") for x in tiny_inputs[:3]]
+            futs_b = [ses.submit(x, net="b") for x in tiny_inputs[:3]]
+            got_a = np.stack([f.result(timeout=120).output_int8 for f in futs_a])
+            got_b = np.stack([f.result(timeout=120).output_int8 for f in futs_b])
+            np.testing.assert_array_equal(got_a, got_b)   # same art, both exact
+            assert ses.stats("a").coalesce_max <= 3
+            assert ses.stats("b").coalesce_max <= 3
+            assert ses.stats("a").coalesced_images == 3
+            assert ses.stats("b").coalesced_images == 3
+
+    def test_latency_percentiles_recorded(self, tiny_art, tiny_inputs):
+        with Session(tiny_art) as ses:
+            ses.run_batch(tiny_inputs)
+            st = ses.stats()
+            s = st.latency_summary()
+            assert set(s) == {"p50", "p90", "p99"}
+            assert 0 < s["p50"] <= s["p90"] <= s["p99"]
+            assert len(st.latencies_us) == len(tiny_inputs)
+
+    def test_bad_input_rejected_at_submit(self, tiny_art):
+        """Malformed inputs fail fast at submit() — they never reach the
+        queue, so they can't poison futures coalesced into the same batch."""
+        with Session(tiny_art) as ses:
+            with pytest.raises(ValueError, match="bad input"):
+                ses.submit(None)                          # not an array at all
+            with pytest.raises(ValueError, match="expected 128 elements"):
+                ses.submit(np.zeros((3, 3), np.float32))  # wrong size
+            # the session keeps serving after rejected submits
+            ok = ses.run(np.zeros((2, 8, 8), np.float32))
+            assert ok.output_int8.shape == (tiny_art.output_elems,)
+
+    def test_backend_max_batch_ceiling_enforced(self, tiny_art, tiny_inputs):
+        """capabilities().max_batch is a hard per-dispatch ceiling, even for
+        pre-formed run_batch groups."""
+        with Session(tiny_art) as ses:
+            ex = ses.executor()
+            from repro.core.executor import ExecutorCapabilities
+            caps = ex.capabilities()
+            ex.capabilities = lambda: ExecutorCapabilities(
+                native_batching=caps.native_batching, shardable=False,
+                resident_arena=caps.resident_arena, max_batch=2)
+            out = ses.run_batch(tiny_inputs)              # N=8, ceiling 2
+            st = ses.stats()
+            assert st.coalesce_max <= 2 and st.dispatches >= 4
+            seq = np.stack([ses.run(x).output_int8 for x in tiny_inputs])
+            np.testing.assert_array_equal(out.output_int8, seq)
+
+    def test_close_cancels_pending_and_stops(self, tiny_art):
+        ses = Session(tiny_art)
+        ses.run(np.zeros((2, 8, 8), np.float32))          # spin up dispatcher
+        ses.close()
+        assert ses.scheduler.queue_depth() == 0
+        with pytest.raises(RuntimeError, match="scheduler is closed"):
+            ses.submit(np.zeros((2, 8, 8), np.float32))
+
+    def test_capabilities_drive_policy_not_names(self, tiny_art):
+        bm = create_executor("baremetal", tiny_art).capabilities()
+        assert bm.native_batching and bm.resident_arena and bm.shardable
+        ref = create_executor("ref", tiny_art).capabilities()
+        assert not ref.native_batching and not ref.shardable
+
+
+# ---------------------------------------------------------------------------
+# Multi-device lane sharding (dispatcher + distributed.sharding helpers)
+# ---------------------------------------------------------------------------
+class TestLaneSharding:
+    def test_single_device_mesh_is_none(self):
+        from repro.distributed import sharding
+        if len(__import__("jax").devices()) == 1:
+            assert sharding.serving_mesh() is None
+        assert sharding.serving_mesh(max_devices=1) is None
+
+    def test_sharded_dispatch_parity_subprocess(self):
+        """4 forced host devices: a coalesced batch dispatches with its lane
+        axis sharded over the data mesh, bit-exact vs sequential runs."""
+        code = """
+import numpy as np
+from repro.core import graph, pipeline
+from repro.distributed import sharding
+from repro.runtime import Session, SchedulerConfig, create_executor
+
+g = graph.NetGraph("tiny", (2, 8, 8))
+g.layer(name="data", type="input", inputs=[])
+x = g.layer(name="c1", type="conv", inputs=["data"], out_channels=4,
+            kernel=3, pad=1, relu=True)
+x = g.layer(name="p1", type="pool", inputs=[x], pool_mode="gap")
+g.layer(name="fc", type="fc", inputs=[x], out_channels=3)
+art = pipeline.CompilerPipeline(g.infer_shapes()).run()
+
+mesh = sharding.serving_mesh()
+assert mesh is not None and mesh.size == 4, mesh
+X = np.random.default_rng(0).normal(0, 1, (4, 2, 8, 8)).astype(np.float32)
+seq = np.stack([create_executor("baremetal", art).run(x).output_int8
+                for x in X])
+ses = Session(art, scheduler=SchedulerConfig(max_batch=4))
+out = ses.run_batch(X)
+np.testing.assert_array_equal(out.output_int8, seq)
+assert ses.executor().batch_sharding is not None   # dispatcher sharded lanes
+print("SHARDED-PARITY-OK")
+"""
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=4",
+                   PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+        r = subprocess.run([sys.executable, "-c", code], env=env, cwd=_repo_root(),
+                           capture_output=True, text=True, timeout=600)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "SHARDED-PARITY-OK" in r.stdout
+
+
+def _repo_root():
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
