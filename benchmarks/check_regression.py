@@ -1,0 +1,131 @@
+"""Perf-regression gate: fresh BENCH_*.json vs the committed baselines.
+
+    PYTHONPATH=src python benchmarks/check_regression.py --new bench
+        [--baseline benchmarks] [--tolerance 0.15] [--update]
+
+Each committed ``benchmarks/BENCH_table<N>.json`` is compared row-by-row
+(matched on ``name``) against the same file in ``--new`` (written by
+``benchmarks.run --smoke --out <dir>``).  A row whose measured
+``us_per_call`` exceeds baseline * (1 + tolerance) fails the gate, so the
+perf trajectory is recorded in-tree and guarded in CI.  ``--update`` rewrites
+the baselines from the fresh run instead (use after an intentional change,
+and commit the result).
+
+Only tables with a committed baseline participate — add a table by committing
+its JSON.  Rows present only on one side are reported but never fail: new
+benchmarks shouldn't need a lockstep baseline commit to land.
+
+``--normalize`` (CI mode) divides every row's ratio by the median ratio
+across all rows, treating it as a machine-speed factor.  Known limitation:
+a regression hitting the *majority* of baselined rows shifts the median and
+masks itself — the gate is a per-row relative guard, not an absolute one.
+The factor is printed (with a warning when it exceeds the tolerance) so a
+uniform shift is visible in the CI log even when the gate passes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import shutil
+import sys
+
+
+def load_rows(path: pathlib.Path):
+    data = json.loads(path.read_text())
+    return {r["name"]: r for r in data.get("rows", [])}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=str(pathlib.Path(__file__).parent),
+                    help="directory with committed BENCH_*.json baselines")
+    ap.add_argument("--new", required=True,
+                    help="directory with freshly measured BENCH_*.json")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get(
+                        "BENCH_REGRESSION_TOLERANCE", "0.15")),
+                    help="allowed per-row us_per_call growth (0.15 = +15%%; "
+                         "default overridable via $BENCH_REGRESSION_TOLERANCE)")
+    ap.add_argument("--normalize", action="store_true",
+                    help="divide each row's ratio by the median ratio across "
+                         "all rows (a machine-speed factor), so the gate "
+                         "flags rows that regressed relative to the rest — "
+                         "robust when CI hardware differs from the machine "
+                         "that produced the committed baselines")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baselines from --new instead of checking")
+    args = ap.parse_args()
+
+    base_dir = pathlib.Path(args.baseline)
+    new_dir = pathlib.Path(args.new)
+    baselines = sorted(base_dir.glob("BENCH_table*.json"))
+    if not baselines:
+        print(f"no BENCH_table*.json baselines in {base_dir}", file=sys.stderr)
+        return 2
+
+    # pass 1: collect per-row ratios across every baselined table
+    rows = []                                    # (name, base_us, new_us)
+    failures, checked = [], 0
+    for bfile in baselines:
+        nfile = new_dir / bfile.name
+        if not nfile.exists():
+            print(f"WARN {bfile.name}: no fresh measurement in {new_dir}")
+            continue
+        if args.update:
+            shutil.copyfile(nfile, bfile)
+            print(f"updated baseline {bfile}")
+            continue
+        base_rows, new_rows = load_rows(bfile), load_rows(nfile)
+        for name, brow in sorted(base_rows.items()):
+            nrow = new_rows.get(name)
+            if nrow is None:
+                print(f"WARN {name}: row missing from fresh run")
+                continue
+            rows.append((name, brow["us_per_call"], nrow["us_per_call"]))
+        for name in sorted(set(new_rows) - set(base_rows)):
+            print(f"NEW  {name}: {new_rows[name]['us_per_call']:.1f}us "
+                  f"(no baseline — commit --update output to start tracking)")
+
+    # pass 2: gate, optionally normalizing out the machine-speed factor
+    scale = 1.0
+    if rows and args.normalize:
+        ratios = sorted(n / b for _, b, n in rows if b)
+        mid = len(ratios) // 2
+        # true median: with an even count, average the two middle elements —
+        # taking the upper-middle would let a regressed pair elect itself as
+        # the machine-speed factor and mask its own regression
+        scale = (ratios[mid] if len(ratios) % 2
+                 else (ratios[mid - 1] + ratios[mid]) / 2.0)
+        print(f"machine-speed factor (median ratio): {scale:.3f}")
+        if scale > 1.0 + args.tolerance:
+            # normalization cannot distinguish "slower machine" from "uniform
+            # regression across a majority of rows" — surface it rather than
+            # silently absorbing it into the scale factor
+            print(f"WARN every-row shift of {scale - 1.0:+.1%} absorbed as "
+                  f"machine speed; if this is the same hardware that "
+                  f"produced the baselines, investigate a global regression")
+    for name, b_us, n_us in rows:
+        ratio = (n_us / b_us / scale) if b_us else float("inf")
+        checked += 1
+        status = "OK"
+        if ratio > 1.0 + args.tolerance:
+            status = "FAIL"
+            failures.append(name)
+        print(f"{status:4s} {name}: {n_us:.1f}us vs baseline {b_us:.1f}us "
+              f"({ratio - 1.0:+.1%}{' normalized' if args.normalize else ''})")
+
+    if args.update:
+        return 0
+    if failures:
+        print(f"\n{len(failures)} row(s) regressed past +{args.tolerance:.0%}: "
+              f"{', '.join(failures)}", file=sys.stderr)
+        return 1
+    print(f"\nall {checked} baselined rows within +{args.tolerance:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

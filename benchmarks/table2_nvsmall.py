@@ -17,7 +17,7 @@ import time
 
 import numpy as np
 
-from repro.core import graph
+from repro.core import graph, perfmodel
 from repro.core.pipeline import CompilerPipeline
 from repro.runtime import Session
 
@@ -36,6 +36,81 @@ def _time_run(ses: Session, x, iters: int, net: str) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _layer_profile(art, total_us: float, top: int = 3):
+    """Per-layer breakdown from the kernel plan + cycle model.
+
+    The cycle model gives each layer's share of modeled time; applying that
+    share to the *measured* per-image latency yields a per-layer time estimate
+    next to the kernel that serves it — the profile future kernel work aims at.
+    """
+    rows = art.cost.layer_breakdown()
+    for r in rows:
+        r["est_us"] = total_us * r["share"]
+    summary = " ".join(
+        f"{r['layer']}:{r['kernel'] or r['unit'].lower()}"
+        f"[K={r['contract_k']}x{r['k_tiles']}t]={r['est_us']:.0f}us"
+        for r in rows[:top] if r["unit"] in ("CONV", "FC"))
+    return rows, summary
+
+
+def _largeK_ab(art, iters: int = 10, batch: int = 8):
+    """A/B the large-K (> EXACT_K) CONV/FC GEMMs: scalar integer dot_general
+    (the pre-kernel-engine fallback, kept here only as the comparison arm)
+    vs the tiled-exact kernel the plan selected.
+
+    Measures both executor paths — solo (one image: GEMV-shaped layers are
+    weight-bandwidth-bound, where int8 streaming is at parity) and the
+    vmapped batch-``batch`` program (the scheduler's coalesced hot path,
+    where lanes widen the GEMM and the f32 units win outright).  Returns
+    ``(solo_speedup, batch_speedup)`` as old/new ratios, or ``(0, 0)`` when
+    the network has no large-K layer.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import engine
+    from repro.core.executor import _dot_i8
+
+    descs = engine.decode_descriptors(art.trace.commands)
+    rng = np.random.default_rng(0)
+    dn = (((1,), (0,)), ((), ()))
+    t = {"solo_old": 0.0, "solo_new": 0.0, "batch_old": 0.0, "batch_new": 0.0}
+    seen = set()
+    for d in descs:
+        kdim = perfmodel.contract_k(d)
+        if kdim <= perfmodel.EXACT_K:
+            continue
+        _, kout, p, q = d.dst_dims
+        if (kout, kdim, p * q) in seen:      # identical GEMM shape: same time
+            continue
+        seen.add((kout, kdim, p * q))
+        w = jnp.asarray(rng.integers(-128, 128, (kout, kdim), dtype=np.int8))
+        cols = jnp.asarray(
+            rng.integers(-128, 128, (batch, kdim, p * q), dtype=np.int8))
+
+        def one_old(c):
+            return jax.lax.dot_general(w, c, dn,
+                                       preferred_element_type=jnp.int32)
+
+        def one_new(c, kd=kdim):
+            return _dot_i8(w, c, dn, kd)
+
+        arms = {
+            "solo_old": jax.jit(one_old), "solo_new": jax.jit(one_new),
+            "batch_old": jax.jit(jax.vmap(one_old)),
+            "batch_new": jax.jit(jax.vmap(one_new)),
+        }
+        for name, f in arms.items():
+            x = cols[0] if name.startswith("solo") else cols
+            f(x).block_until_ready()                # compile
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                f(x).block_until_ready()
+            t[name] += (time.perf_counter() - t0) / iters
+    if not seen:
+        return 0.0, 0.0
+    return t["solo_old"] / t["solo_new"], t["batch_old"] / t["batch_new"]
+
+
 def run(fast: bool = False):
     rows = []
     models = MODELS[:2] if fast else MODELS
@@ -49,6 +124,11 @@ def run(fast: bool = False):
         bm_us = _time_run(ses, x, iters, net="bm")
         ls_us = _time_run(ses, x, iters, net="ls")
         modeled_ms = art.cost.ms_at_clock
+        kernels = ses.executor("bm").capabilities().kernels
+        layers, top_layers = _layer_profile(art, bm_us)
+        solo_ab, batch_ab = _largeK_ab(art)
+        largek = (f"largeK_batch8_speedup={batch_ab:.2f}x "
+                  f"largeK_solo_speedup={solo_ab:.2f}x ") if batch_ab else ""
         rows.append({
             "name": f"table2_nvsmall/{name}",
             "us_per_call": bm_us,
@@ -57,6 +137,10 @@ def run(fast: bool = False):
                         f"modeled_ms@100MHz={modeled_ms:.1f} "
                         f"paper_ms={PAPER_MS[name]} "
                         f"model_ratio={modeled_ms/PAPER_MS[name]:.2f} "
-                        f"dominant={art.cost.dominant()}"),
+                        f"dominant={art.cost.dominant()} "
+                        f"kernels={'+'.join(kernels)} "
+                        f"{largek}"
+                        f"top_layers=[{top_layers}]"),
+            "layers": layers,
         })
     return rows

@@ -20,111 +20,109 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Protocol, runtime_checkable
+from typing import Dict, List, Optional, Protocol, Sequence, Union, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, quant
+from repro.core import engine, intmath, perfmodel, quant
 from repro.core.tracegen import Trace
+from repro.kernels import int8_conv
 
 
 # ---------------------------------------------------------------------------
-# jnp twins of the integer engine semantics (bit-exact vs core/refops.py)
+# jnp twins of the integer engine semantics (bit-exact vs core/refops.py) —
+# one shared copy in core/intmath.py, also used by the Pallas kernel family
 # ---------------------------------------------------------------------------
-def _rha_shift(x, k):
-    """Round-half-away right shift (int32)."""
-    k = jnp.asarray(k, jnp.int32)
-    half = jnp.where(k > 0, jnp.left_shift(jnp.int32(1), jnp.maximum(k - 1, 0)), 0)
-    mag = jnp.abs(x) + half
-    return jnp.sign(x) * jnp.right_shift(mag, k)
+_rha_shift = intmath.rha_shift
+_apply_scale = intmath.apply_scale
+_unpack_words = intmath.unpack_words
+_clip8 = intmath.clip8
 
 
-def _apply_scale(x, m, pre, post):
-    t = _rha_shift(x, pre)
-    return _rha_shift(t * m, post)
+def _dot_i8_f32(a, b, dnums):
+    """One exact f32 GEMM tile -> int32 (caller guarantees K <= EXACT_K)."""
+    # Precision.HIGHEST forces true f32 accumulation — the default matmul
+    # precision is tf32/bf16 on GPU/TPU, which would break the exactness
+    # proof (products need 15 significand bits).
+    acc = jax.lax.dot_general(a.astype(jnp.float32), b.astype(jnp.float32),
+                              dnums, preferred_element_type=jnp.float32,
+                              precision=jax.lax.Precision.HIGHEST)
+    return acc.astype(jnp.int32)
 
 
-def _unpack_words(words_i32):
-    """uint32 scale words (bitcast to int32) -> (m, pre, post) int32 arrays."""
-    w = words_i32
-    m = jnp.right_shift(w, 16) & 0xFFFF            # arithmetic shift ok: masked
-    m = jnp.where(m >= 0x8000, m - 0x10000, m)
-    pre = jnp.right_shift(w, 8) & 0xFF
-    post = w & 0xFF
-    return m, pre, post
-
-
-def _clip8(x):
-    return jnp.clip(x, -128, 127).astype(jnp.int8)
-
-
-def _dot_i8(a, b, dnums, contract_k: int):
-    """int8 x int8 -> int32 dot_general, via f32 when provably bit-exact.
+def _dot_i8(a, b, dnums, contract_k: int,
+            kernel: str = perfmodel.KERNEL_GEMM_TILED):
+    """int8 x int8 -> int32 dot_general on the wide f32 units, exact for ANY K.
 
     XLA CPU lowers integer GEMMs to scalar loops; the f32 units are far wider.
-    Every int8*int8 product has magnitude <= 128*128 = 16384 (both operands can
-    be -128), so as long as the worst-case accumulator K * 16384 stays within
+    Every int8*int8 product has magnitude <= 128*128 = 16384 (both operands
+    can be -128), so while the worst-case partial sum K * 16384 stays within
     2^24 every partial sum is an exactly representable f32 integer regardless
     of summation order — the float GEMM returns bit-identical int32
-    accumulators.  Larger contractions keep the integer path.
+    accumulators.  For K > EXACT_K (= 1024) the contraction is split into
+    K-tiles that each satisfy the bound; each tile's f32 accumulator converts
+    to int32 exactly and the tiles are summed in int32, which cannot overflow
+    (the true accumulator already fits int32 by the engine's design).  The
+    scalar integer ``dot_general`` path no longer exists.
     """
-    if contract_k * 128 * 128 <= (1 << 24):
-        # Precision.HIGHEST forces true f32 accumulation — the default matmul
-        # precision is tf32/bf16 on GPU/TPU, which would break the exactness
-        # proof (products need 15 significand bits).
-        acc = jax.lax.dot_general(a.astype(jnp.float32), b.astype(jnp.float32),
-                                  dnums, preferred_element_type=jnp.float32,
-                                  precision=jax.lax.Precision.HIGHEST)
-        return acc.astype(jnp.int32)
-    return jax.lax.dot_general(a, b, dnums, preferred_element_type=jnp.int32)
+    if contract_k <= perfmodel.EXACT_K:
+        return _dot_i8_f32(a, b, dnums)
+    if kernel == perfmodel.KERNEL_GEMM_EXACT:
+        raise ValueError(f"gemm_f32_exact forced for K={contract_k} > "
+                         f"{perfmodel.EXACT_K}: not bit-exact")
+    (ca,), (cb,) = dnums[0]
+    acc = None
+    for lo in range(0, contract_k, perfmodel.EXACT_K):
+        hi = min(lo + perfmodel.EXACT_K, contract_k)
+        part = _dot_i8_f32(jax.lax.slice_in_dim(a, lo, hi, axis=ca),
+                           jax.lax.slice_in_dim(b, lo, hi, axis=cb), dnums)
+        acc = part if acc is None else acc + part
+    return acc
 
 
-def _im2col(x, k, stride, pad):
-    """(C,H,W) int8 -> (C*k*k, P*Q) int8, static shapes."""
-    c, h, w = x.shape
-    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
-    p = (h + 2 * pad - k) // stride + 1
-    q = (w + 2 * pad - k) // stride + 1
-    cols = []
-    for r in range(k):
-        for s in range(k):
-            cols.append(xp[:, r:r + stride * p:stride, s:s + stride * q:stride])
-    return jnp.stack(cols, 1).reshape(c * k * k, p * q)
+def _pallas_interpret() -> bool:
+    """Run the fused kernels through the Pallas interpreter off-TPU."""
+    return jax.default_backend() != "tpu"
 
 
-def _conv_int8(x, wq, bias, words, k, stride, pad, groups, relu):
+_im2col = intmath.im2col
+
+
+def _conv_int8(x, wq, bias, words, k, stride, pad, groups, relu,
+               kernel: str = perfmodel.KERNEL_GEMM_TILED):
+    if kernel == perfmodel.KERNEL_PALLAS:
+        # whole CONV->SDP pipeline fused in the Pallas kernel (epilogue
+        # included) — the int32 accumulator never leaves VMEM
+        return int8_conv.conv2d_int8(x, wq, bias, words, k, stride, pad,
+                                     groups, relu, interpret=_pallas_interpret())
     kk = wq.shape[0]
     c, h, w_in = x.shape
     p = (h + 2 * pad - k) // stride + 1
     q = (w_in + 2 * pad - k) // stride + 1
     if groups == 1:
         cols = _im2col(x, k, stride, pad)
-        acc = _dot_i8(wq, cols, (((1,), (0,)), ((), ())), c * k * k)
+        acc = _dot_i8(wq, cols, (((1,), (0,)), ((), ())), c * k * k, kernel)
     else:
         cg, kg = c // groups, kk // groups
         xg = x.reshape(groups, cg, h, w_in)
         colsg = jax.vmap(lambda xx: _im2col(xx, k, stride, pad))(xg)
         wg = wq.reshape(groups, kg, cg * k * k)
-        acc = _dot_i8(wg, colsg, (((2,), (1,)), ((0,), (0,))), cg * k * k)
+        acc = _dot_i8(wg, colsg, (((2,), (1,)), ((0,), (0,))), cg * k * k,
+                      kernel)
         acc = acc.reshape(kk, p * q)
-    acc = acc + bias[:, None]
-    m, pre, post = _unpack_words(words)
-    out = _apply_scale(acc, m[:, None], pre[:, None], post[:, None])
-    if relu:
-        out = jnp.maximum(out, 0)
-    return _clip8(out).reshape(kk, p, q)
+    return intmath.row_epilogue(acc, bias, words, relu).reshape(kk, p, q)
 
 
-def _fc_int8(x, wq, bias, words, relu):
-    acc = _dot_i8(wq, x.reshape(-1), (((1,), (0,)), ((), ())),
-                  int(wq.shape[1])) + bias
-    m, pre, post = _unpack_words(words)
-    out = _apply_scale(acc, m, pre, post)
-    if relu:
-        out = jnp.maximum(out, 0)
-    return _clip8(out).reshape(-1, 1, 1)
+def _fc_int8(x, wq, bias, words, relu,
+             kernel: str = perfmodel.KERNEL_GEMM_TILED):
+    if kernel == perfmodel.KERNEL_PALLAS:
+        return int8_conv.fc_int8(x.reshape(-1), wq, bias, words, relu,
+                                 interpret=_pallas_interpret())
+    acc = _dot_i8(wq, x.reshape(-1, 1), (((1,), (0,)), ((), ())),
+                  int(wq.shape[1]), kernel)
+    return intmath.row_epilogue(acc, bias, words, relu).reshape(-1, 1, 1)
 
 
 def _pool_int8(x, kern, stride, pad, mode, scale_word):
@@ -168,7 +166,8 @@ def _surface_bytes(dims, elem_bytes: int) -> int:
     return c * h * w * elem_bytes
 
 
-def _op_from_descriptor(d: engine.Descriptor, base: int, elem_bytes: int):
+def _op_from_descriptor(d: engine.Descriptor, base: int, elem_bytes: int,
+                        kernel: str = perfmodel.KERNEL_GEMM_TILED):
     """Build f(arena)->arena for one descriptor (addresses become static offsets)."""
     _, c, h, w = d.src_dims
     _, k, p, q = d.dst_dims
@@ -194,9 +193,10 @@ def _op_from_descriptor(d: engine.Descriptor, base: int, elem_bytes: int):
             bias = read_i32(arena, bo, k)
             words = read_i32(arena, sco, k)
             if d.unit == "CONV":
-                y = _conv_int8(x, wq, bias, words, r, d.stride, d.pad, d.groups, d.relu)
+                y = _conv_int8(x, wq, bias, words, r, d.stride, d.pad,
+                               d.groups, d.relu, kernel)
             else:
-                y = _fc_int8(x, wq, bias, words, d.relu)
+                y = _fc_int8(x, wq, bias, words, d.relu, kernel)
             return jax.lax.dynamic_update_slice(arena, y.reshape(-1), (do,))
     elif d.unit == "PDP":
         word = engine._pack_scale(d.out_scale)
@@ -256,7 +256,8 @@ def _batch_plan(descs, input_region: tuple):
 
 
 def _batched_op_from_descriptor(d: engine.Descriptor, base: int, act_lo: int,
-                                fwd: bool, store: bool):
+                                fwd: bool, store: bool,
+                                kernel: str = perfmodel.KERNEL_GEMM_TILED):
     """Build f(weights, act, y_prev)->(act, y_flat) for the vmapped batch path.
 
     ``weights`` is the full preload arena, shared (unbatched) across lanes and
@@ -295,9 +296,10 @@ def _batched_op_from_descriptor(d: engine.Descriptor, base: int, act_lo: int,
             words = jax.lax.bitcast_convert_type(
                 weights[sco:sco + 4 * k].reshape(k, 4), jnp.int32)
             if d.unit == "CONV":
-                y = _conv_int8(x, wq, bias, words, r, d.stride, d.pad, d.groups, d.relu)
+                y = _conv_int8(x, wq, bias, words, r, d.stride, d.pad,
+                               d.groups, d.relu, kernel)
             else:
-                y = _fc_int8(x, wq, bias, words, d.relu)
+                y = _fc_int8(x, wq, bias, words, d.relu, kernel)
             return finish(act, y)
     elif d.unit == "PDP":
         word = engine._pack_scale(d.out_scale)
@@ -341,12 +343,16 @@ class ExecutorCapabilities:
                            ``NamedSharding`` over a 1-axis data mesh) to
                            split lanes across devices.
     ``max_batch``        — hard batch-size ceiling, or ``None`` (unbounded).
+    ``kernels``          — the GEMM kernels this backend's plan resolved to
+                           (names from ``core.perfmodel``), so callers can
+                           see which code path serves each network.
     """
     native_batching: bool = False
     resident_arena: bool = False
     shardable: bool = False
     max_batch: Optional[int] = None
     dtype: str = "int8"
+    kernels: tuple = ()
 
 
 @runtime_checkable
@@ -375,7 +381,8 @@ class _ExecutorBase:
     def __init__(self, trace: Trace, weight_image: Dict[int, bytes],
                  cfg: engine.EngineConfig = engine.NV_SMALL,
                  input_scale: float = 1.0, output_scale: float = 1.0,
-                 output_elems: Optional[int] = None):
+                 output_elems: Optional[int] = None,
+                 kernel_plan: Union[str, Sequence, Dict[int, str], None] = None):
         assert cfg.dtype == "int8", "executors implement the nv_small INT8 path"
         self.cfg = cfg
         self.trace = trace
@@ -384,6 +391,11 @@ class _ExecutorBase:
         self.descs = engine.decode_descriptors(trace.commands)
         if not self.descs:
             raise ValueError("trace contains no engine ops")
+        # Kernel plan: one perfmodel.KernelChoice per descriptor, cost-model
+        # selected for the platform jax executes on; ``kernel_plan=`` forces
+        # choices for debugging/A-B (a kernel name for all CONV/FC, a
+        # per-descriptor sequence, or an {index: name} dict).
+        self.kernel_plan = self._resolve_kernel_plan(kernel_plan)
         # Arena geometry, derived from the trace alone.
         hi = engine.DRAM_BASE
         for d in self.descs:
@@ -405,6 +417,49 @@ class _ExecutorBase:
         self.output_dims = self.descs[-1].dst_dims
         self.output_elems = output_elems or _surface_bytes(self.output_dims, 1)
 
+    def _resolve_kernel_plan(self, spec) -> List[perfmodel.KernelChoice]:
+        if isinstance(spec, (list, tuple)) and len(spec) != len(self.descs):
+            raise ValueError(
+                f"kernel_plan sequence has {len(spec)} entries but the trace "
+                f"decodes to {len(self.descs)} descriptors (PDP/EW count "
+                f"too — use None for non-GEMM positions, or an "
+                f"{{index: kernel}} dict)")
+        if isinstance(spec, dict):
+            try:                    # JSON round-trips stringify object keys
+                spec = {int(i): v for i, v in spec.items()}
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"kernel_plan dict keys must be descriptor indices "
+                    f"(ints), got {sorted(map(repr, spec))}") from None
+            bad = [i for i in spec
+                   if not (0 <= i < len(self.descs)
+                           and self.descs[i].unit in ("CONV", "FC"))]
+            if bad:
+                convfc = [i for i, d in enumerate(self.descs)
+                          if d.unit in ("CONV", "FC")]
+                raise ValueError(
+                    f"kernel_plan dict keys {bad} do not name CONV/FC "
+                    f"descriptors (valid indices: {convfc}) — the override "
+                    f"would silently no-op")
+        backend = perfmodel.default_backend()
+        choices = []
+        for i, d in enumerate(self.descs):
+            if isinstance(spec, dict):
+                ov = spec.get(i)
+            elif isinstance(spec, (list, tuple)):
+                ov = spec[i]
+            else:
+                ov = spec                      # None or a kernel name for all
+            if d.unit not in ("CONV", "FC"):
+                ov = None
+            choices.append(perfmodel.select_kernel(d, backend, override=ov))
+        return choices
+
+    def kernel_plan_summary(self) -> List[Dict]:
+        """The resolved plan as JSON-ready dicts (mirrors the manifest)."""
+        return [dict(c.to_dict(), index=i, unit=d.unit)
+                for i, (d, c) in enumerate(zip(self.descs, self.kernel_plan))]
+
     def _quant_in(self, x: np.ndarray) -> np.ndarray:
         if x.dtype == np.int8:
             return x
@@ -413,9 +468,14 @@ class _ExecutorBase:
     def _dequant_out(self, y_i8: np.ndarray) -> np.ndarray:
         return y_i8.astype(np.float32) * self.output_scale
 
+    def _plan_kernels(self) -> tuple:
+        return tuple(sorted({c.kernel for c in self.kernel_plan
+                             if c.kernel != perfmodel.KERNEL_VPU}))
+
     def capabilities(self) -> ExecutorCapabilities:
         """Default: sequential batching, no device residency, not shardable."""
-        return ExecutorCapabilities(dtype=self.cfg.dtype)
+        return ExecutorCapabilities(dtype=self.cfg.dtype,
+                                    kernels=self._plan_kernels())
 
     def run_batch(self, X: np.ndarray,
                   lanes: Optional[int] = None) -> ExecResult:
@@ -442,7 +502,8 @@ class BareMetalExecutor(_ExecutorBase):
         # stores of activations that are never read back).
         del donate
         super().__init__(*args, **kw)
-        ops = [_op_from_descriptor(d, self.base, 1) for d in self.descs]
+        ops = [_op_from_descriptor(d, self.base, 1, c.kernel)
+               for d, c in zip(self.descs, self.kernel_plan)]
         n_out = self.output_elems
         out_off = self.output_off
 
@@ -473,7 +534,8 @@ class BareMetalExecutor(_ExecutorBase):
         in_region = (self.base + self.input_off,
                      _surface_bytes(self.input_dims, 1))
         fwd, store, store_input = _batch_plan(self.descs, in_region)
-        bops = [_batched_op_from_descriptor(d, self.base, act_lo, fwd[i], store[i])
+        bops = [_batched_op_from_descriptor(d, self.base, act_lo, fwd[i],
+                                            store[i], self.kernel_plan[i].kernel)
                 for i, d in enumerate(self.descs)]
 
         def batch_replay(weights, act0, xs):
@@ -520,7 +582,8 @@ class BareMetalExecutor(_ExecutorBase):
 
     def capabilities(self) -> ExecutorCapabilities:
         return ExecutorCapabilities(native_batching=True, resident_arena=True,
-                                    shardable=True, dtype=self.cfg.dtype)
+                                    shardable=True, dtype=self.cfg.dtype,
+                                    kernels=self._plan_kernels())
 
     def run_batch(self, X: np.ndarray,
                   lanes: Optional[int] = None) -> ExecResult:
@@ -546,24 +609,31 @@ class BareMetalExecutor(_ExecutorBase):
 
 
 class LinuxStackExecutor(_ExecutorBase):
-    """Driver-stack baseline: per-op executables + tensor-table bookkeeping."""
+    """Driver-stack baseline: per-op executables + tensor-table bookkeeping.
+
+    The per-descriptor binding — jitted op callable, weight/bias/scale-table
+    views into the immutable preload image, activation-surface offsets — is
+    resolved ONCE at construction (the driver's "model load"), so a ``run``
+    measures per-op dispatch overhead, not Python re-parsing of the trace.
+    """
 
     def __init__(self, *args, **kw):
         super().__init__(*args, **kw)
         # Pre-build one jitted callable per op (the 'driver' compiles per-layer
         # kernels); dispatch happens op-at-a-time from Python (the 'syscall').
         self._ops = []
-        for d in self.descs:
-            self._ops.append((d, jax.jit(self._op_fn(d))))
+        for d, ch in zip(self.descs, self.kernel_plan):
+            self._ops.append((d, jax.jit(self._op_fn(d, ch.kernel)),
+                              self._bind(d)))
 
-    def _op_fn(self, d: engine.Descriptor):
+    def _op_fn(self, d: engine.Descriptor, kernel: str):
         if d.unit in ("CONV", "FC"):
             r, s = d.kernel
             def f(x, wq, bias, words):
                 if d.unit == "CONV":
                     return _conv_int8(x, wq, bias, words, r, d.stride, d.pad,
-                                      d.groups, d.relu)
-                return _fc_int8(x, wq, bias, words, d.relu)
+                                      d.groups, d.relu, kernel)
+                return _fc_int8(x, wq, bias, words, d.relu, kernel)
             return f
         if d.unit == "PDP":
             word = engine._pack_scale(d.out_scale)
@@ -573,35 +643,46 @@ class LinuxStackExecutor(_ExecutorBase):
             return lambda a, b: _add_int8(a, b, wa, wb, d.relu)
         raise ValueError(d.unit)
 
+    def _bind(self, d: engine.Descriptor):
+        """Static per-descriptor binding: weight-region views (the preload
+        image is immutable during serving) + activation offsets/shapes."""
+        _, c, h, w = d.src_dims
+        b = dict(src_off=d.src_addr - self.base, src_shape=(c, h, w),
+                 src_n=c * h * w, dst_off=d.dst_addr - self.base)
+        if d.unit in ("CONV", "FC"):
+            k = d.dst_dims[1]
+            r, s = d.kernel
+            cin_g = c // d.groups if d.unit == "CONV" else c * h * w
+            wt_n = k * cin_g * (r * s if d.unit == "CONV" else 1)
+            wo, bo, so = (d.wt_addr - self.base, d.bias_addr - self.base,
+                          d.scale_addr - self.base)
+            b["wq"] = self.arena0[wo:wo + wt_n].view(np.int8).reshape(k, -1)
+            b["bias"] = self.arena0[bo:bo + 4 * k].view(np.int32)
+            b["words"] = self.arena0[so:so + 4 * k].view(np.int32)
+        elif d.unit == "EW":
+            b["aux_off"] = d.aux_addr - self.base
+        return b
+
     def run(self, x: np.ndarray) -> ExecResult:
         xq = self._quant_in(x)
         dram = self.arena0.copy()       # driver re-stages buffers per submission
 
-        def surf_i8(addr, dims):
-            off = addr - self.base
-            n, c, h, w = dims
-            return dram[off:off + c * h * w].view(np.int8).reshape(c, h, w)
+        def surf_i8(off, shape, n):
+            return dram[off:off + n].view(np.int8).reshape(shape)
 
         in_off = self.descs[0].src_addr - self.base
         dram[in_off:in_off + xq.size] = xq.reshape(-1).view(np.uint8)
-        for d, fn in self._ops:
+        for d, fn, bnd in self._ops:
+            src = surf_i8(bnd["src_off"], bnd["src_shape"], bnd["src_n"])
             if d.unit in ("CONV", "FC"):
-                _, c, h, w = d.src_dims
-                k = d.dst_dims[1]
-                r, s = d.kernel
-                cin_g = c // d.groups if d.unit == "CONV" else c * h * w
-                wt_n = k * cin_g * (r * s if d.unit == "CONV" else 1)
-                wo, bo, so = d.wt_addr - self.base, d.bias_addr - self.base, d.scale_addr - self.base
-                wq = dram[wo:wo + wt_n].view(np.int8).reshape(k, -1)
-                bias = dram[bo:bo + 4 * k].view(np.int32)
-                words = dram[so:so + 4 * k].view(np.int32)
-                y = fn(surf_i8(d.src_addr, d.src_dims), wq, bias, words)
+                y = fn(src, bnd["wq"], bnd["bias"], bnd["words"])
             elif d.unit == "PDP":
-                y = fn(surf_i8(d.src_addr, d.src_dims))
+                y = fn(src)
             else:
-                y = fn(surf_i8(d.src_addr, d.src_dims), surf_i8(d.aux_addr, d.src_dims))
+                y = fn(src, surf_i8(bnd["aux_off"], bnd["src_shape"],
+                                    bnd["src_n"]))
             y = np.asarray(y).reshape(-1)
-            doff = d.dst_addr - self.base
-            dram[doff:doff + y.size] = y.view(np.uint8)   # driver flushes the buffer
+            dram[bnd["dst_off"]:bnd["dst_off"] + y.size] = \
+                y.view(np.uint8)        # driver flushes the buffer
         out = dram[self.output_off:self.output_off + self.output_elems].view(np.int8)
         return ExecResult(output_int8=out.copy(), output=self._dequant_out(out))

@@ -1,6 +1,7 @@
-"""Cycle model for the engine (derives the paper's Tables II/III time columns).
+"""Cycle model for the engine (derives the paper's Tables II/III time columns)
+plus the kernel cost model that picks a GEMM implementation per descriptor.
 
-A max(compute, memory) + configuration-overhead model per descriptor:
+Cycle model: max(compute, memory) + configuration-overhead per descriptor:
 
   compute cycles = MACs / engine.macs
   memory  cycles = bytes moved over the DBB / dbb_bytes_per_cycle
@@ -11,16 +12,217 @@ term: a Linux driver stack pays orders of magnitude more host cycles per op
 (syscalls, ioctl marshalling), which is what Table II's comparison against [8]
 reflects.  We expose both the raw per-descriptor breakdown and whole-model
 totals at the paper's 100 MHz system clock.
+
+Kernel cost model (``select_kernel``): every CONV/FC contraction is lowered to
+one of three kernels, chosen per descriptor by estimated cost on the serving
+backend — never by a hard-coded size cliff:
+
+  * ``gemm_f32_exact`` — single f32 GEMM; exact only while K*128*128 <= 2^24.
+  * ``gemm_f32_tiled`` — K split into <=1024-element tiles, each an exact f32
+    GEMM, partials accumulated in int32.  Exact for every K, so the scalar
+    integer ``dot_general`` path is never needed.
+  * ``pallas_fused``   — the ``kernels/int8_conv`` Pallas kernel: MXU int8
+    GEMM with the NVDLA SDP epilogue fused so the int32 accumulator never
+    leaves VMEM.
+
+``kernel_plan`` maps a whole descriptor list; the pipeline's ``cost_model``
+stage publishes the plan into the ``Artifacts`` manifest.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core import engine
+
+# ---------------------------------------------------------------------------
+# Kernel selection
+# ---------------------------------------------------------------------------
+KERNEL_GEMM_EXACT = "gemm_f32_exact"
+KERNEL_GEMM_TILED = "gemm_f32_tiled"
+KERNEL_PALLAS = "pallas_fused"
+KERNEL_VPU = "vpu"                     # PDP / EW: no GEMM, pure vector ops
+
+GEMM_KERNELS = (KERNEL_GEMM_EXACT, KERNEL_GEMM_TILED, KERNEL_PALLAS)
+
+# Largest contraction K for which a single f32 GEMM is provably bit-exact:
+# every int8*int8 product has |p| <= 128*128, so the worst-case partial sum
+# K * 128 * 128 must stay within the 2^24 f32 integer-exact window.
+EXACT_K = (1 << 24) // (128 * 128)     # = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendProfile:
+    """What the serving substrate can do, for the kernel cost model.
+
+    Rates are relative (MACs and bytes per cycle) — only ratios matter for
+    selection.  The scalar integer GEMM XLA falls back to on CPU is
+    deliberately *not* a candidate: ``gemm_f32_tiled`` is exact for every K,
+    wins outright whenever the GEMM is compute-bound (output positions /
+    coalesced lanes widen the N dimension), and stays within a small
+    constant of int8 streaming in the weight-bandwidth-bound GEMV regime.
+    """
+    platform: str
+    f32_macs_per_cycle: float          # wide f32 units (SIMD FMA / MXU f32)
+    bytes_per_cycle: float             # weight-stream bandwidth
+    pallas_native: bool                # Pallas runs compiled (TPU) vs interpret
+    tile_overhead_macs: float = 4096.0  # int32 partial-sum add per extra K-tile
+
+
+PROFILES: Dict[str, BackendProfile] = {
+    "cpu": BackendProfile(platform="cpu", f32_macs_per_cycle=16.0,
+                          bytes_per_cycle=32.0, pallas_native=False),
+    "tpu": BackendProfile(platform="tpu", f32_macs_per_cycle=256.0,
+                          bytes_per_cycle=512.0, pallas_native=True),
+    "gpu": BackendProfile(platform="gpu", f32_macs_per_cycle=128.0,
+                          bytes_per_cycle=256.0, pallas_native=False),
+}
+
+
+def default_backend() -> str:
+    """The profile name for the platform jax will execute on."""
+    import jax
+    plat = jax.default_backend()
+    return plat if plat in PROFILES else "cpu"
+
+
+def resolve_profile(backend: Union[str, BackendProfile, None]) -> BackendProfile:
+    if backend is None:
+        return PROFILES[default_backend()]
+    if isinstance(backend, BackendProfile):
+        return backend
+    try:
+        return PROFILES[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend profile {backend!r}; known: "
+                         f"{', '.join(sorted(PROFILES))}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelChoice:
+    """One descriptor's resolved kernel: what runs, and why."""
+    kernel: str
+    contract_k: int = 0
+    k_tiles: int = 1
+    reason: str = ""
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def contract_k(d: engine.Descriptor) -> int:
+    """Contraction length K of a CONV/FC descriptor (0 for PDP/EW)."""
+    _, c, h, w = d.src_dims
+    if d.unit == "CONV":
+        r, s = d.kernel
+        return (c // d.groups) * r * s
+    if d.unit == "FC":
+        return c * h * w
+    return 0
+
+
+def gemm_cols(d: engine.Descriptor) -> int:
+    """N dimension of the descriptor's GEMM: output positions P*Q (1 for FC)."""
+    _, _, p, q = d.dst_dims
+    return p * q if d.unit == "CONV" else 1
+
+
+def descriptor_macs(d: engine.Descriptor) -> int:
+    _, c, h, w = d.src_dims
+    _, k, p, q = d.dst_dims
+    if d.unit == "CONV":
+        r, s = d.kernel
+        return (c // d.groups) * r * s * k * p * q
+    if d.unit == "FC":
+        return c * h * w * k
+    return 0
+
+
+def _kernel_cost(kernel: str, k: int, macs: int, n_cols: int,
+                 prof: BackendProfile) -> float:
+    """Estimated cost (relative cycles) of running ``kernel`` for this
+    contraction on ``prof``; ``inf`` when the kernel is not applicable.
+
+    max(compute, weight-stream) roofline: ``n_cols`` (output positions, or
+    positions x coalesced lanes) decides which side binds — GEMV-shaped
+    layers (n_cols ~ 1) are weight-bandwidth-bound, so the f32 kernels pay
+    their 4-byte weight stream there, while wide GEMMs are compute-bound
+    and the f32 units win on rate.
+    """
+    n_tiles = -(-k // EXACT_K) if k else 1
+    weight_elems = macs // max(n_cols, 1)
+    if kernel == KERNEL_GEMM_EXACT:
+        if k > EXACT_K:
+            return float("inf")            # would break the exactness proof
+        return max(macs / prof.f32_macs_per_cycle,
+                   4.0 * weight_elems / prof.bytes_per_cycle)
+    if kernel == KERNEL_GEMM_TILED:
+        return (max(macs / prof.f32_macs_per_cycle,
+                    4.0 * weight_elems / prof.bytes_per_cycle)
+                + (n_tiles - 1) * prof.tile_overhead_macs)
+    if kernel == KERNEL_PALLAS:
+        if not prof.pallas_native:
+            return float("inf")            # interpret mode: test-only on CPU
+        # int8 weight stream + fused epilogue (the int32 accumulator stays
+        # in VMEM): both sides of the roofline are cheaper than f32
+        return max(0.9 * macs / prof.f32_macs_per_cycle,
+                   1.0 * weight_elems / prof.bytes_per_cycle)
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def select_kernel(d: engine.Descriptor,
+                  backend: Union[str, BackendProfile, None] = None,
+                  override: Optional[str] = None) -> KernelChoice:
+    """Pick the cheapest applicable kernel for one descriptor.
+
+    ``override`` forces a specific GEMM kernel (debugging / A-B testing);
+    forcing ``gemm_f32_exact`` on a contraction too large for the exactness
+    bound raises rather than silently producing wrong bits.
+    """
+    if d.unit not in ("CONV", "FC"):
+        return KernelChoice(kernel=KERNEL_VPU, reason="no contraction")
+    prof = resolve_profile(backend)
+    k = contract_k(d)
+    macs = descriptor_macs(d)
+    n_tiles = -(-k // EXACT_K) if k else 1
+    if override is not None:
+        if override not in GEMM_KERNELS:
+            raise ValueError(f"unknown kernel {override!r}; GEMM kernels: "
+                             f"{', '.join(GEMM_KERNELS)}")
+        if override == KERNEL_GEMM_EXACT and k > EXACT_K:
+            raise ValueError(
+                f"kernel {override!r} forced for K={k} > {EXACT_K}: a single "
+                f"f32 GEMM is not bit-exact past K*128*128 = 2^24")
+        return KernelChoice(kernel=override, contract_k=k, k_tiles=n_tiles,
+                            reason="forced by kernel_plan override")
+    n_cols = gemm_cols(d)
+    costs = {name: _kernel_cost(name, k, macs, n_cols, prof)
+             for name in GEMM_KERNELS}
+    best = min(costs, key=costs.get)
+    return KernelChoice(
+        kernel=best, contract_k=k, k_tiles=n_tiles,
+        reason=f"cost model on {prof.platform}: " + ", ".join(
+            f"{n}={c:.0f}" if c != float("inf") else f"{n}=n/a"
+            for n, c in costs.items()))
+
+
+def kernel_plan(descs: Sequence[engine.Descriptor],
+                names: Optional[Sequence[str]] = None,
+                backend: Union[str, BackendProfile, None] = None,
+                override: Optional[str] = None) -> List[Dict]:
+    """Per-descriptor kernel plan, as JSON-ready dicts (manifest format)."""
+    names = names or [f"op{i}" for i in range(len(descs))]
+    prof = resolve_profile(backend)
+    out = []
+    for d, n in zip(descs, names):
+        ch = select_kernel(d, prof, override=override)
+        e = ch.to_dict()
+        e.update(layer=n, unit=d.unit, backend=prof.platform)
+        out.append(e)
+    return out
 
 
 @dataclasses.dataclass
@@ -43,6 +245,24 @@ class ModelCost:
     ops: List[OpCost]
     total_cycles: int
     ms_at_clock: float
+    kernel_plan: Optional[List[Dict]] = None   # per-layer kernel choice dicts
+
+    def layer_breakdown(self) -> List[Dict]:
+        """Per-layer time share + chosen kernel, sorted by modeled cycles."""
+        total = max(self.total_cycles, 1)
+        plan = {e["layer"]: e for e in (self.kernel_plan or [])}
+        rows = []
+        for o in self.ops:
+            ch = plan.get(o.layer, {})
+            rows.append({
+                "layer": o.layer, "unit": o.unit, "cycles": o.cycles,
+                "share": o.cycles / total,
+                "kernel": ch.get("kernel", ""),
+                "contract_k": ch.get("contract_k", 0),
+                "k_tiles": ch.get("k_tiles", 1),
+            })
+        rows.sort(key=lambda r: -r["cycles"])
+        return rows
 
     def dominant(self) -> str:
         c = sum(o.compute_cycles for o in self.ops)
@@ -58,12 +278,12 @@ def descriptor_cost(d: engine.Descriptor, cfg: engine.EngineConfig,
     eb = cfg.elem_bytes
     if d.unit == "CONV":
         r, s = d.kernel
-        macs = (c // d.groups) * r * s * k * p * q
+        macs = descriptor_macs(d)
         wbytes = k * (c // d.groups) * r * s * eb
         bytes_moved = c * h * w * eb + wbytes + k * 4 * 2 + k * p * q * eb
     elif d.unit == "FC":
         cin = c * h * w
-        macs = cin * k
+        macs = descriptor_macs(d)
         bytes_moved = cin * eb + k * cin * eb + k * 4 * 2 + k * eb
     elif d.unit == "PDP":
         r, s = d.kernel
@@ -84,8 +304,11 @@ def descriptor_cost(d: engine.Descriptor, cfg: engine.EngineConfig,
 
 
 def model_cost(descs: List[engine.Descriptor], cfg: engine.EngineConfig,
-               names: List[str] | None = None) -> ModelCost:
+               names: List[str] | None = None,
+               backend: Union[str, BackendProfile, None] = None) -> ModelCost:
     names = names or [f"op{i}" for i in range(len(descs))]
     ops = [descriptor_cost(d, cfg, n) for d, n in zip(descs, names)]
     total = sum(o.cycles for o in ops)
-    return ModelCost(ops=ops, total_cycles=total, ms_at_clock=cfg.cycles_to_ms(total))
+    return ModelCost(ops=ops, total_cycles=total,
+                     ms_at_clock=cfg.cycles_to_ms(total),
+                     kernel_plan=kernel_plan(descs, names, backend))

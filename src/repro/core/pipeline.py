@@ -38,6 +38,7 @@ from repro.core import asm as asm_mod
 from repro.core import engine, memory, tracegen
 from repro.core.graph import NetGraph
 from repro.core.loadable import Loadable, build_loadable, calibrate
+from repro.core import perfmodel
 from repro.core.perfmodel import ModelCost, model_cost
 from repro.core.tracegen import Trace
 from repro.core.vp import VirtualPlatform
@@ -65,6 +66,10 @@ class Artifacts:
     input_scale: float
     output_scale: float
     output_elems: int
+    # per-layer kernel plan (cost_model stage) — which GEMM kernel serves each
+    # descriptor on the compile host's platform; shipped in the manifest so
+    # the chosen code path is visible on any bundle
+    kernel_plan: Optional[list] = None
     # -- compile-time intermediates (not shipped) ----------------------------
     asm_text: str = ""               # RISC-V assembly listing
     loadable: Optional[Loadable] = None
@@ -105,6 +110,8 @@ class Artifacts:
             "output_elems": self.output_elems,
             "weight_segments": [[addr, len(b)] for addr, b in segs],
         }
+        if self.kernel_plan is not None:
+            manifest["kernel_plan"] = self.kernel_plan
         (p / "manifest.json").write_text(json.dumps(manifest, indent=1))
         return p
 
@@ -160,6 +167,7 @@ class Artifacts:
             input_scale=manifest["input_scale"],
             output_scale=manifest["output_scale"],
             output_elems=manifest["output_elems"],
+            kernel_plan=manifest.get("kernel_plan"),
         )
 
 
@@ -276,7 +284,7 @@ def _hash_update_array(h, a: Optional[np.ndarray]) -> None:
 # Mixed into every cache key.  Bump whenever a stage's implementation changes
 # semantics, so the *persistent* disk tier never serves stage outputs pickled
 # by an older build (the in-memory tier dies with the process; disk doesn't).
-CACHE_SCHEMA_VERSION = 2
+CACHE_SCHEMA_VERSION = 3
 
 
 def _fingerprint(graph: NetGraph, params, calib_samples, cfg, sample_input,
@@ -329,7 +337,8 @@ def _stage_assemble(p: "CompilerPipeline"):
 
 def _stage_cost_model(p: "CompilerPipeline"):
     ld = p.stage("build_loadable")
-    return model_cost(ld.descriptors, p.cfg, ld.desc_layers)
+    return model_cost(ld.descriptors, p.cfg, ld.desc_layers,
+                      backend=perfmodel.default_backend())
 
 
 _STAGES: Dict[str, Tuple[Tuple[str, ...], Callable]] = {
@@ -396,6 +405,10 @@ class CompilerPipeline:
             deps, _ = _STAGES[name]
             h = hashlib.sha256(self._root.encode())
             h.update(name.encode())
+            if name == "cost_model":
+                # the kernel plan is selected for the host's platform — a
+                # shared disk cache must never serve a CPU plan to a TPU host
+                h.update(perfmodel.default_backend().encode())
             for d in deps:
                 h.update(self._key(d).encode())
             self._keys[name] = h.hexdigest()
@@ -455,6 +468,7 @@ class CompilerPipeline:
         ld: Loadable = r["build_loadable"]
         vp = r["vp_run"]
         out_shape = self.graph.by_name()[self.graph.output].out_shape
+        cost: ModelCost = r["cost_model"]
         return Artifacts(
             graph_name=self.graph.name, cfg=self.cfg,
             trace=trace, trace_text=trace.to_text(),
@@ -462,5 +476,6 @@ class CompilerPipeline:
             program_binary=binary, asm_text=asm_text,
             input_scale=ld.input_scale, output_scale=ld.output_scale,
             output_elems=int(np.prod(out_shape)),
+            kernel_plan=cost.kernel_plan,
             loadable=ld, vp_output=vp.output, vp_output_int8=vp.output_int8,
-            cost=r["cost_model"])
+            cost=cost)

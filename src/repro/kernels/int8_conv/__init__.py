@@ -1,0 +1,14 @@
+"""Fused INT8 convolution / FC kernel family (NVDLA CONV->SDP, TPU-native).
+
+Extends ``kernels/int8_gemm`` from a bare GEMM into the executor-facing conv
+path: im2col + fused-epilogue GEMM where the int32 accumulator never leaves
+VMEM — bias add, per-output-channel fixed-point requantisation, ReLU and the
+int8 clip all happen in the kernel epilogue (NVDLA's CACC->SDP pipeline).
+
+``ops.conv2d_int8`` / ``ops.fc_int8`` are the public entry points used by the
+executors through ``perfmodel.select_kernel``; ``ref.py`` holds the pure-jnp
+oracle the kernel is tested against (itself bit-exact vs ``core/refops``).
+"""
+
+from repro.kernels.int8_conv.ops import conv2d_int8, fc_int8  # noqa: F401
+from repro.kernels.int8_conv.ref import conv2d_int8_ref, fc_int8_ref  # noqa: F401

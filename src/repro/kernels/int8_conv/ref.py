@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the fused conv/FC kernels (bit-exact vs core/refops).
+
+The SDP epilogue and im2col come from ``core/intmath.py`` — the oracle, the
+Pallas kernel and the executors all share ONE copy of the requant semantics,
+so a fix cannot silently diverge between arms (the independent second
+implementation the parity tests check against is numpy ``core/refops``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.intmath import im2col, row_epilogue as _row_epilogue
+
+
+def conv2d_int8_ref(x, wq, bias, words, k, stride, pad, groups=1,
+                    relu=False) -> jax.Array:
+    """(C,H,W) int8 conv oracle: int32-exact GEMM + row epilogue."""
+    kk = wq.shape[0]
+    c, h, w_in = x.shape
+    p = (h + 2 * pad - k) // stride + 1
+    q = (w_in + 2 * pad - k) // stride + 1
+    if groups == 1:
+        cols = im2col(x, k, stride, pad)
+        acc = jax.lax.dot_general(wq, cols, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        return _row_epilogue(acc, bias, words, relu).reshape(kk, p, q)
+    cg, kg = c // groups, kk // groups
+    outs = []
+    for g in range(groups):
+        cols = im2col(x[g * cg:(g + 1) * cg], k, stride, pad)
+        acc = jax.lax.dot_general(wq[g * kg:(g + 1) * kg], cols,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        outs.append(_row_epilogue(acc, bias[g * kg:(g + 1) * kg],
+                                  words[g * kg:(g + 1) * kg], relu))
+    return jnp.concatenate(outs, 0).reshape(kk, p, q)
+
+
+def fc_int8_ref(x, wq, bias, words, relu=False) -> jax.Array:
+    """x flat int8, wq (K_out, Cin): FC oracle -> (K_out, 1, 1) int8."""
+    acc = jax.lax.dot_general(wq, x.reshape(-1, 1), (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return _row_epilogue(acc, bias, words, relu).reshape(-1, 1, 1)

@@ -52,6 +52,45 @@ _ELEMENTWISE = {
 }
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an HLO operand list on top-level commas only.
+
+    Shape strings like ``f32[64,64]{1,0}`` contain commas, so a naive
+    ``s.split(",")`` shreds every operand into garbage tokens — this was
+    exactly the scan-flops undercount: dot operands failed to resolve, the
+    contracted-K lookup missed, and every matmul fell back to 2*|result|.
+    """
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
+def _operand_names(line: str) -> List[str]:
+    """Operand names of an op line: ``dot(f32[8,8]{1,0} %a, ... %b)`` -> [a, b]."""
+    m = re.search(r"\(([^)]*)\)", line)
+    if not m:
+        return []
+    names = []
+    for tok in _split_operands(m.group(1)):
+        if not tok:
+            continue
+        # strip an inline type prefix ("f32[64,64]{1,0} %name" -> "%name")
+        names.append(tok.split()[-1].lstrip("%"))
+    return names
+
+
 def shape_bytes(type_str: str) -> int:
     """Total bytes of a (possibly tuple) HLO type string."""
     total = 0
@@ -196,13 +235,7 @@ def compute_multiplicities(comps: Dict[str, Computation], entry: str,
 def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
     """2 * |result| * K from contracting dims."""
     result_elems = shape_elems(op.result_type)
-    lhs_m = re.search(r"\(([^)]*)\)", op.line)
-    operands = []
-    if lhs_m:
-        for o in lhs_m.group(1).split(","):
-            o = o.strip().lstrip("%")
-            if o:
-                operands.append(o)
+    operands = _operand_names(op.line)
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
     if not cm or not operands:
         return 2.0 * result_elems
@@ -252,10 +285,8 @@ def _fusion_bytes(body: "Computation", operand_types: List[str]) -> int:
             pm = re.search(r"parameter\((\d+)\)", op.line)
             if pm:
                 params[op.name] = int(pm.group(1))
-        om = re.search(r"\(([^)]*)\)", op.line)
-        if om and op.kind != "parameter":
-            for o in om.group(1).split(","):
-                o = o.strip().lstrip("%")
+        if op.kind != "parameter":
+            for o in _operand_names(op.line):
                 consumers.setdefault(o, []).append(op)
     total = 0
     body_shapes = {op.name: op.result_type for op in body.ops}
@@ -263,8 +294,8 @@ def _fusion_bytes(body: "Computation", operand_types: List[str]) -> int:
     def _is_dus_target(c: Op, name: str) -> bool:
         if c.kind != "dynamic-update-slice":
             return False
-        om = re.search(r"\(([^)]*)\)", c.line)
-        return bool(om) and om.group(1).split(",")[0].strip().lstrip("%") == name
+        ops_ = _operand_names(c.line)
+        return bool(ops_) and ops_[0] == name
 
     def _effective(name: str, depth: int = 0) -> Optional[List[Tuple[str, Op]]]:
         """Resolve consumers through pass-through ops; None = opaque use."""
@@ -301,15 +332,15 @@ def _fusion_bytes(body: "Computation", operand_types: List[str]) -> int:
     root = body.ops[-1] if body.ops else None
     for _ in range(4):
         if root is not None and root.kind in _PASSTHRU:
-            om = re.search(r"\(([^)]*)\)", root.line)
-            prod = om.group(1).split(",")[0].strip().lstrip("%") if om else ""
+            ops_ = _operand_names(root.line)
+            prod = ops_[0] if ops_ else ""
             if prod in by_name:
                 root = by_name[prod]
                 continue
         break
     if root is not None and root.kind == "dynamic-update-slice":
-        om = re.search(r"\(([^)]*)\)", root.line)
-        upd = om.group(1).split(",")[1].strip().lstrip("%") if om else ""
+        ops_ = _operand_names(root.line)
+        upd = ops_[1] if len(ops_) >= 2 else ""
         ut = body_shapes.get(upd, "")
         width = shape_bytes(body.ops[-1].result_type) / \
             max(shape_elems(body.ops[-1].result_type), 1)
@@ -357,20 +388,16 @@ def analyze(text: str, default_trip: int = 1) -> HloCosts:
                 flops += m * shape_elems(op.result_type)
             elif kind == "reduce":
                 # operand elems (first operand)
-                om = re.search(r"\(([^)]*)\)", op.line)
-                if om:
-                    first = om.group(1).split(",")[0].strip().lstrip("%")
-                    flops += m * shape_elems(shapes.get(first, ""))
+                ops_ = _operand_names(op.line)
+                if ops_:
+                    flops += m * shape_elems(shapes.get(ops_[0], ""))
             # ---- collective traffic -----------------------------------------
             base_kind = kind.replace("-start", "").replace("-done", "")
             if base_kind in COLLECTIVES and not kind.endswith("-done"):
-                om = re.search(r"\(([^)]*)\)", op.line)
                 b = 0
-                if om:
-                    for o in om.group(1).split(","):
-                        o = o.strip().lstrip("%")
-                        if o in shapes:
-                            b += shape_bytes(shapes[o])
+                for o in _operand_names(op.line):
+                    if o in shapes:
+                        b += shape_bytes(shapes[o])
                 if b == 0:                       # fall back to result size
                     b = shape_bytes(op.result_type)
                 coll_bytes += m * b
@@ -381,32 +408,23 @@ def analyze(text: str, default_trip: int = 1) -> HloCosts:
                 if kind == "dynamic-update-slice":
                     # in-place update: read+write the UPDATE slice only
                     # (XLA HloCostAnalysis special-cases DUS the same way)
-                    om = re.search(r"\(([^)]*)\)", op.line)
+                    ops_ = _operand_names(op.line)
                     b = 0
-                    if om:
-                        ops_ = [o.strip().lstrip("%") for o in om.group(1).split(",")]
-                        if len(ops_) >= 2 and ops_[1] in shapes:
-                            b = 2 * shape_bytes(shapes[ops_[1]])
+                    if len(ops_) >= 2 and ops_[1] in shapes:
+                        b = 2 * shape_bytes(shapes[ops_[1]])
                     mem_bytes += m * b
                 elif kind == "dynamic-slice":
                     mem_bytes += m * 2 * shape_bytes(op.result_type)
                 elif kind == "fusion" and op.callees and op.callees[0] in comps:
-                    om = re.search(r"\(([^)]*)\)", op.line)
-                    operand_types = []
-                    if om:
-                        for o in om.group(1).split(","):
-                            o = o.strip().lstrip("%")
-                            operand_types.append(shapes.get(o, ""))
+                    operand_types = [shapes.get(o, "")
+                                     for o in _operand_names(op.line)]
                     mem_bytes += m * _fusion_bytes(comps[op.callees[0]],
                                                    operand_types)
                 else:
                     b = shape_bytes(op.result_type)
-                    om = re.search(r"\(([^)]*)\)", op.line)
-                    if om:
-                        for o in om.group(1).split(","):
-                            o = o.strip().lstrip("%")
-                            if o in shapes:
-                                b += shape_bytes(shapes[o])
+                    for o in _operand_names(op.line):
+                        if o in shapes:
+                            b += shape_bytes(shapes[o])
                     mem_bytes += m * b
             if kind == "while":
                 n_while += 1

@@ -23,7 +23,8 @@ import numpy as np
 
 from repro.core import engine, refops
 from repro.core.executor import (BareMetalExecutor, ExecResult,
-                                 LinuxStackExecutor, _ExecutorBase)
+                                 ExecutorCapabilities, LinuxStackExecutor,
+                                 _ExecutorBase)
 from repro.runtime.registry import register_backend
 
 
@@ -46,6 +47,10 @@ def _make_linuxstack(art, **kw):
 
 class RefExecutor(_ExecutorBase):
     """Numpy golden model: replays the decoded descriptors with core/refops."""
+
+    def capabilities(self) -> ExecutorCapabilities:
+        # the golden model ignores the kernel plan: always scalar refops
+        return ExecutorCapabilities(dtype=self.cfg.dtype, kernels=("refops",))
 
     def run(self, x: np.ndarray) -> ExecResult:
         xq = self._quant_in(x)
