@@ -9,6 +9,9 @@ Tables:
   3  nv_full bf16 cycle counts, six networks                     (paper Table III)
   4  serving microbenchmarks: arena residency, batching, coalesced
      submit through the Session scheduler                        (runtime layer)
+  5  serving front-end: open-loop Poisson mixed-priority load over the
+     in-process ServeClient — per-priority p50/p99, goodput, FIFO A/B,
+     per-net dispatcher isolation                                (serve layer)
 
 ``--smoke`` runs every table in reduced-size mode (implies ``--fast``) and
 writes one ``BENCH_table<N>.json`` per table into ``--out`` (default ``.``) —
@@ -37,9 +40,9 @@ def main() -> None:
     fast = args.fast or args.smoke
 
     from benchmarks import (table1_storage, table2_nvsmall, table3_nvfull,
-                            table4_serving)
+                            table4_serving, table5_serving_frontend)
     tables = {1: table1_storage, 2: table2_nvsmall, 3: table3_nvfull,
-              4: table4_serving}
+              4: table4_serving, 5: table5_serving_frontend}
     picked = {args.table: tables[args.table]} if args.table else tables
 
     out_dir = pathlib.Path(args.out)

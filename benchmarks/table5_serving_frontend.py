@@ -1,0 +1,354 @@
+"""Serving front-end under mixed-priority open-loop load (table 5).
+
+An open-loop Poisson load generator drives the in-process ``ServeClient``
+(the exact code path the HTTP front-end uses, minus sockets) against a
+Session with **two resident nets** — a fast one and a deliberately heavier
+one, each with its own dispatcher thread.  Offered load is ~4x measured
+capacity so real queueing forms; the same arrival trace replays per phase:
+
+  * **FIFO baseline** — every request submitted at priority 0.
+  * **SLA run** — 25% of requests are high priority (priority=2) and carry a
+    tight ``deadline_us``; the rest are low priority with a loose deadline.
+
+Reported per priority class: p50/p99 submit->result latency and **goodput**
+(requests completed within their deadline per second of wall time; the
+regression gate checks it alongside ``us_per_call``).  The
+``fast_net_isolation`` row compares the fast net's p99 under mixed traffic
+against a solo replay of the same trace — with per-net dispatchers the
+heavy net must not head-of-line block the fast one.  Every completed
+response is checked bit-exact against ``Session.run`` on the same input,
+and every request must resolve (result, 429 fail-fast, or deadline shed).
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.core import graph
+from repro.core.pipeline import CompilerPipeline
+from repro.runtime import Session, SchedulerConfig
+from repro.serve.client import ServeClient, ServeError
+
+HIGH_PRIORITY = 2
+HIGH_FRACTION = 0.25            # fraction of traffic that is high priority
+FAST_FRACTION = 0.75            # fraction of traffic aimed at the fast net
+OVERLOAD = 4.0                  # offered load vs measured capacity: deep
+                                # queues make scheduling policy visible
+BURST_FRACTION = 0.4            # head of each trace arriving at t=0
+HIGH_DEADLINE_US = 2.0e6        # tight-ish budget for high priority
+LOW_DEADLINE_US = 20.0e6        # loose budget for background traffic
+POOL = 8                        # distinct inputs per net (refs precomputed)
+
+_SHAPES = {"fastnet": (2, 8, 8), "slownet": (4, 16, 16)}
+
+
+def _fast_net() -> graph.NetGraph:
+    g = graph.NetGraph("fastnet", _SHAPES["fastnet"])
+    g.layer(name="data", type="input", inputs=[])
+    x = g.layer(name="c1", type="conv", inputs=["data"], out_channels=4,
+                kernel=3, pad=1, relu=True)
+    x = g.layer(name="p1", type="pool", inputs=[x], pool_mode="gap")
+    g.layer(name="fc", type="fc", inputs=[x], out_channels=8)
+    return g.infer_shapes()
+
+
+def _slow_net() -> graph.NetGraph:
+    # deliberately heavier per image than fastnet (bigger surface, more
+    # channels) but with a dispatch time well under the FIFO backlog drain,
+    # so scheduling policy — not the non-preemptive batch floor — owns p99
+    g = graph.NetGraph("slownet", _SHAPES["slownet"])
+    g.layer(name="data", type="input", inputs=[])
+    x = g.layer(name="c1", type="conv", inputs=["data"], out_channels=8,
+                kernel=3, pad=1, relu=True)
+    x = g.layer(name="p1", type="pool", inputs=[x], pool_mode="gap")
+    g.layer(name="fc", type="fc", inputs=[x], out_channels=16)
+    return g.infer_shapes()
+
+
+def _percentile(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+class _Record:
+    __slots__ = ("net", "idx", "priority", "deadline_us", "t_submit",
+                 "t_done", "error", "exact")
+
+    def __init__(self, net, idx, priority, deadline_us):
+        self.net, self.idx = net, idx
+        self.priority, self.deadline_us = priority, deadline_us
+        self.t_submit = self.t_done = 0.0
+        self.error: str = ""
+        self.exact = False
+
+    @property
+    def ok(self) -> bool:
+        return not self.error
+
+    @property
+    def latency_us(self) -> float:
+        return (self.t_done - self.t_submit) * 1e6
+
+    @property
+    def in_deadline(self) -> bool:
+        return self.ok and self.latency_us <= self.deadline_us
+
+
+def _drive(client: ServeClient, schedule, inputs, refs, honor_sla: bool):
+    """Replay one arrival trace open-loop; returns (records, wall_s,
+    max_inflight).  The submitter never waits for completions — arrivals
+    land on schedule (or as fast as possible once the trace runs behind).
+
+    ``honor_sla=False`` is the FIFO baseline: priorities AND deadlines are
+    stripped at submit (deadlines feed EDF ordering, so leaving them in
+    would smuggle priority scheduling into the baseline); the class labels
+    stay on the records for apples-to-apples per-class reporting, and
+    goodput is still judged against each class's deadline client-side."""
+    records = []
+    lock = threading.Lock()
+    state = {"inflight": 0, "max_inflight": 0, "remaining": len(schedule)}
+    done_evt = threading.Event()
+    t0 = time.perf_counter()
+
+    def finish_one(was_inflight: bool) -> None:
+        with lock:
+            if was_inflight:
+                state["inflight"] -= 1
+            state["remaining"] -= 1
+            if state["remaining"] == 0:
+                done_evt.set()
+
+    def on_done(rec: _Record, fut) -> None:
+        rec.t_done = time.perf_counter()
+        try:
+            res = ServeClient.resolve_future(fut)
+            rec.exact = bool(np.array_equal(
+                np.asarray(res.output_int8), refs[rec.net][rec.idx]))
+        except ServeError as e:
+            rec.error = e.code
+        finish_one(True)
+
+    for dt, net, idx, priority, deadline_us in schedule:
+        target = t0 + dt
+        now = time.perf_counter()
+        if target > now:
+            time.sleep(target - now)
+        rec = _Record(net, idx, priority if honor_sla else 0, deadline_us)
+        records.append(rec)
+        rec.t_submit = time.perf_counter()
+        try:
+            fut = client.infer_async(net, inputs[net][idx],
+                                     priority=rec.priority,
+                                     deadline_us=(deadline_us if honor_sla
+                                                  else None))
+        except ServeError as e:             # admission control: fail-fast
+            rec.t_done = time.perf_counter()
+            rec.error = e.code
+            finish_one(False)
+            continue
+        with lock:
+            state["inflight"] += 1
+            state["max_inflight"] = max(state["max_inflight"],
+                                        state["inflight"])
+        fut.add_done_callback(lambda f, r=rec: on_done(r, f))
+    done_evt.wait(timeout=600)
+    return records, time.perf_counter() - t0, state["max_inflight"]
+
+
+def _class_stats(records, pred):
+    xs = [r for r in records if pred(r) and r.ok]
+    lats = [r.latency_us for r in xs]
+    return {"n": sum(1 for r in records if pred(r)), "ok": len(xs),
+            "p50": _percentile(lats, 50), "p99": _percentile(lats, 99)}
+
+
+def _goodput(records, wall_s, pred=lambda r: True):
+    return sum(1 for r in records if pred(r) and r.in_deadline) / wall_s
+
+
+def _make_schedule(seed: int, n_total: int, mean_interarrival_us: float,
+                   nets_filter=None):
+    """Arrival burst (BURST_FRACTION of the trace at t=0) followed by
+    open-loop Poisson arrivals.  The burst guarantees a deep backlog on any
+    machine speed — without it, a fast box serves requests as fast as the
+    submitter can offer them and no queueing (the thing scheduling policy
+    acts on) ever forms; the Poisson tail then models the arrival bursts
+    the collector continuously batches across."""
+    rng = np.random.default_rng(seed)
+    burst = int(BURST_FRACTION * n_total)
+    sched, t = [], 0.0
+    for i in range(n_total):
+        if i >= burst:
+            t += rng.exponential(mean_interarrival_us) * 1e-6
+        net = "fastnet" if rng.random() < FAST_FRACTION else "slownet"
+        high = rng.random() < HIGH_FRACTION
+        idx = int(rng.integers(POOL))
+        if nets_filter and net not in nets_filter:
+            continue
+        sched.append((t, net, idx, HIGH_PRIORITY if high else 0,
+                      HIGH_DEADLINE_US if high else LOW_DEADLINE_US))
+    return sched
+
+
+def run(fast: bool = False):
+    # deep enough that FIFO queueing delay (what scheduling policy controls)
+    # is hundreds of ms — an order of magnitude above thread-scheduling noise
+    n_total = 960 if fast else 1920
+    # submitter + two dispatchers + done-callbacks are all GIL-bound between
+    # XLA calls; the default 5ms switch interval quantises latencies to
+    # multi-ms slices and masks the scheduling policy under test
+    old_switch = sys.getswitchinterval()
+    sys.setswitchinterval(0.0005)
+    try:
+        return _run(fast, n_total)
+    finally:
+        sys.setswitchinterval(old_switch)
+
+
+def _run(fast: bool, n_total: int):
+    arts = {"fastnet": CompilerPipeline(_fast_net()).run(),
+            "slownet": CompilerPipeline(_slow_net()).run()}
+    cfg = SchedulerConfig(max_batch=8, max_wait_us=1000.0, max_queue=4096)
+    ses = Session(scheduler=cfg)
+    for art in arts.values():
+        ses.load(art)
+    client = ServeClient(ses)
+    rng = np.random.default_rng(0)
+    inputs = {name: [rng.normal(0, 1, _SHAPES[name]).astype(np.float32)
+                     for _ in range(POOL)] for name in arts}
+    # ground truth through the Session API itself (bit-exactness oracle)
+    refs = {name: [np.asarray(ses.run(x, net=name).output_int8)
+                   for x in xs] for name, xs in inputs.items()}
+
+    # warm every power-of-two bucket so the load phases measure dispatch,
+    # not XLA compiles
+    for name in arts:
+        k = 1
+        while k <= cfg.max_batch:
+            ses.run_batch(np.stack((inputs[name] * 2)[:k]), net=name)
+            k *= 2
+
+    # capacity estimate -> offered load at OVERLOAD x
+    per_img_us = {}
+    for name in arts:
+        X = np.stack(inputs[name])
+        iters = 3
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            ses.run_batch(X, net=name)
+        per_img_us[name] = (time.perf_counter() - t0) / (iters * POOL) * 1e6
+    mean_service_us = (FAST_FRACTION * per_img_us["fastnet"]
+                       + (1 - FAST_FRACTION) * per_img_us["slownet"])
+    mean_interarrival_us = mean_service_us / OVERLOAD
+
+    # one arrival trace (seed 7), replayed for every phase of every repeat;
+    # phase-level medians over the repeats tame thread-scheduling noise on
+    # shared CI boxes (each replay is only tens of ms of traffic)
+    mixed = _make_schedule(7, n_total, mean_interarrival_us)
+    solo_fast = _make_schedule(7, n_total, mean_interarrival_us,
+                               nets_filter={"fastnet"})
+
+    def is_high(r):
+        # the FIFO replay strips priorities but keeps class deadlines, so
+        # the class label survives for apples-to-apples percentiles
+        return r.deadline_us == HIGH_DEADLINE_US
+
+    reps = 3 if fast else 5
+    m = {k: [] for k in ("hi_p50", "hi_p99", "lo_p50", "lo_p99", "fifo_p99",
+                         "solo_p99", "mixed_fast_p99", "goodput_hi",
+                         "goodput_sla", "goodput_fifo")}
+    all_recs, last, max_inflight = [], {}, 0
+    for _ in range(reps):
+        # phase 1: fast net alone (head-of-line baseline)
+        solo_recs, _, _ = _drive(client, solo_fast, inputs, refs,
+                                 honor_sla=False)
+        # phase 2: FIFO baseline — same mixed trace, priorities stripped
+        fifo_recs, fifo_wall, fifo_infl = _drive(client, mixed, inputs,
+                                                 refs, honor_sla=False)
+        # phase 3: SLA run — same mixed trace, priorities+deadlines honored
+        sla_recs, sla_wall, sla_infl = _drive(client, mixed, inputs, refs,
+                                              honor_sla=True)
+        all_recs += solo_recs + fifo_recs + sla_recs
+        max_inflight = max(max_inflight, fifo_infl, sla_infl)
+        last = {"hi": _class_stats(sla_recs, is_high),
+                "lo": _class_stats(sla_recs, lambda r: not is_high(r))}
+        m["hi_p50"].append(last["hi"]["p50"])
+        m["hi_p99"].append(last["hi"]["p99"])
+        m["lo_p50"].append(last["lo"]["p50"])
+        m["lo_p99"].append(last["lo"]["p99"])
+        m["fifo_p99"].append(_class_stats(fifo_recs, is_high)["p99"])
+        m["solo_p99"].append(_class_stats(
+            solo_recs, lambda r: r.net == "fastnet")["p99"])
+        # cross-net interference read from the unprioritized mixed phase, so
+        # the solo-vs-mixed delta isolates the slow net's presence (the SLA
+        # phase would fold priority-induced low-class delay into it)
+        m["mixed_fast_p99"].append(_class_stats(
+            fifo_recs, lambda r: r.net == "fastnet")["p99"])
+        m["goodput_hi"].append(_goodput(sla_recs, sla_wall, is_high))
+        m["goodput_sla"].append(_goodput(sla_recs, sla_wall))
+        m["goodput_fifo"].append(_goodput(fifo_recs, fifo_wall))
+    med = {k: float(np.median(v)) for k, v in m.items()}
+
+    exact_all = all(r.exact for r in all_recs if r.ok)
+    resolved_all = all(r.t_done > 0.0 for r in all_recs)
+    rejected = sum(1 for r in all_recs if r.error == "overloaded")
+    shed = sum(1 for r in all_recs if r.error == "deadline_exceeded")
+    hol_ratio = (med["mixed_fast_p99"] / med["solo_p99"]
+                 if med["solo_p99"] else 0.0)
+    prio_win = med["fifo_p99"] / med["hi_p99"] if med["hi_p99"] else 0.0
+
+    ok_lats = [r.latency_us for r in all_recs if r.ok]
+    # load-test latencies amplify ambient machine noise superlinearly
+    # (queueing): observed cross-run spread on a contended box is ~3x, so
+    # these rows declare a budget that only catastrophic regressions (e.g.
+    # priority ordering collapsing to FIFO, goodput collapse) can exceed;
+    # the dimensionless policy ratios (priority_win, hol_ratio) are the
+    # robust per-run signals and live in `derived`
+    tol = 2.5
+    rows = [
+        {
+            "name": "table5_serving_frontend/high_priority",
+            "us_per_call": med["hi_p99"],
+            "goodput": med["goodput_hi"],
+            "tolerance": tol,
+            "derived": (f"p50_us={med['hi_p50']:.0f} n={last['hi']['n']} "
+                        f"fifo_p99_us={med['fifo_p99']:.0f} "
+                        f"priority_win={prio_win:.2f}x "
+                        f"goodput_rps={med['goodput_hi']:.0f}"),
+        },
+        {
+            "name": "table5_serving_frontend/low_priority",
+            "us_per_call": med["lo_p99"],
+            "goodput": med["goodput_sla"],
+            "tolerance": tol,
+            "derived": (f"p50_us={med['lo_p50']:.0f} n={last['lo']['n']} "
+                        f"total_goodput_rps={med['goodput_sla']:.0f} "
+                        f"fifo_goodput_rps={med['goodput_fifo']:.0f}"),
+        },
+        {
+            "name": "table5_serving_frontend/fast_net_isolation",
+            "us_per_call": med["mixed_fast_p99"],
+            # the solo-replay phase is pure backlog drain — the most
+            # noise-amplified number here; the deterministic isolation
+            # proof is tests/test_scheduler.py::TestPerNetDispatchers
+            "tolerance": 6.0,
+            "derived": (f"solo_p99_us={med['solo_p99']:.0f} "
+                        f"hol_ratio={hol_ratio:.2f} "
+                        f"max_inflight={max_inflight} reps={reps}"),
+        },
+        {
+            "name": "table5_serving_frontend/integrity",
+            "us_per_call": sum(ok_lats) / max(1, len(ok_lats)),
+            "tolerance": tol,
+            "derived": (f"bit_exact_vs_session_run={exact_all} "
+                        f"all_resolved={resolved_all} "
+                        f"admitted={len(all_recs) - rejected} "
+                        f"rejected_429={rejected} shed_deadline={shed} "
+                        f"requests={len(all_recs)}"),
+        },
+    ]
+    ses.close()
+    return rows

@@ -1,97 +1,45 @@
-"""Serving driver: batched request loop over AOT prefill/decode binaries.
+"""DEPRECATED — retired in favour of the ``repro.serve`` subsystem.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-        --requests 8 --prompt-len 64 --gen 32
+This module predates the ``Session``/``Scheduler`` runtime: its LLM-era
+``Server`` re-implemented continuous batching privately, on top of model
+code rather than the compiled NVDLA artifact path.  The serving stack now
+lives in :mod:`repro.serve` (stdlib HTTP front-end + in-process
+``ServeClient``) over :mod:`repro.runtime` (per-net dispatcher threads,
+SLA-aware micro-batching, admission control):
 
-Production posture (bare-metal replay at pod scale, DESIGN.md §2):
-  * prefill and decode are each ONE compiled executable (per shape bucket),
-  * the KV arena is statically planned and donated across steps,
-  * request admission batches to the compiled batch size (padding slots),
-  * per-request positions support ragged prompts within a batch.
+    PYTHONPATH=src python -m repro.serve --artifacts <bundle_dir> --port 8000
+
+Importing this shim warns; instantiating the old ``Server`` or invoking
+``main()`` raises with the migration pointer.
 """
 
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+warnings.warn(
+    "repro.launch.serve is deprecated and its LLM-era Server has been "
+    "retired; serve compiled bundles with `python -m repro.serve` "
+    "(repro.serve.ServeClient / make_server over repro.runtime.Session)",
+    DeprecationWarning, stacklevel=2)
 
-from repro import configs
-from repro.launch.mesh import make_host_mesh
-from repro.models import registry
+_MIGRATION = (
+    "repro.launch.serve.Server was retired: the serving stack is now "
+    "repro.serve (HTTP front-end, per-net dispatchers, priority/deadline "
+    "scheduling, admission control) over repro.runtime.Session.  Compile a "
+    "network with repro.core.pipeline.CompilerPipeline, Artifacts.save() "
+    "the bundle, then run `python -m repro.serve --artifacts <dir>`.")
 
 
 class Server:
-    """Minimal continuous-batching server over the compiled step binaries."""
+    """Placeholder for the retired LLM-era continuous-batching server."""
 
-    def __init__(self, cfg, mesh, batch_size: int, max_len: int, seed: int = 0):
-        self.cfg = cfg
-        self.model = registry.get(cfg.family)
-        self.mesh = mesh
-        self.b = batch_size
-        self.max_len = max_len
-        self.params = self.model.init_params(cfg, jax.random.key(seed))
-        self.prefill_fn = jax.jit(
-            lambda p, t: self.model.prefill(cfg, p, {"tokens": t}))
-        self.decode_fn = jax.jit(
-            lambda p, c, t, pos: self.model.decode_step(cfg, p, c,
-                                                        {"tokens": t}, pos),
-            donate_argnums=(1,))
-
-    def generate(self, prompts: np.ndarray, n_gen: int):
-        """prompts: (B, S) int32, right-aligned equal length (bucketed)."""
-        b, s = prompts.shape
-        assert b == self.b and s + n_gen <= self.max_len
-        logits, pre_cache = self.prefill_fn(self.params, jnp.asarray(prompts))
-        cache = self.model.init_cache(self.cfg, b, self.max_len)
-        if self.cfg.family == "ssm":
-            cache = pre_cache
-        else:
-            def blit(dst, src):
-                if dst.ndim >= 2 and src.shape != dst.shape:
-                    idx = tuple([slice(None)] * (dst.ndim - 2)
-                                + [slice(0, src.shape[-2]), slice(None)])
-                    return dst.at[idx].set(src.astype(dst.dtype))
-                return src.astype(dst.dtype)
-            cache = jax.tree.map(blit, cache, pre_cache)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        out = [np.asarray(tok)]
-        for i in range(n_gen - 1):
-            logits, cache = self.decode_fn(self.params, cache, tok,
-                                           jnp.asarray(s + i))
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-            out.append(np.asarray(tok))
-        return np.concatenate(out, 1)
+    def __init__(self, *args, **kwargs):
+        raise NotImplementedError(_MIGRATION)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=configs.ALL_ARCH_IDS)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = configs.get_config(args.arch, smoke=args.smoke)
-    mesh = make_host_mesh()
-    rng = np.random.default_rng(args.seed)
-    with mesh:
-        srv = Server(cfg, mesh, args.requests, args.prompt_len + args.gen)
-        prompts = rng.integers(1, cfg.vocab, (args.requests, args.prompt_len),
-                               dtype=np.int32)
-        t0 = time.perf_counter()
-        gen = srv.generate(prompts, args.gen)
-        dt = time.perf_counter() - t0
-    total_tok = args.requests * args.gen
-    print(f"[serve] arch={cfg.name} b={args.requests} prompt={args.prompt_len} "
-          f"gen={args.gen}: {dt*1e3:.1f} ms total, {total_tok/dt:.0f} tok/s")
-    for r in range(min(args.requests, 3)):
-        print(f"  req{r}: {gen[r][:10].tolist()}")
+def main() -> None:
+    raise SystemExit(_MIGRATION)
 
 
 if __name__ == "__main__":

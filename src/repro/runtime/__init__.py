@@ -4,19 +4,25 @@ Importing this package registers the built-in backends (``baremetal``,
 ``linuxstack``, ``ref``).  Layering:
 
     Session  — residency + name resolution (``repro.runtime.session``)
-    Scheduler — request queue, adaptive micro-batching, padding/lane
-                masking, multi-device dispatch (``repro.runtime.scheduler``)
+    Scheduler — one dispatcher thread + SLA-ordered queue per resident net:
+                adaptive micro-batching, priority/deadline scheduling,
+                admission control, padding/lane masking, multi-device
+                dispatch (``repro.runtime.scheduler``)
     Backends — anything satisfying ``ExecutorBackend``
                (``repro.runtime.registry.register_backend`` to add one)
+
+The traffic-facing HTTP front-end over this layer lives in ``repro.serve``.
 """
 
 from repro.core.executor import ExecutorBackend, ExecutorCapabilities
 from repro.runtime import backends as _backends  # noqa: F401  (registers builtins)
 from repro.runtime.registry import backend_names, create as create_executor, \
     register_backend
-from repro.runtime.scheduler import Scheduler, SchedulerConfig
+from repro.runtime.scheduler import (DeadlineExceededError, QueueFullError,
+                                     Scheduler, SchedulerConfig)
 from repro.runtime.session import NetStats, Session
 
 __all__ = ["Session", "NetStats", "Scheduler", "SchedulerConfig",
+           "QueueFullError", "DeadlineExceededError",
            "ExecutorBackend", "ExecutorCapabilities", "register_backend",
            "create_executor", "backend_names"]

@@ -1,19 +1,38 @@
-"""Async serving scheduler: request queue + adaptive micro-batching engine.
+"""Async serving scheduler: per-net dispatchers + SLA-aware micro-batching.
 
 ``Session.submit(x)`` enqueues one inference request and returns a
-``concurrent.futures.Future``.  A background dispatcher thread drains the
-queue, coalesces pending same-network requests into one batch, pads it to a
-power-of-two bucket (so each batch shape compiles exactly once), executes it
-through the backend's ``run_batch(padded, lanes)``, and resolves each future
-with its lane's ``ExecResult`` — bit-exact versus running every request
-through sequential ``run`` calls, because the batch program itself is
-bit-exact and padding lanes are sliced off before anyone sees them.
+``concurrent.futures.Future``.  Every resident network gets its **own
+dispatcher thread and queue** (a slow ResNet batch can never head-of-line
+block LeNet traffic); each dispatcher drains its queue, coalesces compatible
+requests into one batch, pads it to a power-of-two bucket (so each batch
+shape compiles exactly once), executes it through the backend's
+``run_batch(padded, lanes)``, and resolves each future with its lane's
+``ExecResult`` — bit-exact versus running every request through sequential
+``run`` calls, because the batch program itself is bit-exact and padding
+lanes are sliced off before anyone sees them.
 
-Micro-batching is *adaptive*: the dispatcher tracks an EMA of recent
+**SLA-aware ordering.**  Requests carry ``priority`` (higher = more urgent)
+and an optional ``deadline_us`` latency budget.  The queue is a heap ordered
+by ``(-priority, deadline, arrival)``: urgent traffic launches first, and
+within a priority class the tightest deadline wins (EDF).  A request whose
+deadline has already passed when the dispatcher would launch it is **shed**
+— its future fails fast with :class:`DeadlineExceededError` instead of
+burning a batch slot on an answer nobody wants.
+
+**Continuous batching.**  The collector holds a forming batch open (up to
+``max_wait_us``) and admits late-arriving compatible requests right up to
+launch; after the hold it re-reads the queue head, so a high-priority
+arrival during the hold window leads the very next dispatch.
+
+**Admission control.**  ``SchedulerConfig.max_queue`` bounds each net's
+queue; past it, ``submit`` fails fast with :class:`QueueFullError` (the HTTP
+front-end maps it to 429) instead of growing the queue without bound.
+
+Micro-batching is *adaptive*: each dispatcher tracks an EMA of recent
 coalesce sizes.  Under solo traffic (EMA ~ 1) it dispatches immediately —
 waiting would only add latency; once concurrency is observed it holds the
 head request up to ``max_wait_us`` to let the batch fill towards
-``max_batch``.  Requests for different resident networks never coalesce.
+``max_batch``.
 
 When several devices are visible and the backend reports
 ``capabilities().shardable``, a coalesced batch whose bucket divides the
@@ -27,26 +46,56 @@ already-padded batch plus the live-lane count and stay policy-free.
 
 from __future__ import annotations
 
-import collections
 import dataclasses
+import heapq
+import itertools
+import math
 import threading
 import time
-from concurrent.futures import Future
-from typing import Callable, List, Optional
+from concurrent.futures import Future, InvalidStateError
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.executor import ExecResult
 
-# EMA of coalesce sizes above which the dispatcher starts holding the head
+# EMA of coalesce sizes above which a dispatcher starts holding the head
 # request for stragglers (below it, traffic is effectively solo).
 _COALESCE_THRESHOLD = 1.25
 _EMA_ALPHA = 0.2
 
 
+class QueueFullError(RuntimeError):
+    """Admission control: the target net's queue is at ``max_queue``.
+
+    Raised synchronously by ``submit`` — the request was never enqueued.
+    The HTTP front-end maps this to ``429 Too Many Requests``.
+    """
+
+    def __init__(self, net_name: str, depth: int, bound: int):
+        super().__init__(
+            f"queue for network {net_name!r} is full "
+            f"({depth}/{bound} queued); retry later or raise "
+            f"SchedulerConfig.max_queue")
+        self.net_name, self.depth, self.bound = net_name, depth, bound
+
+
+class DeadlineExceededError(RuntimeError):
+    """The request's ``deadline_us`` budget elapsed before launch; it was
+    shed by the collector and never executed.  Delivered through the
+    request's future."""
+
+    def __init__(self, net_name: str, deadline_us: float, waited_us: float):
+        super().__init__(
+            f"request for network {net_name!r} shed: deadline_us="
+            f"{deadline_us:.0f} elapsed after {waited_us:.0f}us in queue")
+        self.net_name = net_name
+        self.deadline_us, self.waited_us = deadline_us, waited_us
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
-    """Micro-batching knobs.
+    """Micro-batching + SLA knobs (per-net dispatchers all share one config).
 
     ``max_batch``    — coalescing ceiling per dispatch.
     ``max_wait_us``  — longest the head request is held for stragglers.
@@ -54,13 +103,25 @@ class SchedulerConfig:
                        (EMA of coalesce sizes stays ~1).
     ``shard``        — shard coalesced batches lane-wise across devices when
                        the backend is shardable and >1 device is visible.
+    ``max_queue``    — per-net queue bound; ``submit`` past it raises
+                       ``QueueFullError`` (None = unbounded, the pre-serving
+                       behaviour).
     ``latency_window`` — ring-buffer size for per-request latency samples.
+    ``close_timeout_s`` — the no-progress window ``close()`` allows before
+                       force-cancelling outstanding futures: as long as the
+                       dispatcher keeps completing work the wait continues
+                       (a slow drain is not a hang), but a window in which
+                       nothing completes means a hung backend — and a hung
+                       backend must never leave a caller blocked on
+                       ``result()``.
     """
     max_batch: int = 8
     max_wait_us: float = 200.0
     adaptive: bool = True
     shard: bool = True
+    max_queue: Optional[int] = None
     latency_window: int = 2048
+    close_timeout_s: float = 30.0
 
 
 @dataclasses.dataclass
@@ -69,9 +130,16 @@ class _Request:
     x: np.ndarray
     future: Future
     t_submit: float
+    priority: int = 0            # higher = more urgent
+    deadline: float = math.inf   # absolute perf_counter() launch deadline
+    deadline_us: float = 0.0     # the caller's relative budget (for errors)
+    seq: int = 0                 # arrival order (heap tiebreak, FIFO w/in class)
     group_n: int = 1             # size of the submit_many group this came in
                                  # with: a pre-formed batch may exceed
                                  # max_batch and still dispatch as one program
+
+    def sort_key(self):
+        return (-self.priority, self.deadline, self.seq)
 
 
 def bucket_size(n: int, max_batch: int) -> int:
@@ -82,6 +150,17 @@ def bucket_size(n: int, max_batch: int) -> int:
     while b < n:
         b *= 2
     return min(b, max_batch) if n <= max_batch else b
+
+
+def _resolve_future(future: Future, set_fn, value) -> None:
+    """set_result/set_exception tolerant of a concurrent ``cancel()`` from
+    ``close()`` — losing that race must not kill the dispatcher thread."""
+    if future.cancelled():
+        return
+    try:
+        set_fn(value)
+    except InvalidStateError:
+        pass                                # cancelled between check and set
 
 
 def pad_batch(xs: List[np.ndarray], bucket: int) -> np.ndarray:
@@ -95,80 +174,105 @@ def pad_batch(xs: List[np.ndarray], bucket: int) -> np.ndarray:
     return X
 
 
-class Scheduler:
-    """Request queue + dispatcher thread behind a ``Session``.
+class _NetDispatcher:
+    """One resident network's queue + dispatcher thread.
 
-    One scheduler serves all of a session's resident networks; requests for
-    the same network coalesce, requests for different networks dispatch in
-    arrival order without blocking each other past the current batch.
+    The heap orders requests by ``(-priority, deadline, seq)``; the collector
+    sheds expired-deadline requests at launch-selection time and admits
+    late arrivals into the forming batch until it actually launches.
     """
 
-    def __init__(self, config: Optional[SchedulerConfig] = None):
-        self.config = config or SchedulerConfig()
-        self._queue: "collections.deque[_Request]" = collections.deque()
+    def __init__(self, net, config: SchedulerConfig, scheduler: "Scheduler"):
+        self.net = net
+        self.config = config
+        self.scheduler = scheduler
         # plain Lock (not the default RLock): the condition is hot on submit
         self._cond = threading.Condition(threading.Lock())
+        self._heap: List[tuple] = []         # (sort_key, _Request)
         self._thread: Optional[threading.Thread] = None
-        self._stop = False
+        self._stop = False                   # exit now, cancel queued
+        self._drain = False                  # exit once the queue empties
+        self._inflight: List[_Request] = []  # batch currently executing
         self._ema_coalesce = 1.0
-        self._mesh = None
-        self._mesh_checked = False
 
     # -- client side ---------------------------------------------------------
-    def submit(self, net, x: np.ndarray) -> Future:
-        """Enqueue one request against resident network ``net``."""
-        return self.submit_many(net, [x])[0]
-
-    def submit_many(self, net, xs) -> List[Future]:
-        """Enqueue several requests atomically (one lock hold, one wake-up),
-        so a pre-formed batch reaches the dispatcher whole instead of being
-        peeled off a request at a time.  When the group reaches the head of
-        the queue it may exceed ``max_batch`` and still dispatch as one
-        program (explicit ``run_batch`` callers keep the single-program
-        semantics; the cap bounds *coalescing* of independent submits).
-        Under mixed traffic a group queued behind other requests can split
-        across dispatches — results stay bit-exact either way, and batch
-        shapes stay on the power-of-two bucket grid."""
-        now = time.perf_counter()
-        reqs = [_Request(net=net, x=x, future=Future(), t_submit=now,
-                         group_n=len(xs)) for x in xs]
+    def enqueue(self, reqs: List[_Request]) -> None:
+        """Admit ``reqs`` (all-or-nothing) and wake the dispatcher if needed.
+        Raises ``QueueFullError`` past the configured queue bound."""
         with self._cond:
-            if self._stop:
+            if self._stop or self._drain:
                 raise RuntimeError("scheduler is closed; create a new Session")
+            bound = self.config.max_queue
+            if bound is not None and len(self._heap) + len(reqs) > bound:
+                self.net.stats.note_reject(len(reqs))
+                raise QueueFullError(getattr(self.net, "name", "?"),
+                                     len(self._heap), bound)
             if self._thread is None:
                 self._thread = threading.Thread(
-                    target=self._loop, name="repro-scheduler", daemon=True)
+                    target=self._loop,
+                    name=f"repro-dispatch-{getattr(self.net, 'name', '?')}",
+                    daemon=True)
                 self._thread.start()
-            was_empty = not self._queue
-            self._queue.extend(reqs)
-            st = net.stats
-            st.submits += len(reqs)
-            depth = sum(1 for r in self._queue if r.net is net)
-            st.queue_depth_peak = max(st.queue_depth_peak, depth)
+            was_empty = not self._heap
+            for r in reqs:
+                heapq.heappush(self._heap, (r.sort_key(), r))
+            depth = len(self._heap)
+            self.net.stats.note_submit(len(reqs), depth)
             # wake the dispatcher only on the transitions it acts on — queue
             # went non-empty, or a full batch is now available.  Intermediate
             # submits land silently (the dispatcher's hold-wait re-checks on
             # wake or deadline), avoiding a context switch per request.
             if was_empty or depth >= self.config.max_batch:
                 self._cond.notify()
-        return [r.future for r in reqs]
 
     def queue_depth(self) -> int:
         with self._cond:
-            return len(self._queue)
+            return len(self._heap)
 
-    def close(self) -> None:
-        """Stop the dispatcher; pending requests get CancelledError."""
+    def close(self, drain: bool = False) -> None:
+        """Stop the dispatcher.  ``drain=False`` cancels queued requests
+        immediately; ``drain=True`` lets the queue empty first.  Either way,
+        every future this dispatcher ever accepted is resolved when this
+        returns: results for dispatched work, ``CancelledError`` for
+        cancelled work — a caller blocked in ``Future.result()`` always
+        wakes up, even if the backend hangs (``close_timeout_s``)."""
         with self._cond:
-            self._stop = True
-            pending = list(self._queue)
-            self._queue.clear()
+            pending: List[_Request] = []
+            if drain:
+                self._drain = True
+            else:
+                self._stop = True
+                pending = [r for _, r in self._heap]
+                self._heap.clear()
             self._cond.notify_all()
         for req in pending:
             req.future.cancel()
-        if self._thread is not None:
-            self._thread.join(timeout=5.0)
-            self._thread = None
+        thread = self._thread
+        if thread is not None:
+            # the timeout guards a HUNG backend, not a slow drain: keep
+            # waiting as long as the dispatcher is making progress, and
+            # fall through to force-cancel after ONE full window in which
+            # nothing completed
+            with self._cond:
+                last_remaining = len(self._heap) + len(self._inflight)
+            while True:
+                thread.join(timeout=self.config.close_timeout_s)
+                if not thread.is_alive():
+                    break
+                with self._cond:
+                    remaining = len(self._heap) + len(self._inflight)
+                if remaining >= last_remaining:
+                    break
+                last_remaining = remaining
+        with self._cond:
+            self._stop = True                # drain path: no further batches
+            self._cond.notify_all()
+            leftovers = [r for _, r in self._heap] + list(self._inflight)
+            self._heap.clear()
+        for req in leftovers:
+            # join timed out (hung backend) or drain left stragglers: never
+            # leave a caller blocked forever on result()
+            req.future.cancel()
 
     # -- dispatcher side -----------------------------------------------------
     def _batch_cap(self, head: _Request) -> int:
@@ -176,7 +280,7 @@ class Scheduler:
         # config cap, but a backend's declared hard ceiling always wins
         cap = max(self.config.max_batch, head.group_n)
         try:
-            backend_max = head.net.executor.capabilities().max_batch
+            backend_max = self.net.executor.capabilities().max_batch
         except Exception:
             backend_max = None
         if backend_max is not None:
@@ -185,73 +289,85 @@ class Scheduler:
 
     @staticmethod
     def _compatible(head: _Request, r: _Request) -> bool:
-        """Requests may share a dispatch: same network AND same input dtype
-        (int8 lanes pass through quantisation; stacking them with float32
-        lanes would promote the batch and re-quantise them — wrong bytes)."""
-        return r.net is head.net and \
-            getattr(r.x, "dtype", None) == getattr(head.x, "dtype", None)
+        """Requests may share a dispatch when their input dtypes match (int8
+        lanes pass through quantisation; stacking them with float32 lanes
+        would promote the batch and re-quantise them — wrong bytes).  Same
+        net is implied: this dispatcher serves exactly one network."""
+        return getattr(r.x, "dtype", None) == getattr(head.x, "dtype", None)
 
-    def _take_same_net(self, batch: List[_Request]) -> None:
-        """Move queued requests compatible with batch[0] into ``batch``
-        (stable order for everyone else), up to the batch cap.  Caller holds
-        the lock."""
-        head, cap = batch[0], self._batch_cap(batch[0])
-        keep: "collections.deque[_Request]" = collections.deque()
-        while self._queue and len(batch) < cap:
-            r = self._queue.popleft()
-            (batch if self._compatible(head, r) else keep).append(r)
-        keep.extend(self._queue)
-        self._queue.clear()
-        self._queue.extend(keep)
+    def _shed(self, req: _Request, now: float) -> None:
+        self.net.stats.note_shed(1)
+        _resolve_future(req.future, req.future.set_exception,
+                        DeadlineExceededError(
+                            getattr(self.net, "name", "?"), req.deadline_us,
+                            (now - req.t_submit) * 1e6))
 
     def _collect(self) -> Optional[List[_Request]]:
-        """Block for the next batch: head request + same-net stragglers.
+        """Block for the next batch: best-(priority, deadline) head plus
+        compatible stragglers, shedding expired-deadline requests.
 
-        The head stays queued during the hold so the producer-side full-batch
-        wake-up condition keeps seeing the true depth; the hold ends when a
-        full batch is available or the head has waited ``max_wait_us``.
+        Queued requests stay on the heap during the hold so the producer-side
+        full-batch wake-up keeps seeing the true depth, and so late arrivals
+        (including higher-priority ones, which displace the head) join the
+        forming batch right up to launch; the hold ends when a full batch is
+        available or the head has waited ``max_wait_us``.  Returns ``None``
+        to stop, ``[]`` when a pass shed everything it popped.
         """
         cfg = self.config
-        with self._cond:
-            while not self._queue and not self._stop:
-                self._cond.wait()
-            if self._stop:
-                return None
-            head = self._queue[0]
-            cap = self._batch_cap(head)
-            hold = not cfg.adaptive or self._ema_coalesce > _COALESCE_THRESHOLD
-            if hold:
-                deadline = head.t_submit + cfg.max_wait_us * 1e-6
-                while not self._stop:
-                    same = sum(1 for r in self._queue
-                               if self._compatible(head, r))
-                    if same >= cap:
-                        break
-                    remaining = deadline - time.perf_counter()
-                    if remaining <= 0:
-                        break
-                    self._cond.wait(remaining)
-            if self._stop:
-                return None
-            batch = [self._queue.popleft()]
-            self._take_same_net(batch)
-        return batch
-
-    def _lane_sharding(self, lanes_padded: int):
-        """NamedSharding for a shardable batch, or None."""
-        if not self.config.shard:
-            return None
-        if not self._mesh_checked:
-            from repro.distributed import sharding as shard_mod
-            self._mesh = shard_mod.serving_mesh()
-            self._mesh_checked = True
-        if self._mesh is None or lanes_padded % self._mesh.size != 0:
-            return None
-        from repro.distributed import sharding as shard_mod
-        return shard_mod.lane_sharding(self._mesh)
+        expired: List[_Request] = []
+        try:
+            with self._cond:
+                while not self._heap:
+                    if self._stop or self._drain:
+                        return None
+                    self._cond.wait()
+                if self._stop:
+                    return None
+                head = self._heap[0][1]
+                cap = self._batch_cap(head)
+                hold = (not self._drain
+                        and (not cfg.adaptive
+                             or self._ema_coalesce > _COALESCE_THRESHOLD))
+                if hold:
+                    deadline = head.t_submit + cfg.max_wait_us * 1e-6
+                    while not self._stop:
+                        same = sum(1 for _, r in self._heap
+                                   if self._compatible(head, r))
+                        if same >= cap:
+                            break
+                        remaining = deadline - time.perf_counter()
+                        if remaining <= 0:
+                            break
+                        self._cond.wait(remaining)
+                if self._stop:
+                    return None
+                # launch: pop in (priority, deadline) order; shed expired,
+                # push dtype-incompatible requests back for the next pass
+                now = time.perf_counter()
+                head = self._heap[0][1]        # may have changed during hold
+                cap = self._batch_cap(head)
+                batch: List[_Request] = []
+                putback: List[tuple] = []
+                while self._heap and len(batch) < cap:
+                    _, r = heapq.heappop(self._heap)
+                    if r.deadline < now:
+                        expired.append(r)
+                    elif self._compatible(head, r):
+                        batch.append(r)
+                    else:
+                        putback.append((r.sort_key(), r))
+                for item in putback:
+                    heapq.heappush(self._heap, item)
+                self._inflight = list(batch)
+            return batch
+        finally:
+            # resolve shed futures outside the lock (done-callbacks may run)
+            now = time.perf_counter()
+            for r in expired:
+                self._shed(r, now)
 
     def _dispatch(self, batch: List[_Request]) -> None:
-        net = batch[0].net
+        net = self.net
         ex = net.executor
         k = len(batch)
         try:
@@ -270,24 +386,19 @@ class Scheduler:
                     bucket = min(bucket, caps.max_batch)
                 padded = pad_batch([r.x for r in batch], bucket)
                 if caps.shardable:
-                    ex.batch_sharding = self._lane_sharding(bucket)
+                    ex.batch_sharding = self.scheduler._lane_sharding(bucket)
                 res = ex.run_batch(padded, lanes=k)
                 outs = [ExecResult(output_int8=res.output_int8[i],
                                    output=res.output[i]) for i in range(k)]
         except BaseException as e:          # noqa: BLE001 — forwarded to callers
             for r in batch:
-                if not r.future.cancelled():
-                    r.future.set_exception(e)
+                _resolve_future(r.future, r.future.set_exception, e)
             return
         done = time.perf_counter()
-        st = net.stats
-        st.dispatches += 1
-        st.coalesced_images += k
-        st.coalesce_max = max(st.coalesce_max, k)
+        net.stats.note_dispatch(
+            k, [(done - r.t_submit) * 1e6 for r in batch])
         for r, out in zip(batch, outs):
-            st.latencies_us.append((done - r.t_submit) * 1e6)
-            if not r.future.cancelled():
-                r.future.set_result(out)
+            _resolve_future(r.future, r.future.set_result, out)
         self._ema_coalesce = ((1 - _EMA_ALPHA) * self._ema_coalesce
                               + _EMA_ALPHA * k)
 
@@ -296,4 +407,125 @@ class Scheduler:
             batch = self._collect()
             if batch is None:
                 return
-            self._dispatch(batch)
+            if batch:
+                self._dispatch(batch)
+            with self._cond:
+                self._inflight = []
+
+
+class Scheduler:
+    """Per-net dispatcher threads behind a ``Session``.
+
+    Each resident network owns an independent queue and dispatcher thread
+    (created lazily on its first submit), so traffic for one net never
+    head-of-line blocks another's.  The public surface is unchanged from the
+    single-dispatcher era — ``submit`` / ``submit_many`` / ``queue_depth`` /
+    ``close`` — plus per-request ``priority`` and ``deadline_us``.
+    """
+
+    def __init__(self, config: Optional[SchedulerConfig] = None):
+        self.config = config or SchedulerConfig()
+        self._lock = threading.Lock()
+        self._dispatchers: Dict[int, _NetDispatcher] = {}
+        self._retired: Dict[int, object] = {}   # unloaded nets, by id
+        self._closed = False
+        self._seq = itertools.count()
+        self._mesh = None
+        self._mesh_checked = False
+
+    # -- client side ---------------------------------------------------------
+    def submit(self, net, x: np.ndarray, priority: int = 0,
+               deadline_us: Optional[float] = None) -> Future:
+        """Enqueue one request against resident network ``net``."""
+        return self.submit_many(net, [x], priority=priority,
+                                deadline_us=deadline_us)[0]
+
+    def submit_many(self, net, xs, priority: int = 0,
+                    deadline_us: Optional[float] = None) -> List[Future]:
+        """Enqueue several requests atomically (one lock hold, one wake-up),
+        so a pre-formed batch reaches the dispatcher whole instead of being
+        peeled off a request at a time.  When the group reaches the head of
+        the queue it may exceed ``max_batch`` and still dispatch as one
+        program (explicit ``run_batch`` callers keep the single-program
+        semantics; the cap bounds *coalescing* of independent submits).
+        Under mixed traffic a group queued behind other requests can split
+        across dispatches — results stay bit-exact either way, and batch
+        shapes stay on the power-of-two bucket grid.
+
+        ``priority`` (higher = more urgent) and ``deadline_us`` (relative
+        latency budget; past it the request is shed with
+        ``DeadlineExceededError``) order the per-net queue.  Raises
+        ``QueueFullError`` when the net's queue is at ``max_queue``.
+        """
+        if deadline_us is not None and math.isnan(deadline_us):
+            raise ValueError("deadline_us must not be NaN (a NaN sort key "
+                             "would corrupt the EDF queue order)")
+        now = time.perf_counter()
+        # deadline_us=0 means an already-expired budget (shed at launch),
+        # NOT "no deadline" — only None/inf disable the deadline entirely
+        dl = now + deadline_us * 1e-6 if deadline_us is not None else math.inf
+        reqs = [_Request(net=net, x=x, future=Future(), t_submit=now,
+                         priority=priority, deadline=dl,
+                         deadline_us=deadline_us or 0.0,
+                         seq=next(self._seq), group_n=len(xs)) for x in xs]
+        self._dispatcher(net).enqueue(reqs)
+        return [r.future for r in reqs]
+
+    def queue_depth(self, net=None) -> int:
+        """Queued (not in-flight) requests: one net's, or all nets' summed."""
+        with self._lock:
+            ds = list(self._dispatchers.values())
+        return sum(d.queue_depth() for d in ds
+                   if net is None or d.net is net)
+
+    def close(self, drain: bool = False) -> None:
+        """Stop every dispatcher.  ``drain=False`` (default): queued requests
+        get ``CancelledError``, the in-flight batch finishes; ``drain=True``:
+        queued work completes first.  Every future ever returned by
+        ``submit`` is resolved when this returns."""
+        with self._lock:
+            self._closed = True
+            ds = list(self._dispatchers.values())
+        for d in ds:
+            d.close(drain=drain)
+
+    def close_net(self, net, drain: bool = True) -> None:
+        """Stop one net's dispatcher (Session.unload / replace) — without
+        this its idle thread would outlive the net's residency.  The net is
+        remembered as retired so a racing ``submit`` that already resolved
+        it cannot silently respawn a dispatcher for a dead executor."""
+        with self._lock:
+            d = self._dispatchers.pop(id(net), None)
+            self._retired[id(net)] = net    # hold the ref: id() stays unique
+        if d is not None:
+            d.close(drain=drain)
+
+    # -- internals -----------------------------------------------------------
+    def _dispatcher(self, net) -> _NetDispatcher:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("scheduler is closed; create a new Session")
+            if id(net) in self._retired:
+                raise RuntimeError(
+                    f"network {getattr(net, 'name', '?')!r} was unloaded")
+            d = self._dispatchers.get(id(net))
+            if d is None:
+                d = _NetDispatcher(net, self.config, self)
+                self._dispatchers[id(net)] = d
+            return d
+
+    def _lane_sharding(self, lanes_padded: int):
+        """NamedSharding for a shardable batch, or None.  Called from
+        dispatcher threads; the mesh probe is cached after the first call."""
+        if not self.config.shard:
+            return None
+        with self._lock:
+            if not self._mesh_checked:
+                from repro.distributed import sharding as shard_mod
+                self._mesh = shard_mod.serving_mesh()
+                self._mesh_checked = True
+            mesh = self._mesh
+        if mesh is None or lanes_padded % mesh.size != 0:
+            return None
+        from repro.distributed import sharding as shard_mod
+        return shard_mod.lane_sharding(mesh)

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import weakref
 from concurrent.futures import Future
 from typing import Dict, List, Optional
@@ -44,10 +45,16 @@ from repro.runtime.scheduler import Scheduler, SchedulerConfig
 
 @dataclasses.dataclass
 class NetStats:
-    """Per-network serving counters.
+    """Per-network serving counters, safe to mutate and read concurrently.
 
     The first block counts API-level traffic (kept from the pre-scheduler
-    Session); the second block is filled by the scheduler's dispatcher.
+    Session); the second block is filled by the net's dispatcher thread.
+    With one dispatcher per resident net *plus* the ``/metrics`` endpoint
+    reading from HTTP threads, every mutation goes through a ``note_*``
+    method under the internal lock, and readers take a coherent
+    ``snapshot()``.  Bare attribute reads remain fine for tests/debugging
+    (ints are torn-read-free under CPython), but cross-counter invariants
+    are only guaranteed by ``snapshot()``.
     """
     calls: int = 0               # Session.run invocations
     batch_calls: int = 0         # Session.run_batch invocations
@@ -57,9 +64,43 @@ class NetStats:
     coalesced_images: int = 0    # requests served through dispatches
     coalesce_max: int = 0        # largest coalesced batch so far
     queue_depth_peak: int = 0
+    rejected: int = 0            # admission control (QueueFullError)
+    shed: int = 0                # deadline passed before launch
     latencies_us: "collections.deque" = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=2048), repr=False)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
+    # -- writers (scheduler + Session threads) -------------------------------
+    def note_call(self, images: int = 1, batch: bool = False) -> None:
+        with self._lock:
+            if batch:
+                self.batch_calls += 1
+            else:
+                self.calls += 1
+            self.images += images
+
+    def note_submit(self, n: int, depth: int) -> None:
+        with self._lock:
+            self.submits += n
+            self.queue_depth_peak = max(self.queue_depth_peak, depth)
+
+    def note_reject(self, n: int) -> None:
+        with self._lock:
+            self.rejected += n
+
+    def note_shed(self, n: int) -> None:
+        with self._lock:
+            self.shed += n
+
+    def note_dispatch(self, k: int, latencies_us) -> None:
+        with self._lock:
+            self.dispatches += 1
+            self.coalesced_images += k
+            self.coalesce_max = max(self.coalesce_max, k)
+            self.latencies_us.extend(latencies_us)
+
+    # -- readers -------------------------------------------------------------
     @property
     def coalesce_mean(self) -> float:
         return self.coalesced_images / self.dispatches if self.dispatches else 0.0
@@ -67,22 +108,30 @@ class NetStats:
     def latency_us(self, pct: float) -> float:
         """Submit->result latency percentile (e.g. 50, 90, 99) over the
         recent-request window; 0.0 before any request completes."""
-        # the dispatcher thread appends concurrently; snapshot with a retry
-        # (deque appends are atomic, but iteration can observe a mutation)
-        for _ in range(8):
-            try:
-                samples = list(self.latencies_us)
-                break
-            except RuntimeError:
-                continue
-        else:
-            samples = []
+        with self._lock:
+            samples = list(self.latencies_us)
         if not samples:
             return 0.0
         return float(np.percentile(np.asarray(samples), pct))
 
     def latency_summary(self) -> Dict[str, float]:
         return {f"p{p:g}": self.latency_us(p) for p in (50, 90, 99)}
+
+    def snapshot(self) -> Dict[str, float]:
+        """One coherent copy of every counter plus latency percentiles —
+        the unit ``/metrics`` renders.  Taken under the same lock the
+        dispatcher mutates under, so no cross-counter tearing."""
+        with self._lock:
+            out = {f.name: getattr(self, f.name)
+                   for f in dataclasses.fields(self)
+                   if f.name not in ("latencies_us", "_lock")}
+            samples = list(self.latencies_us)
+        arr = np.asarray(samples) if samples else None
+        for p in (50, 90, 99):
+            out[f"latency_p{p}_us"] = (
+                float(np.percentile(arr, p)) if arr is not None else 0.0)
+        out["latency_samples"] = len(samples)
+        return out
 
 
 @dataclasses.dataclass
@@ -125,6 +174,8 @@ class Session:
         ex = registry.create(backend, artifacts, **executor_kw)
         if name not in self._nets:
             self._order.append(name)
+        else:                               # replace=True: retire the old
+            self._scheduler.close_net(self._nets[name])  # net's dispatcher
         stats = NetStats(latencies_us=collections.deque(
             maxlen=self._scheduler.config.latency_window))
         dims = getattr(ex, "input_dims", None)
@@ -135,13 +186,17 @@ class Session:
         return name
 
     def unload(self, name: str) -> None:
-        self._resolve(name)
+        """Drop a resident network; its dispatcher drains and stops."""
+        net = self._resolve(name)
         del self._nets[name]
         self._order.remove(name)
+        self._scheduler.close_net(net)
 
-    def close(self) -> None:
-        """Stop the scheduler thread; pending futures are cancelled."""
-        self._scheduler.close()
+    def close(self, drain: bool = False) -> None:
+        """Stop the per-net dispatcher threads.  ``drain=False`` (default)
+        cancels queued requests; ``drain=True`` completes them first.
+        Either way every outstanding future is resolved on return."""
+        self._scheduler.close(drain=drain)
 
     def __enter__(self) -> "Session":
         return self
@@ -185,6 +240,12 @@ class Session:
     def stats(self, net: Optional[str] = None) -> NetStats:
         return self._resolve(net).stats
 
+    def queue_depth(self, net: Optional[str] = None) -> int:
+        """Requests currently queued (not in-flight) — one net's, or every
+        resident net's summed when ``net`` is None."""
+        return self._scheduler.queue_depth(
+            self._resolve(net) if net is not None else None)
+
     # -- serving -------------------------------------------------------------
     def _check_input(self, n: _Net, x) -> np.ndarray:
         """Fail fast on malformed inputs so one bad submit can never poison
@@ -205,19 +266,30 @@ class Session:
             x = x.reshape(-1)
         return x
 
-    def submit(self, x: np.ndarray, net: Optional[str] = None) -> "Future[ExecResult]":
+    def submit(self, x: np.ndarray, net: Optional[str] = None,
+               priority: int = 0,
+               deadline_us: Optional[float] = None) -> "Future[ExecResult]":
         """Enqueue one inference; returns a Future resolving to its
         ``ExecResult``.  Concurrent submits against the same network coalesce
-        into one padded vmapped batch (bit-exact vs sequential ``run``)."""
+        into one padded vmapped batch (bit-exact vs sequential ``run``).
+
+        ``priority`` (higher = more urgent) and ``deadline_us`` (relative
+        latency budget) feed the net's SLA-aware queue: urgent-first,
+        earliest-deadline within a class; a request still queued past its
+        deadline is shed (its future raises ``DeadlineExceededError``), and
+        a queue at ``SchedulerConfig.max_queue`` rejects the submit outright
+        with ``QueueFullError``.
+        """
         n = self._resolve(net)
-        return self._scheduler.submit(n, self._check_input(n, x))
+        return self._scheduler.submit(n, self._check_input(n, x),
+                                      priority=priority,
+                                      deadline_us=deadline_us)
 
     def run(self, x: np.ndarray, net: Optional[str] = None) -> ExecResult:
         """One inference on one input image (synchronous ``submit``)."""
         n = self._resolve(net)
         fut = self._scheduler.submit(n, self._check_input(n, x))
-        n.stats.calls += 1
-        n.stats.images += 1
+        n.stats.note_call()
         return fut.result()
 
     def run_batch(self, X: np.ndarray, net: Optional[str] = None) -> ExecResult:
@@ -231,8 +303,7 @@ class Session:
         n = self._resolve(net)
         futs = self._scheduler.submit_many(
             n, [self._check_input(n, x) for x in X])
-        n.stats.batch_calls += 1
-        n.stats.images += int(X.shape[0])
+        n.stats.note_call(int(X.shape[0]), batch=True)
         outs = [f.result() for f in futs]
         return ExecResult(output_int8=np.stack([o.output_int8 for o in outs]),
                           output=np.stack([o.output for o in outs]))

@@ -1,0 +1,28 @@
+"""``repro.serve`` — multi-tenant serving front-end over ``repro.runtime``.
+
+The traffic-facing layer between clients and the runtime: a stdlib-only
+HTTP server plus an in-process client that drive the *same* code path —
+benchmarks and tests exercise real serving semantics without sockets, and
+the socket path adds only transport.
+
+    repro.serve.http  — ThreadingHTTPServer: POST /v1/infer/<net>,
+                        GET /v1/nets, GET /healthz, GET /metrics
+    repro.serve.client — ServeClient: validation, priority/deadline
+                        plumbing, typed errors with HTTP status codes
+    repro.serve.payload — npy / JSON tensor codecs
+    repro.serve.metrics — Prometheus text rendering from NetStats.snapshot()
+
+    PYTHONPATH=src python -m repro.serve --artifacts bundle_dir --port 8000
+
+Every resident network is served by its own dispatcher thread
+(``repro.runtime.scheduler``), so one tenant's slow model never
+head-of-line blocks another's; requests carry ``priority`` and
+``deadline_us`` and the queue bound rejects overload with 429.
+"""
+
+from repro.serve.client import (BadRequestError, DeadlineError, NotFoundError,
+                                OverloadedError, ServeClient, ServeError)
+from repro.serve.http import make_server, serve_forever
+
+__all__ = ["ServeClient", "ServeError", "BadRequestError", "NotFoundError",
+           "OverloadedError", "DeadlineError", "make_server", "serve_forever"]

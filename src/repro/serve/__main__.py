@@ -1,0 +1,58 @@
+"""CLI: serve saved artifact bundles over HTTP.
+
+    PYTHONPATH=src python -m repro.serve --artifacts lenet5_bundle \
+        --artifacts resnet18_bundle --backend baremetal --port 8000 \
+        --max-queue 256 --max-batch 8 --max-wait-us 200
+
+Each ``--artifacts`` directory is an ``Artifacts.save`` bundle; it becomes
+resident under its manifest ``graph_name`` (override one with
+``--artifacts dir:name``).  Every net gets its own dispatcher thread;
+``--max-queue`` bounds each queue (admission control -> HTTP 429).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core.pipeline import Artifacts
+from repro.runtime import Session, SchedulerConfig
+from repro.serve.http import serve_forever
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve",
+        description="multi-tenant HTTP serving front-end over repro.runtime")
+    ap.add_argument("--artifacts", action="append", required=True,
+                    metavar="DIR[:NAME]",
+                    help="saved Artifacts bundle to serve (repeatable)")
+    ap.add_argument("--backend", default="baremetal",
+                    help="executor backend for every net (default: baremetal)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="0 picks an ephemeral port")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="coalescing ceiling per dispatch")
+    ap.add_argument("--max-wait-us", type=float, default=200.0,
+                    help="longest the head request is held for stragglers")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="per-net queue bound; past it submits get 429 "
+                         "(0 = unbounded)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-request access logs")
+    args = ap.parse_args(argv)
+
+    cfg = SchedulerConfig(max_batch=args.max_batch,
+                          max_wait_us=args.max_wait_us,
+                          max_queue=args.max_queue or None)
+    ses = Session(scheduler=cfg, backend=args.backend)
+    for spec in args.artifacts:
+        path, _, name = spec.partition(":")
+        loaded = ses.load(Artifacts.load(path), name=name or None)
+        print(f"[repro.serve] resident: {loaded} <- {path}")
+    serve_forever(ses, host=args.host, port=args.port,
+                  verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""In-process serving client: the front door both HTTP and benchmarks use.
+
+``ServeClient`` wraps a ``repro.runtime.Session`` with the request-level
+semantics of the serving API — network resolution, input validation,
+priority/deadline plumbing, admission control — and converts runtime
+exceptions into typed :class:`ServeError` subclasses that carry an HTTP
+status code.  The HTTP handler (``repro.serve.http``) is a thin transport
+over this class, so the load generator and the socket tests exercise the
+exact same code path.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import CancelledError, Future
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.runtime.scheduler import DeadlineExceededError, QueueFullError
+
+
+class ServeError(Exception):
+    """Base serving error; ``status``/``code`` map straight onto HTTP."""
+    status = 500
+    code = "internal"
+
+
+class BadRequestError(ServeError):
+    status = 400
+    code = "bad_request"
+
+
+class NotFoundError(ServeError):
+    status = 404
+    code = "not_found"
+
+
+class OverloadedError(ServeError):
+    """Admission control rejected the request (queue at ``max_queue``)."""
+    status = 429
+    code = "overloaded"
+
+
+class DeadlineError(ServeError):
+    """The request's ``deadline_us`` elapsed before launch; it was shed."""
+    status = 504
+    code = "deadline_exceeded"
+
+
+class ServeClient:
+    """Session front door with serving semantics and typed errors.
+
+    Rejected requests (unknown net, malformed input, saturated queue) fail
+    *fast and synchronously*; admitted requests always resolve — with a
+    result, a backend error, or :class:`DeadlineError` when shed.
+    """
+
+    def __init__(self, session):
+        self.session = session
+
+    # -- inference -----------------------------------------------------------
+    def infer_async(self, net: Optional[str], x, priority: int = 0,
+                    deadline_us: Optional[float] = None) -> Future:
+        """Admit one request; returns the runtime Future.
+
+        Raises ``NotFoundError`` / ``BadRequestError`` / ``OverloadedError``
+        synchronously — an exception here means the request never entered
+        the queue."""
+        try:
+            return self.session.submit(x, net=net, priority=priority,
+                                       deadline_us=deadline_us)
+        except KeyError as e:
+            raise NotFoundError(str(e.args[0]) if e.args else str(e)) from None
+        except QueueFullError as e:
+            raise OverloadedError(str(e)) from None
+        except (ValueError, TypeError) as e:
+            raise BadRequestError(str(e)) from None
+
+    @staticmethod
+    def resolve_future(fut: Future, timeout: Optional[float] = None):
+        """Block on a runtime future, translating shed/cancel exceptions."""
+        try:
+            return fut.result(timeout=timeout)
+        except DeadlineExceededError as e:
+            raise DeadlineError(str(e)) from None
+        except CancelledError:
+            raise ServeError("request cancelled: server shutting down") from None
+
+    def infer(self, net: Optional[str], x, priority: int = 0,
+              deadline_us: Optional[float] = None,
+              timeout: Optional[float] = None):
+        """Synchronous inference -> ``ExecResult`` (or a ``ServeError``)."""
+        return self.resolve_future(
+            self.infer_async(net, x, priority=priority,
+                             deadline_us=deadline_us), timeout=timeout)
+
+    # -- introspection -------------------------------------------------------
+    def nets(self) -> List[Dict]:
+        """One descriptor per resident network (the ``/v1/nets`` body)."""
+        out = []
+        for name in self.session.networks:
+            art = self.session.artifacts(name)
+            ex = self.session.executor(name)
+            dims = getattr(ex, "input_dims", None)
+            out.append({
+                "name": name,
+                "backend": self.session._resolve(name).backend,
+                "input_shape": list(dims[1:]) if dims is not None else None,
+                "output_elems": getattr(art, "output_elems", None),
+                "queue_depth": self.session.queue_depth(name),
+            })
+        return out
+
+    def healthz(self) -> Dict:
+        return {"status": "ok", "nets": len(self.session.networks),
+                "time": time.time()}
+
+    def metrics_text(self) -> str:
+        from repro.serve import metrics
+        return metrics.render(self.session)

@@ -1,0 +1,156 @@
+"""Stdlib-only HTTP front-end over :class:`repro.serve.client.ServeClient`.
+
+    POST /v1/infer/<net>[?priority=N&deadline_us=F]  — one inference
+         body: JSON {"input": [...], "priority", "deadline_us"} or raw .npy
+         (``Content-Type: application/x-npy``); response JSON, or .npy of
+         ``output_int8`` under ``Accept: application/x-npy``
+    GET  /v1/nets     — resident networks + shapes + queue depths
+    GET  /healthz     — liveness
+    GET  /metrics     — Prometheus text format (``NetStats.snapshot()``)
+
+Status codes: 400 malformed payload, 404 unknown net/route, 429 queue at
+``max_queue`` (admission control), 504 deadline shed, 500 backend error.
+
+``ThreadingHTTPServer`` gives one handler thread per in-flight request;
+concurrent posts against the same net coalesce in that net's dispatcher,
+and different nets proceed on independent dispatcher threads — the HTTP
+layer adds transport, never scheduling policy.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+from urllib.parse import parse_qs, urlparse
+
+from repro.serve import payload
+from repro.serve.client import BadRequestError, NotFoundError, ServeClient, \
+    ServeError
+
+_MAX_BODY = 64 << 20            # 64 MiB — far past any supported input
+
+
+class ServeHandler(BaseHTTPRequestHandler):
+    """One request; ``self.server.client`` is the shared ServeClient."""
+
+    server_version = "repro-serve/1.0"
+    protocol_version = "HTTP/1.1"
+
+    # -- plumbing ------------------------------------------------------------
+    def log_message(self, fmt, *args):      # pragma: no cover - log noise
+        if getattr(self.server, "verbose", False):
+            BaseHTTPRequestHandler.log_message(self, fmt, *args)
+
+    def _reply(self, status: int, body: bytes, content_type: str) -> None:
+        self.send_response(status)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _reply_json(self, status: int, doc) -> None:
+        self._reply(status, json.dumps(doc).encode("utf-8"),
+                    payload.JSON_TYPE)
+
+    def _reply_error(self, exc: ServeError) -> None:
+        # an error reply may be sent before the request body was read
+        # (e.g. 404 on the route) — close the connection rather than let a
+        # keep-alive client's unread body desync the next request
+        self.close_connection = True
+        body, ctype = payload.encode_error(exc.status, exc.code, str(exc))
+        self._reply(exc.status, body, ctype)
+
+    # -- routes --------------------------------------------------------------
+    def do_GET(self) -> None:               # noqa: N802 (stdlib casing)
+        client: ServeClient = self.server.client
+        path = urlparse(self.path).path
+        try:
+            if path == "/healthz":
+                self._reply_json(200, client.healthz())
+            elif path == "/metrics":
+                self._reply(200, client.metrics_text().encode("utf-8"),
+                            "text/plain; version=0.0.4")
+            elif path == "/v1/nets":
+                self._reply_json(200, {"nets": client.nets()})
+            else:
+                self._reply_error(NotFoundError(f"no route {path!r}"))
+        except ServeError as e:
+            self._reply_error(e)
+        except Exception as e:              # noqa: BLE001 — last-resort 500
+            self._reply_error(ServeError(f"{type(e).__name__}: {e}"))
+
+    def do_POST(self) -> None:              # noqa: N802 (stdlib casing)
+        client: ServeClient = self.server.client
+        url = urlparse(self.path)
+        try:
+            if not url.path.startswith("/v1/infer/"):
+                raise NotFoundError(f"no route {url.path!r}")
+            net = url.path[len("/v1/infer/"):]
+            if not net or "/" in net:
+                raise NotFoundError(f"no route {url.path!r}")
+            try:
+                length = int(self.headers.get("Content-Length", 0))
+            except ValueError:
+                raise BadRequestError("bad Content-Length") from None
+            if not 0 < length <= _MAX_BODY:
+                raise BadRequestError(
+                    f"Content-Length must be in (0, {_MAX_BODY}]")
+            body = self.rfile.read(length)
+            try:
+                x, meta = payload.decode_request(
+                    body, self.headers.get("Content-Type", ""))
+            except ValueError as e:
+                raise BadRequestError(str(e)) from None
+            qs = parse_qs(url.query)
+            try:
+                priority = int(qs.get("priority", [meta.get("priority", 0)])[0])
+                dl = qs.get("deadline_us", [meta.get("deadline_us")])[0]
+                deadline_us = float(dl) if dl is not None else None
+            except (TypeError, ValueError):
+                raise BadRequestError(
+                    "priority must be int, deadline_us float") from None
+            t0 = time.perf_counter()
+            res = client.infer(net, x, priority=priority,
+                               deadline_us=deadline_us)
+            out, ctype = payload.encode_result(
+                net, res, (time.perf_counter() - t0) * 1e6,
+                accept=self.headers.get("Accept", ""))
+            self._reply(200, out, ctype)
+        except ServeError as e:
+            self._reply_error(e)
+        except Exception as e:              # noqa: BLE001 — last-resort 500
+            self._reply_error(ServeError(f"{type(e).__name__}: {e}"))
+
+
+def make_server(session, host: str = "127.0.0.1",
+                port: int = 0, verbose: bool = False) -> ThreadingHTTPServer:
+    """Build (not start) the HTTP server; ``port=0`` picks an ephemeral
+    port — read it back from ``server.server_address``.  The server owns no
+    session lifecycle: close the session yourself after ``shutdown()``."""
+    srv = ThreadingHTTPServer((host, port), ServeHandler)
+    srv.daemon_threads = True
+    srv.client = ServeClient(session)
+    srv.verbose = verbose
+    return srv
+
+
+def serve_forever(session, host: str = "127.0.0.1", port: int = 8000,
+                  verbose: bool = True,
+                  ready: Optional[threading.Event] = None) -> None:
+    """Blocking serve loop (the ``python -m repro.serve`` entry point)."""
+    srv = make_server(session, host, port, verbose=verbose)
+    bound = srv.server_address
+    print(f"[repro.serve] listening on http://{bound[0]}:{bound[1]} "
+          f"nets={','.join(session.networks)}")
+    if ready is not None:
+        ready.set()
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:               # pragma: no cover - interactive
+        print("[repro.serve] draining...")
+    finally:
+        srv.server_close()
+        session.close(drain=True)

@@ -1,0 +1,71 @@
+"""Prometheus text-format rendering of per-net serving stats.
+
+``render(session)`` walks every resident network, takes one coherent
+``NetStats.snapshot()`` each (the snapshot is the concurrency boundary —
+this module only formats), and emits the Prometheus exposition format
+(text/plain; version 0.0.4) that ``GET /metrics`` returns.  Stdlib only.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+# (metric suffix, snapshot key, TYPE, HELP)
+_COUNTERS = [
+    ("requests_total", "submits", "counter",
+     "Requests admitted to the queue (run/run_batch included)"),
+    ("rejected_total", "rejected", "counter",
+     "Requests rejected by admission control (queue at max_queue -> 429)"),
+    ("shed_total", "shed", "counter",
+     "Requests shed because deadline_us elapsed before launch"),
+    ("dispatches_total", "dispatches", "counter",
+     "Coalesced batches executed"),
+    ("coalesced_images_total", "coalesced_images", "counter",
+     "Requests served through coalesced dispatches"),
+    ("images_total", "images", "counter",
+     "Images served through the synchronous Session API"),
+]
+_GAUGES = [
+    ("queue_depth_peak", "queue_depth_peak", "gauge",
+     "Peak queued requests observed for this net"),
+    ("coalesce_max", "coalesce_max", "gauge",
+     "Largest coalesced batch so far"),
+    ("latency_samples", "latency_samples", "gauge",
+     "Latency samples in the percentile window"),
+]
+_QUANTILES = [("0.5", "latency_p50_us"), ("0.9", "latency_p90_us"),
+              ("0.99", "latency_p99_us")]
+
+PREFIX = "repro_serve"
+
+
+def _escape(label: str) -> str:
+    return label.replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
+
+
+def render(session) -> str:
+    """Render every resident net's snapshot as Prometheus text."""
+    snaps = {name: session.stats(name).snapshot()
+             for name in session.networks}
+    depths = {name: session.queue_depth(name) for name in session.networks}
+    lines: List[str] = []
+
+    def emit(suffix, mtype, help_text, values):
+        name = f"{PREFIX}_{suffix}"
+        lines.append(f"# HELP {name} {help_text}")
+        lines.append(f"# TYPE {name} {mtype}")
+        lines.extend(values)
+
+    for suffix, key, mtype, help_text in _COUNTERS + _GAUGES:
+        emit(suffix, mtype, help_text,
+             [f'{PREFIX}_{suffix}{{net="{_escape(n)}"}} {snap[key]}'
+              for n, snap in snaps.items()])
+    emit("queue_depth", "gauge", "Requests currently queued (not in-flight)",
+         [f'{PREFIX}_queue_depth{{net="{_escape(n)}"}} {d}'
+          for n, d in depths.items()])
+    emit("latency_us", "summary",
+         "Submit-to-result latency percentiles over the recent window",
+         [f'{PREFIX}_latency_us{{net="{_escape(n)}",quantile="{q}"}} '
+          f'{snap[key]:.1f}'
+          for n, snap in snaps.items() for q, key in _QUANTILES])
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,99 @@
+"""Tensor payload codecs for the serving front-end.
+
+Two request formats, negotiated by Content-Type:
+
+  * ``application/json`` — ``{"input": <nested list>, "dtype": "float32",
+    "priority": 0, "deadline_us": 50000}``.  ``dtype`` is optional
+    (``float32`` default; ``int8`` means pre-quantised, passed through).
+    ``priority`` / ``deadline_us`` may also come as query parameters.
+  * ``application/x-npy`` (or ``application/octet-stream``) — the body is
+    one ``.npy`` file, exactly what ``np.save`` writes.  Scheduling fields
+    travel as query parameters.
+
+Responses mirror the negotiation: JSON by default (int8 logits are small —
+exact integers survive JSON round-trips, which is what the bit-exactness
+tests assert), or a raw ``.npy`` of ``output_int8`` when the client sends
+``Accept: application/x-npy``.
+
+Malformed payloads raise ``ValueError`` — the layer above maps it to 400.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+from typing import Dict, Tuple
+
+import numpy as np
+
+NPY_TYPES = ("application/x-npy", "application/octet-stream")
+JSON_TYPE = "application/json"
+
+# inputs a client may legitimately send: float32 activations (quantised by
+# the backend) or pre-quantised int8
+_INPUT_DTYPES = {"float32": np.float32, "int8": np.int8}
+
+
+def decode_request(body: bytes, content_type: str) -> Tuple[np.ndarray, Dict]:
+    """Parse one inference request body -> (input array, scheduling meta).
+
+    ``meta`` may carry ``priority`` / ``deadline_us`` (JSON bodies only;
+    npy clients use query parameters).  Raises ``ValueError`` on anything
+    malformed — never an exception from deep inside numpy/json.
+    """
+    ctype = (content_type or "").split(";")[0].strip().lower()
+    if ctype in NPY_TYPES:
+        try:
+            x = np.load(io.BytesIO(body), allow_pickle=False)
+        except Exception as e:
+            raise ValueError(f"bad npy payload: {e}") from None
+        return x, {}
+    if ctype in ("", JSON_TYPE):            # default to JSON
+        try:
+            doc = json.loads(body.decode("utf-8"))
+        except Exception as e:
+            raise ValueError(f"bad JSON payload: {e}") from None
+        if not isinstance(doc, dict) or "input" not in doc:
+            raise ValueError('JSON payload must be an object with an "input" '
+                             'field (nested list of numbers)')
+        dtype = doc.get("dtype", "float32")
+        if dtype not in _INPUT_DTYPES:
+            raise ValueError(f"unsupported dtype {dtype!r}; expected one of "
+                             f"{sorted(_INPUT_DTYPES)}")
+        try:
+            x = np.asarray(doc["input"], dtype=_INPUT_DTYPES[dtype])
+        except Exception as e:
+            raise ValueError(f'bad "input" field: {e}') from None
+        meta = {}
+        for key, cast in (("priority", int), ("deadline_us", float)):
+            if doc.get(key) is not None:
+                try:
+                    meta[key] = cast(doc[key])
+                except (TypeError, ValueError):
+                    raise ValueError(f"bad {key!r}: {doc[key]!r}") from None
+        return x, meta
+    raise ValueError(f"unsupported Content-Type {content_type!r}; send "
+                     f"{JSON_TYPE} or {NPY_TYPES[0]}")
+
+
+def encode_result(net: str, res, latency_us: float,
+                  accept: str = "") -> Tuple[bytes, str]:
+    """Serialise an ``ExecResult`` -> (body, content_type)."""
+    if any(t in (accept or "") for t in NPY_TYPES):
+        buf = io.BytesIO()
+        np.save(buf, np.asarray(res.output_int8))
+        return buf.getvalue(), NPY_TYPES[0]
+    out_i8 = np.asarray(res.output_int8)
+    doc = {
+        "net": net,
+        "output_int8": out_i8.tolist(),
+        "output": np.asarray(res.output, dtype=np.float64).tolist(),
+        "argmax": int(np.argmax(out_i8)),
+        "latency_us": round(float(latency_us), 1),
+    }
+    return json.dumps(doc).encode("utf-8"), JSON_TYPE
+
+
+def encode_error(status: int, code: str, message: str) -> Tuple[bytes, str]:
+    doc = {"error": {"status": status, "code": code, "message": message}}
+    return json.dumps(doc).encode("utf-8"), JSON_TYPE

@@ -9,12 +9,16 @@ import os
 import subprocess
 import sys
 import threading
+import time
+from concurrent.futures import CancelledError
 
 import numpy as np
 import pytest
 
 from repro.core import graph, pipeline
-from repro.runtime import (Session, SchedulerConfig, create_executor)
+from repro.core.executor import ExecResult, ExecutorCapabilities
+from repro.runtime import (DeadlineExceededError, QueueFullError, Session,
+                           SchedulerConfig, create_executor)
 from repro.runtime.scheduler import bucket_size, pad_batch
 
 
@@ -261,3 +265,310 @@ print("SHARDED-PARITY-OK")
 
 def _repo_root():
     return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# SLA scheduling: priority ordering, deadline shedding, admission control
+# ---------------------------------------------------------------------------
+class _ScriptedExecutor:
+    """Controllable backend stub: records the id each input carries (x[0])
+    per dispatch, optionally blocking until released."""
+
+    def __init__(self, out_elems=3, gate: threading.Event = None,
+                 entered: threading.Event = None, delay_s: float = 0.0):
+        self.out_elems = out_elems
+        self.gate, self.entered, self.delay_s = gate, entered, delay_s
+        self.dispatched = []              # list of per-dispatch id lists
+
+    def _wait(self):
+        if self.entered is not None:
+            self.entered.set()
+        if self.gate is not None:
+            assert self.gate.wait(timeout=60)
+        if self.delay_s:
+            time.sleep(self.delay_s)
+
+    def _result(self, n):
+        z = np.zeros((n, self.out_elems))
+        return ExecResult(z.astype(np.int8), z.astype(np.float32))
+
+    def run(self, x):
+        self._wait()
+        self.dispatched.append([int(np.asarray(x).reshape(-1)[0])])
+        r = self._result(1)
+        return ExecResult(r.output_int8[0], r.output[0])
+
+    def run_batch(self, X, lanes=None):
+        self._wait()
+        k = lanes if lanes is not None else X.shape[0]
+        self.dispatched.append(
+            [int(np.asarray(X[i]).reshape(-1)[0]) for i in range(k)])
+        return self._result(X.shape[0])
+
+    def capabilities(self):
+        return ExecutorCapabilities(native_batching=True)
+
+
+def _tagged(i):
+    """Input whose first element encodes the request id."""
+    x = np.zeros((2, 8, 8), np.float32)
+    x[0, 0, 0] = float(i)
+    return x
+
+
+def _stub_session(tiny_art, config, **stub_kw):
+    ses = Session(tiny_art, scheduler=config)
+    stub = _ScriptedExecutor(**stub_kw)
+    ses._resolve(None).executor = stub
+    return ses, stub
+
+
+class TestSLAScheduling:
+    def test_priority_orders_dispatches(self, tiny_art):
+        """With the dispatcher gated, queued requests launch urgent-first
+        regardless of arrival order; within a class, FIFO."""
+        gate, entered = threading.Event(), threading.Event()
+        cfg = SchedulerConfig(max_batch=2, max_wait_us=0.0, adaptive=False)
+        ses, stub = _stub_session(tiny_art, cfg, gate=gate, entered=entered)
+        try:
+            head = ses.submit(_tagged(0))          # occupies the dispatcher
+            assert entered.wait(timeout=60)
+            futs = [ses.submit(_tagged(1), priority=0),
+                    ses.submit(_tagged(2), priority=0),
+                    ses.submit(_tagged(3), priority=2),
+                    ses.submit(_tagged(4), priority=1)]
+            gate.set()
+            head.result(timeout=60)
+            for f in futs:
+                f.result(timeout=60)
+            assert stub.dispatched == [[0], [3, 4], [1, 2]] or \
+                stub.dispatched == [[0], [3], [4], [1, 2]]
+        finally:
+            ses.close()
+
+    def test_earliest_deadline_first_within_priority(self, tiny_art):
+        gate, entered = threading.Event(), threading.Event()
+        cfg = SchedulerConfig(max_batch=1, max_wait_us=0.0, adaptive=False)
+        ses, stub = _stub_session(tiny_art, cfg, gate=gate, entered=entered)
+        try:
+            head = ses.submit(_tagged(0))
+            assert entered.wait(timeout=60)
+            f_loose = ses.submit(_tagged(1), deadline_us=60e6)
+            f_tight = ses.submit(_tagged(2), deadline_us=30e6)
+            f_none = ses.submit(_tagged(3))        # no deadline: sorts last
+            gate.set()
+            for f in (head, f_loose, f_tight, f_none):
+                f.result(timeout=60)
+            assert stub.dispatched == [[0], [2], [1], [3]]
+        finally:
+            ses.close()
+
+    def test_expired_deadline_is_shed_with_distinct_error(self, tiny_art):
+        gate, entered = threading.Event(), threading.Event()
+        cfg = SchedulerConfig(max_batch=8, max_wait_us=0.0, adaptive=False)
+        ses, stub = _stub_session(tiny_art, cfg, gate=gate, entered=entered)
+        try:
+            head = ses.submit(_tagged(0))
+            assert entered.wait(timeout=60)
+            doomed = ses.submit(_tagged(1), deadline_us=1.0)   # 1us budget
+            alive = ses.submit(_tagged(2), deadline_us=60e6)
+            time.sleep(0.05)                       # let the 1us budget lapse
+            gate.set()
+            head.result(timeout=60)
+            with pytest.raises(DeadlineExceededError):
+                doomed.result(timeout=60)
+            alive.result(timeout=60)               # batchmate unaffected
+            assert [1] not in stub.dispatched      # never executed
+            assert ses.stats().shed == 1
+        finally:
+            ses.close()
+
+    def test_zero_deadline_is_immediately_expired(self, tiny_art):
+        """deadline_us=0 is an already-lapsed budget (shed at launch), NOT
+        'no deadline'."""
+        with Session(tiny_art) as ses:
+            fut = ses.submit(np.zeros((2, 8, 8), np.float32), deadline_us=0.0)
+            with pytest.raises(DeadlineExceededError):
+                fut.result(timeout=60)
+            assert ses.stats().shed == 1
+
+    def test_nan_deadline_rejected_at_submit(self, tiny_art):
+        with Session(tiny_art) as ses:
+            with pytest.raises(ValueError, match="NaN"):
+                ses.submit(np.zeros((2, 8, 8), np.float32),
+                           deadline_us=float("nan"))
+
+    def test_queue_bound_rejects_submit(self, tiny_art):
+        gate, entered = threading.Event(), threading.Event()
+        cfg = SchedulerConfig(max_batch=1, max_wait_us=0.0, adaptive=False,
+                              max_queue=2)
+        ses, _ = _stub_session(tiny_art, cfg, gate=gate, entered=entered)
+        try:
+            head = ses.submit(_tagged(0))          # in flight, not queued
+            assert entered.wait(timeout=60)
+            q = [ses.submit(_tagged(1)), ses.submit(_tagged(2))]
+            with pytest.raises(QueueFullError, match="full"):
+                ses.submit(_tagged(3))
+            assert ses.stats().rejected == 1
+            gate.set()                             # admitted work unaffected
+            for f in [head] + q:
+                f.result(timeout=60)
+        finally:
+            ses.close()
+
+    def test_queue_bound_group_all_or_nothing(self, tiny_art):
+        gate, entered = threading.Event(), threading.Event()
+        cfg = SchedulerConfig(max_batch=1, max_wait_us=0.0, adaptive=False,
+                              max_queue=3)
+        ses, _ = _stub_session(tiny_art, cfg, gate=gate, entered=entered)
+        try:
+            head = ses.submit(_tagged(0))
+            assert entered.wait(timeout=60)
+            keep = ses.submit(_tagged(1))
+            with pytest.raises(QueueFullError):    # group of 3 > 2 free slots
+                ses.run_batch(np.stack([_tagged(2)] * 3))
+            assert ses.queue_depth() == 1          # nothing partially queued
+            gate.set()
+            head.result(timeout=60)
+            keep.result(timeout=60)
+        finally:
+            ses.close()
+
+
+# ---------------------------------------------------------------------------
+# close() semantics under in-flight work (regression: every future resolves)
+# ---------------------------------------------------------------------------
+class TestCloseSemantics:
+    def test_close_mid_flight_resolves_every_future(self, tiny_art):
+        """Submit a pile, close while the first dispatch is still executing:
+        the in-flight batch completes, queued requests get CancelledError,
+        and NOTHING blocks forever on result()."""
+        entered = threading.Event()
+        cfg = SchedulerConfig(max_batch=2, max_wait_us=0.0, adaptive=False)
+        ses, _ = _stub_session(tiny_art, cfg, entered=entered, delay_s=0.3)
+        futs = [ses.submit(_tagged(i)) for i in range(10)]
+        assert entered.wait(timeout=60)            # first dispatch running
+        ses.close()
+        resolved = 0
+        for f in futs:
+            try:
+                f.result(timeout=30)               # must never hang
+                resolved += 1
+            except CancelledError:
+                pass
+        assert all(f.done() for f in futs)
+        assert 1 <= resolved <= 4                  # in-flight batch finished
+        with pytest.raises(RuntimeError, match="scheduler is closed"):
+            ses.submit(_tagged(0))
+
+    def test_close_drain_completes_queued_work(self, tiny_art):
+        cfg = SchedulerConfig(max_batch=4, max_wait_us=0.0, adaptive=False)
+        ses, stub = _stub_session(tiny_art, cfg, delay_s=0.02)
+        futs = [ses.submit(_tagged(i)) for i in range(12)]
+        ses.close(drain=True)
+        for f in futs:
+            f.result(timeout=30)                   # everything completed
+        assert sum(len(d) for d in stub.dispatched) == 12
+
+    def test_close_idempotent_and_no_thread_leak(self, tiny_art):
+        ses = Session(tiny_art)
+        ses.run(np.zeros((2, 8, 8), np.float32))
+        before = threading.active_count()
+        ses.close()
+        ses.close()
+        deadline = time.time() + 10
+        while threading.active_count() > before and time.time() < deadline:
+            time.sleep(0.01)
+        assert threading.active_count() <= before
+
+
+# ---------------------------------------------------------------------------
+# Per-net dispatcher isolation (no cross-net head-of-line blocking)
+# ---------------------------------------------------------------------------
+class TestPerNetDispatchers:
+    def test_slow_net_does_not_block_fast_net(self, tiny_art):
+        """A net whose backend is stalled must not delay another net's
+        traffic: each resident net has its own dispatcher thread."""
+        gate, entered = threading.Event(), threading.Event()
+        with Session(tiny_art, name="fast") as ses:
+            ses.load(tiny_art, name="slow")
+            slow_net = ses._resolve("slow")
+            slow_net.executor = _ScriptedExecutor(gate=gate, entered=entered)
+            f_slow = ses.submit(_tagged(0), net="slow")
+            assert entered.wait(timeout=60)        # slow dispatcher stalled
+            t0 = time.perf_counter()
+            f_fast = ses.submit(np.zeros((2, 8, 8), np.float32), net="fast")
+            f_fast.result(timeout=60)
+            fast_latency = time.perf_counter() - t0
+            assert not f_slow.done()               # slow still stuck
+            gate.set()
+            f_slow.result(timeout=60)
+            assert fast_latency < 30               # served while slow stalled
+
+    def test_dispatcher_threads_are_per_net(self, tiny_art):
+        with Session(tiny_art, name="a") as ses:
+            ses.load(tiny_art, name="b")
+            ses.run(np.zeros((2, 8, 8), np.float32), net="a")
+            ses.run(np.zeros((2, 8, 8), np.float32), net="b")
+            names = {t.name for t in threading.enumerate()}
+            assert "repro-dispatch-a" in names and "repro-dispatch-b" in names
+
+    def test_unload_stops_the_nets_dispatcher(self, tiny_art):
+        with Session(tiny_art, name="a") as ses:
+            ses.load(tiny_art, name="b")
+            ses.run(np.zeros((2, 8, 8), np.float32), net="b")
+            ses.unload("b")
+            deadline = time.time() + 10
+            while time.time() < deadline and any(
+                    t.name == "repro-dispatch-b" for t in
+                    threading.enumerate()):
+                time.sleep(0.01)
+            assert not any(t.name == "repro-dispatch-b"
+                           for t in threading.enumerate())
+            # the survivor keeps serving
+            ses.run(np.zeros((2, 8, 8), np.float32), net="a")
+
+
+# ---------------------------------------------------------------------------
+# NetStats thread-safety: concurrent writers + snapshot readers
+# ---------------------------------------------------------------------------
+class TestNetStatsConcurrency:
+    def test_concurrent_notes_and_snapshots(self):
+        from repro.runtime import NetStats
+        st = NetStats()
+        stop = threading.Event()
+        errors = []
+
+        def writer():
+            i = 0
+            while not stop.is_set():
+                st.note_submit(1, i % 7)
+                st.note_dispatch(2, [float(i), float(i + 1)])
+                st.note_shed(1)
+                st.note_reject(1)
+                i += 1
+
+        def reader():
+            while not stop.is_set():
+                snap = st.snapshot()
+                try:
+                    # counters written under ONE lock hold must be coherent
+                    # in every snapshot; counters from separate note_* calls
+                    # may lag each other by at most the number of writers
+                    assert snap["coalesced_images"] == 2 * snap["dispatches"]
+                    assert abs(snap["shed"] - snap["rejected"]) <= 3
+                    assert snap["latency_p99_us"] >= 0.0
+                except AssertionError as e:          # pragma: no cover
+                    errors.append(str(e))
+        threads = [threading.Thread(target=writer) for _ in range(3)] + \
+                  [threading.Thread(target=reader) for _ in range(2)]
+        for t in threads:
+            t.start()
+        time.sleep(0.5)
+        stop.set()
+        for t in threads:
+            t.join(timeout=10)
+        assert not errors
+        snap = st.snapshot()
+        assert snap["submits"] == snap["dispatches"]
+        assert snap["latency_samples"] <= 2048

@@ -1,0 +1,266 @@
+"""Serving front-end tests: HTTP surface, payload codecs, metrics.
+
+End-to-end over a real socket on an ephemeral port: infer round-trips are
+bit-exact versus ``Session.run``, unknown nets 404, malformed payloads 400,
+a saturated queue 429s, and ``/metrics`` parses as Prometheus text.  The
+in-process ``ServeClient`` drives the same code path minus the socket.
+"""
+
+import io
+import json
+import re
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import graph, pipeline
+from repro.core.executor import ExecResult, ExecutorCapabilities
+from repro.runtime import Session, SchedulerConfig
+from repro.serve import payload
+from repro.serve.client import (BadRequestError, NotFoundError,
+                                OverloadedError, ServeClient)
+from repro.serve.http import make_server
+
+
+def _tiny_net() -> graph.NetGraph:
+    g = graph.NetGraph("tiny", (2, 8, 8))
+    g.layer(name="data", type="input", inputs=[])
+    x = g.layer(name="c1", type="conv", inputs=["data"], out_channels=4,
+                kernel=3, pad=1, relu=True)
+    x = g.layer(name="p1", type="pool", inputs=[x], pool_mode="gap")
+    g.layer(name="fc", type="fc", inputs=[x], out_channels=3)
+    return g.infer_shapes()
+
+
+@pytest.fixture(scope="module")
+def tiny_art():
+    return pipeline.CompilerPipeline(_tiny_net()).run()
+
+
+@pytest.fixture()
+def served(tiny_art):
+    """(base_url, session, server) over an ephemeral port; torn down after."""
+    ses = Session(tiny_art, scheduler=SchedulerConfig(max_queue=64))
+    srv = make_server(ses, port=0)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    host, port = srv.server_address
+    yield f"http://{host}:{port}", ses, srv
+    srv.shutdown()
+    srv.server_close()
+    ses.close()
+
+
+def _post(url, body, headers, timeout=60):
+    req = urllib.request.Request(url, data=body, headers=headers)
+    return urllib.request.urlopen(req, timeout=timeout)
+
+
+class TestHTTPEndToEnd:
+    def test_json_infer_bitexact_vs_session_run(self, served):
+        base, ses, _ = served
+        x = np.random.default_rng(0).normal(0, 1, (2, 8, 8)).astype(np.float32)
+        want = np.asarray(ses.run(x).output_int8)
+        r = _post(f"{base}/v1/infer/tiny",
+                  json.dumps({"input": x.tolist()}).encode(),
+                  {"Content-Type": "application/json"})
+        doc = json.loads(r.read())
+        assert r.status == 200
+        np.testing.assert_array_equal(
+            np.asarray(doc["output_int8"], np.int8), want)
+        assert doc["argmax"] == int(np.argmax(want))
+        assert doc["latency_us"] > 0
+
+    def test_npy_infer_roundtrip_bitexact(self, served):
+        base, ses, _ = served
+        x = np.random.default_rng(1).normal(0, 1, (2, 8, 8)).astype(np.float32)
+        want = np.asarray(ses.run(x).output_int8)
+        buf = io.BytesIO()
+        np.save(buf, x)
+        r = _post(f"{base}/v1/infer/tiny?priority=1&deadline_us=60000000",
+                  buf.getvalue(),
+                  {"Content-Type": "application/x-npy",
+                   "Accept": "application/x-npy"})
+        got = np.load(io.BytesIO(r.read()))
+        np.testing.assert_array_equal(got, want)
+
+    def test_unknown_net_404(self, served):
+        base, _, _ = served
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(f"{base}/v1/infer/nope", b'{"input": [0]}',
+                  {"Content-Type": "application/json"})
+        assert ei.value.code == 404
+        err = json.loads(ei.value.read())["error"]
+        assert err["code"] == "not_found" and "nope" in err["message"]
+
+    def test_unknown_route_404(self, served):
+        base, _, _ = served
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{base}/v2/whatever", timeout=30)
+        assert ei.value.code == 404
+
+    @pytest.mark.parametrize("body,ctype", [
+        (b"not json", "application/json"),
+        (b'{"noinput": 1}', "application/json"),
+        (b'{"input": [1], "dtype": "complex128"}', "application/json"),
+        (b"\x00\x01garbage", "application/x-npy"),
+        (b'{"input": [1,2], "priority": "urgent"}', "application/json"),
+    ])
+    def test_malformed_payload_400(self, served, body, ctype):
+        base, _, _ = served
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(f"{base}/v1/infer/tiny", body, {"Content-Type": ctype})
+        assert ei.value.code == 400
+        assert json.loads(ei.value.read())["error"]["code"] == "bad_request"
+
+    def test_wrong_input_size_400(self, served):
+        base, _, _ = served
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(f"{base}/v1/infer/tiny",
+                  json.dumps({"input": [1.0, 2.0]}).encode(),
+                  {"Content-Type": "application/json"})
+        assert ei.value.code == 400
+
+    def test_saturated_queue_429(self, served):
+        base, ses, _ = served
+        net = ses._resolve(None)
+        blocked, entered = threading.Event(), threading.Event()
+
+        class _Stall:
+            def capabilities(self):
+                return ExecutorCapabilities(native_batching=True)
+
+            def run(self, x):
+                entered.set()
+                blocked.wait(timeout=60)
+                return ExecResult(np.zeros(3, np.int8),
+                                  np.zeros(3, np.float32))
+
+            def run_batch(self, X, lanes=None):
+                entered.set()
+                blocked.wait(timeout=60)
+                z = np.zeros((X.shape[0], 3))
+                return ExecResult(z.astype(np.int8), z.astype(np.float32))
+
+        real = net.executor
+        net.executor = _Stall()
+        try:
+            x = np.zeros((2, 8, 8), np.float32)
+            first = ses.submit(x)                  # occupies the dispatcher
+            assert entered.wait(timeout=60)
+            # fill the queue to max_queue, then the HTTP submit must 429
+            backlog = [ses.submit(x) for _ in range(64)]
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _post(f"{base}/v1/infer/tiny",
+                      json.dumps({"input": x.tolist()}).encode(),
+                      {"Content-Type": "application/json"})
+            assert ei.value.code == 429
+            assert json.loads(ei.value.read())["error"]["code"] == "overloaded"
+            assert ses.stats().rejected >= 1
+        finally:
+            blocked.set()
+            for f in [first] + backlog:
+                f.result(timeout=120)
+            net.executor = real
+
+    def test_nets_endpoint(self, served):
+        base, _, _ = served
+        doc = json.loads(urllib.request.urlopen(f"{base}/v1/nets",
+                                                timeout=30).read())
+        (net,) = doc["nets"]
+        assert net["name"] == "tiny" and net["backend"] == "baremetal"
+        assert net["input_shape"] == [2, 8, 8] and net["output_elems"] == 3
+
+    def test_healthz(self, served):
+        base, _, _ = served
+        doc = json.loads(urllib.request.urlopen(f"{base}/healthz",
+                                                timeout=30).read())
+        assert doc["status"] == "ok" and doc["nets"] == 1
+
+    def test_metrics_parse_prometheus(self, served):
+        base, ses, _ = served
+        ses.run(np.zeros((2, 8, 8), np.float32))
+        text = urllib.request.urlopen(f"{base}/metrics",
+                                      timeout=30).read().decode()
+        line_re = re.compile(
+            r'^[a-z_]+\{net="[^"]*"(,quantile="[0-9.]+")?\} '
+            r'-?[0-9.]+(e[+-]?\d+)?$')
+        seen = set()
+        for line in text.strip().splitlines():
+            if line.startswith("#"):
+                continue
+            assert line_re.match(line), f"unparseable metric line: {line!r}"
+            seen.add(line.split("{")[0])
+        for want in ("repro_serve_requests_total", "repro_serve_queue_depth",
+                     "repro_serve_latency_us", "repro_serve_rejected_total",
+                     "repro_serve_shed_total"):
+            assert want in seen
+        m = re.search(r'repro_serve_requests_total\{net="tiny"\} (\d+)', text)
+        assert m and int(m.group(1)) >= 1
+
+
+class TestServeClient:
+    def test_infer_matches_session_run(self, tiny_art):
+        with Session(tiny_art) as ses:
+            client = ServeClient(ses)
+            x = np.random.default_rng(2).normal(0, 1, (2, 8, 8)).astype(
+                np.float32)
+            got = client.infer("tiny", x)
+            want = ses.run(x)
+            np.testing.assert_array_equal(got.output_int8, want.output_int8)
+
+    def test_typed_errors(self, tiny_art):
+        with Session(tiny_art,
+                     scheduler=SchedulerConfig(max_queue=1)) as ses:
+            client = ServeClient(ses)
+            with pytest.raises(NotFoundError):
+                client.infer("ghost", np.zeros((2, 8, 8), np.float32))
+            with pytest.raises(BadRequestError):
+                client.infer("tiny", np.zeros(7, np.float32))
+            assert OverloadedError.status == 429  # mapping used by http
+
+    def test_nets_and_health(self, tiny_art):
+        with Session(tiny_art) as ses:
+            client = ServeClient(ses)
+            assert client.nets()[0]["name"] == "tiny"
+            assert client.healthz()["nets"] == 1
+
+
+class TestPayloadCodecs:
+    def test_json_meta_passthrough(self):
+        x, meta = payload.decode_request(
+            json.dumps({"input": [[1, 2], [3, 4]], "dtype": "int8",
+                        "priority": 3, "deadline_us": 1e5}).encode(),
+            "application/json")
+        assert x.dtype == np.int8 and x.shape == (2, 2)
+        assert meta == {"priority": 3, "deadline_us": 1e5}
+
+    def test_npy_roundtrip(self):
+        a = np.arange(12, dtype=np.float32).reshape(3, 4)
+        buf = io.BytesIO()
+        np.save(buf, a)
+        x, meta = payload.decode_request(buf.getvalue(), "application/x-npy")
+        np.testing.assert_array_equal(x, a)
+        assert meta == {}
+
+    def test_npy_rejects_pickles(self):
+        buf = io.BytesIO()
+        np.save(buf, np.array([{"a": 1}], dtype=object), allow_pickle=True)
+        with pytest.raises(ValueError, match="bad npy"):
+            payload.decode_request(buf.getvalue(), "application/x-npy")
+
+    def test_unsupported_content_type(self):
+        with pytest.raises(ValueError, match="unsupported Content-Type"):
+            payload.decode_request(b"x", "text/csv")
+
+    def test_encode_result_json_exact_ints(self):
+        res = ExecResult(output_int8=np.array([-128, 127, 3], np.int8),
+                         output=np.array([0.5, 1.5, -2.0], np.float32))
+        body, ctype = payload.encode_result("n", res, 12.34)
+        doc = json.loads(body)
+        assert ctype == "application/json"
+        assert doc["output_int8"] == [-128, 127, 3]
+        assert doc["argmax"] == 1
