@@ -6,7 +6,8 @@
 Tables:
   1  storage / resource accounting of the bare-metal artifacts   (paper Table I)
   2  nv_small INT8 inference latency + bare-metal vs linux-stack (paper Table II)
-  3  nv_full bf16 cycle counts, six networks                     (paper Table III)
+  3  nv_full bf16: LIVE executor latency (LeNet-5, ResNet-18) with
+     VP tolerance-parity gate + cycle model, six networks         (paper Table III)
   4  serving microbenchmarks: arena residency, batching, coalesced
      submit through the Session scheduler                        (runtime layer)
   5  serving front-end: open-loop Poisson mixed-priority load over the

@@ -1,8 +1,16 @@
-"""Table III: nv_full bf16 cycle counts (6 models, simulation/model results).
+"""Table III: nv_full bf16 — LIVE execution plus the calibrated cycle model.
 
 The paper reports VP-simulated cycle counts for the nv_full configuration
-(FP16, 2048 MACs); we report the calibrated cycle model's counts for the same
-six networks and compare processing time @ 100 MHz.
+(FP16, 2048 MACs).  Since PR 5 the bf16 datapath actually *executes*: LeNet-5
+and ResNet-18 are compiled with ``cfg=NV_FULL``, run end-to-end through the
+bare-metal bf16 executor (single image, arena-resident weights), checked
+against the VP oracle under the derived tolerance bounds
+(``core/tolerances.py``), and timed — ``us_per_call`` is the live per-image
+latency and is what the CI regression gate tracks.  The calibrated cycle
+model's counts and the paper's numbers ride along in ``derived`` for every
+model; the four networks too large to VP-simulate in a smoke run
+(resnet50/mobilenet/googlenet/alexnet) keep their cost-model-only rows in
+full mode.
 """
 
 from __future__ import annotations
@@ -13,6 +21,8 @@ import numpy as np
 
 from repro.core import engine, graph
 from repro.core.pipeline import CompilerPipeline
+from repro.core.tolerances import assert_close, max_rel_err, net_tolerance
+from repro.runtime import create_executor
 
 PAPER = {  # model -> (paper cycles, paper ms @100MHz)
     "lenet5": (143188, 1.4),
@@ -23,30 +33,76 @@ PAPER = {  # model -> (paper cycles, paper ms @100MHz)
     "alexnet": (35535582, 355.0),
 }
 MODELS = ["lenet5", "resnet18", "resnet50", "mobilenet", "googlenet", "alexnet"]
+LIVE = ("lenet5", "resnet18")     # executed end-to-end through the executor
+
+
+def _live_row(name: str, fast: bool) -> dict:
+    g = graph.BUILDERS[name]()
+    rng = np.random.default_rng(1)
+    pipe = CompilerPipeline(
+        g, g.init_params(0),
+        rng.normal(0, 1, (1,) + g.input_shape).astype(np.float32),
+        cfg=engine.NV_FULL)
+    art = pipe.run()                       # full pipeline incl. the VP oracle
+    mc = art.cost
+    ex = create_executor("baremetal", art)
+    x = pipe.sample_input
+    tol = net_tolerance(art.kernel_plan)
+    got = ex.run(x)                        # warm-up: compiles the program
+    # parity gate: a bf16 result outside the documented bounds fails the
+    # benchmark loudly instead of publishing a wrong-latency row
+    assert_close(got.output, art.vp_output, tol, f"table3 {name}")
+    rel = max_rel_err(got.output, art.vp_output)
+    iters = 3 if fast else 10
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        ex.run(x)
+    us = (time.perf_counter() - t0) * 1e6 / iters
+    pc, pms = PAPER[name]
+    kernels = ",".join(sorted({e["kernel"] for e in art.kernel_plan
+                               if e["unit"] in ("CONV", "FC")}))
+    return {
+        "name": f"table3_nvfull/{name}",
+        "us_per_call": us,
+        # wider per-row budget than the global gate (same mechanism as the
+        # table-5 load rows): these rows were seeded on different hardware
+        # than the table-2/4 baselines and are dispatch-dominated at LeNet
+        # scale, so only collapse-scale regressions (e.g. recompiling per
+        # call) should fail; declaring a wide budget also excludes them from
+        # electing the --normalize machine-speed median
+        "tolerance": 0.6,
+        "derived": (f"live_bf16 rel_err={rel:.1e} rtol={tol.rtol:.1e} "
+                    f"kernels={kernels} modeled_cycles={mc.total_cycles} "
+                    f"paper_cycles={pc} modeled_ms={mc.ms_at_clock:.1f} "
+                    f"paper_ms={pms} cycle_ratio={mc.total_cycles/pc:.2f} "
+                    f"macs_M={g.macs()/1e6:.0f} dominant={mc.dominant()}"),
+    }
+
+
+def _model_row(name: str) -> dict:
+    g = graph.BUILDERS[name]()
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(1)
+    pipe = CompilerPipeline(
+        g, g.init_params(0),
+        rng.normal(0, 1, (1,) + g.input_shape).astype(np.float32),
+        cfg=engine.NV_FULL, use_cache=False)
+    # staged pipeline: cost_model depends only on the loadable, so the
+    # VP / trace / assembly stages never run for these rows
+    mc = pipe.run_stage("cost_model")
+    us = (time.perf_counter() - t0) * 1e6
+    pc, pms = PAPER[name]
+    return {
+        "name": f"table3_nvfull/{name}",
+        "us_per_call": us,
+        "derived": (f"cost_model_only modeled_cycles={mc.total_cycles} "
+                    f"paper_cycles={pc} modeled_ms={mc.ms_at_clock:.1f} "
+                    f"paper_ms={pms} cycle_ratio={mc.total_cycles/pc:.2f} "
+                    f"macs_M={g.macs()/1e6:.0f} dominant={mc.dominant()}"),
+    }
 
 
 def run(fast: bool = False):
-    rows = []
     models = MODELS[:2] if fast else MODELS
-    for name in models:
-        g = graph.BUILDERS[name]()
-        params = g.init_params(0)
-        t0 = time.perf_counter()
-        rng = np.random.default_rng(1)
-        pipe = CompilerPipeline(
-            g, params, rng.normal(0, 1, (1,) + g.input_shape).astype(np.float32),
-            cfg=engine.NV_FULL, use_cache=False)
-        # staged pipeline: cost_model depends only on the loadable, so the
-        # VP / trace / assembly stages never run for this table
-        mc = pipe.run_stage("cost_model")
-        us = (time.perf_counter() - t0) * 1e6
-        pc, pms = PAPER[name]
-        rows.append({
-            "name": f"table3_nvfull/{name}",
-            "us_per_call": us,
-            "derived": (f"modeled_cycles={mc.total_cycles} paper_cycles={pc} "
-                        f"modeled_ms={mc.ms_at_clock:.1f} paper_ms={pms} "
-                        f"cycle_ratio={mc.total_cycles/pc:.2f} "
-                        f"macs_M={g.macs()/1e6:.0f} dominant={mc.dominant()}"),
-        })
-    return rows
+    return [(_live_row(n, fast) if n in LIVE else _model_row(n))
+            for n in models]

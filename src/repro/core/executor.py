@@ -12,8 +12,16 @@ against ([5]-[12]): one executable per layer, a driver-managed tensor table
 (dict keyed by DRAM address), per-op submission from the host — i.e. real,
 measured software overhead on the same op semantics (no simulated sleeps).
 
-Both executors produce bit-identical INT8 results to the VP functional model;
-tests assert it.
+Both executors implement BOTH engine datapaths, dispatched on
+``EngineConfig.dtype``:
+
+  * ``int8`` (nv_small) — integer ops, bit-identical to the VP functional
+    model; tests assert byte equality.
+  * ``bf16`` (nv_full)  — bfloat16 weights/activations at 2 bytes/element in
+    the same flat arena, float32 accumulation, f32 bias, no requantisation.
+    bf16 products are exact in f32, so the only implementation freedom is f32
+    summation order — parity against the VP is therefore *tolerance-bounded*
+    (``core/tolerances.py``), never bit-asserted.
 """
 
 from __future__ import annotations
@@ -24,11 +32,12 @@ from typing import Dict, List, Optional, Protocol, Sequence, Union, runtime_chec
 
 import jax
 import jax.numpy as jnp
+import ml_dtypes
 import numpy as np
 
 from repro.core import engine, intmath, perfmodel, quant
 from repro.core.tracegen import Trace
-from repro.kernels import int8_conv
+from repro.kernels import bf16_conv, int8_conv
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +168,96 @@ def _add_int8(a, b, word_a, word_b, relu):
 
 
 # ---------------------------------------------------------------------------
+# bf16 (nv_full) twins — bf16 operands, f32 accumulate, no requantisation.
+# Same jnp twins pattern as the int8 family above; the independent oracle is
+# numpy core/refops.conv_bf16 (the VP), compared under core/tolerances.py.
+# ---------------------------------------------------------------------------
+def _conv_bf16(x, wq, bias, k, stride, pad, groups, relu,
+               kernel: str = perfmodel.KERNEL_GEMM_BF16):
+    if kernel == perfmodel.KERNEL_PALLAS_BF16:
+        # whole CONV->SDP pipeline fused in the Pallas kernel — the f32
+        # accumulator never leaves VMEM
+        return bf16_conv.conv2d_bf16(x, wq, bias, k, stride, pad, groups,
+                                     relu, interpret=_pallas_interpret())
+    kk = wq.shape[0]
+    c, h, w_in = x.shape
+    p = (h + 2 * pad - k) // stride + 1
+    q = (w_in + 2 * pad - k) // stride + 1
+    if groups == 1:
+        cols = _im2col(x, k, stride, pad)
+        acc = jax.lax.dot_general(wq, cols, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    else:
+        cg, kg = c // groups, kk // groups
+        xg = x.reshape(groups, cg, h, w_in)
+        colsg = jax.vmap(lambda xx: _im2col(xx, k, stride, pad))(xg)
+        wg = wq.reshape(groups, kg, cg * k * k)
+        acc = jax.lax.dot_general(wg, colsg, (((2,), (1,)), ((0,), (0,))),
+                                  preferred_element_type=jnp.float32)
+        acc = acc.reshape(kk, p * q)
+    acc = acc + bias[:, None]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc.astype(jnp.bfloat16).reshape(kk, p, q)
+
+
+def _fc_bf16(x, wq, bias, relu, kernel: str = perfmodel.KERNEL_GEMM_BF16):
+    if kernel == perfmodel.KERNEL_PALLAS_BF16:
+        return bf16_conv.fc_bf16(x.reshape(-1), wq, bias, relu,
+                                 interpret=_pallas_interpret())
+    acc = jax.lax.dot_general(wq, x.reshape(-1, 1), (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    acc = acc + bias[:, None]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc.astype(jnp.bfloat16).reshape(-1, 1, 1)
+
+
+def _pool_bf16(x, kern, stride, pad, mode):
+    """PDP in float: max with -inf fill, avg as f32 sum / window (the gap
+    descriptor is avg with kernel == (H, W), which reduces to the mean)."""
+    x32 = x.astype(jnp.float32)
+    c, h, w = x.shape
+    r, s = kern
+    p = (h + 2 * pad - r) // stride + 1
+    q = (w + 2 * pad - s) // stride + 1
+    if mode == 1:      # max
+        xp = jnp.pad(x32, ((0, 0), (pad, pad), (pad, pad)),
+                     constant_values=-jnp.inf)
+        out = jnp.full((c, p, q), -jnp.inf, jnp.float32)
+        for i in range(r):
+            for j in range(s):
+                out = jnp.maximum(out, xp[:, i:i + stride * p:stride,
+                                          j:j + stride * q:stride])
+        return out.astype(jnp.bfloat16)
+    xp = jnp.pad(x32, ((0, 0), (pad, pad), (pad, pad)))
+    acc = jnp.zeros((c, p, q), jnp.float32)
+    for i in range(r):
+        for j in range(s):
+            acc = acc + xp[:, i:i + stride * p:stride, j:j + stride * q:stride]
+    return (acc / (r * s)).astype(jnp.bfloat16)
+
+
+def _add_bf16(a, b, relu):
+    acc = a.astype(jnp.float32) + b.astype(jnp.float32)
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc.astype(jnp.bfloat16)
+
+
+def _bf16_to_bytes(y):
+    """bf16 tensor -> its flat byte stream (int8), for arena stores."""
+    return jax.lax.bitcast_convert_type(y.astype(jnp.bfloat16).reshape(-1),
+                                        jnp.int8).reshape(-1)
+
+
+def _bytes_to_bf16(raw, shape):
+    """Flat byte stream (int8, length 2*n) -> bf16 tensor of ``shape``."""
+    return jax.lax.bitcast_convert_type(raw.reshape(-1, 2),
+                                        jnp.bfloat16).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
 # Descriptor -> op closure over the flat arena
 # ---------------------------------------------------------------------------
 def _surface_bytes(dims, elem_bytes: int) -> int:
@@ -168,7 +267,8 @@ def _surface_bytes(dims, elem_bytes: int) -> int:
 
 def _op_from_descriptor(d: engine.Descriptor, base: int, elem_bytes: int,
                         kernel: str = perfmodel.KERNEL_GEMM_TILED):
-    """Build f(arena)->arena for one descriptor (addresses become static offsets)."""
+    """Build f(arena)->arena for one INT8 descriptor (addresses become static
+    offsets).  The bf16 twin is ``_op_from_descriptor_bf16``."""
     _, c, h, w = d.src_dims
     _, k, p, q = d.dst_dims
     so, do = d.src_addr - base, d.dst_addr - base
@@ -219,11 +319,68 @@ def _op_from_descriptor(d: engine.Descriptor, base: int, elem_bytes: int,
     return op
 
 
+def _op_from_descriptor_bf16(d: engine.Descriptor, base: int,
+                             kernel: str = perfmodel.KERNEL_GEMM_BF16):
+    """Build f(arena)->arena for one BF16 descriptor.
+
+    The arena stays a flat int8 byte buffer (exactly the preloaded DRAM
+    image); bf16 surfaces are bitcast in and out at 2 bytes/element, f32 bias
+    vectors at 4.
+    """
+    _, c, h, w = d.src_dims
+    _, k, p, q = d.dst_dims
+    so, do = d.src_addr - base, d.dst_addr - base
+    s_n = c * h * w                       # elements, not bytes
+
+    def read_bf16(arena, off, n_, shape):
+        raw = jax.lax.dynamic_slice(arena, (off,), (n_ * 2,))
+        return _bytes_to_bf16(raw, shape)
+
+    def read_f32(arena, off, n_):
+        raw = jax.lax.dynamic_slice(arena, (off,), (n_ * 4,)).reshape(n_, 4)
+        return jax.lax.bitcast_convert_type(raw, jnp.float32)
+
+    def write(arena, y):
+        return jax.lax.dynamic_update_slice(arena, _bf16_to_bytes(y), (do,))
+
+    if d.unit in ("CONV", "FC"):
+        r, s = d.kernel
+        cin_g = c // d.groups if d.unit == "CONV" else c * h * w
+        wt_n = k * cin_g * (r * s if d.unit == "CONV" else 1)
+        wo, bo = d.wt_addr - base, d.bias_addr - base
+
+        def op(arena):
+            x = read_bf16(arena, so, s_n, (c, h, w))
+            wq = read_bf16(arena, wo, wt_n, (k, -1))
+            bias = read_f32(arena, bo, k)
+            if d.unit == "CONV":
+                y = _conv_bf16(x, wq, bias, r, d.stride, d.pad, d.groups,
+                               d.relu, kernel)
+            else:
+                y = _fc_bf16(x, wq, bias, d.relu, kernel)
+            return write(arena, y)
+    elif d.unit == "PDP":
+        def op(arena):
+            x = read_bf16(arena, so, s_n, (c, h, w))
+            return write(arena, _pool_bf16(x, d.kernel, d.stride, d.pad,
+                                           d.pool_mode))
+    elif d.unit == "EW":
+        ao = d.aux_addr - base
+
+        def op(arena):
+            a = read_bf16(arena, so, s_n, (c, h, w))
+            b = read_bf16(arena, ao, s_n, (c, h, w))
+            return write(arena, _add_bf16(a, b, d.relu))
+    else:
+        raise ValueError(d.unit)
+    return op
+
+
 def _overlaps(a: tuple, b: tuple) -> bool:
     return a[0] < b[0] + b[1] and b[0] < a[0] + a[1]
 
 
-def _batch_plan(descs, input_region: tuple):
+def _batch_plan(descs, input_region: tuple, elem_bytes: int = 1):
     """Dataflow analysis for the batched program.
 
     For op ``i``: ``fwd[i]`` — its source region is exactly the previous
@@ -232,13 +389,14 @@ def _batch_plan(descs, input_region: tuple):
     activation arena; ``store[i]`` — some *other* later read overlaps its
     destination (concat consumers, EW residuals, partial reads), so the value
     must also be stored to the arena.  Forwarding changes only where bytes are
-    read from, never their values — the batch path stays bit-exact.
+    read from, never their values — the batch path stays bit-exact (int8) /
+    bit-identical to its own single-lane program (bf16).
     """
     n = len(descs)
-    src_r = [(d.src_addr, _surface_bytes(d.src_dims, 1)) for d in descs]
-    dst_r = [(d.dst_addr, _surface_bytes(d.dst_dims, 1)) for d in descs]
-    aux_r = [(d.aux_addr, _surface_bytes(d.src_dims, 1)) if d.unit == "EW"
-             else None for d in descs]
+    src_r = [(d.src_addr, _surface_bytes(d.src_dims, elem_bytes)) for d in descs]
+    dst_r = [(d.dst_addr, _surface_bytes(d.dst_dims, elem_bytes)) for d in descs]
+    aux_r = [(d.aux_addr, _surface_bytes(d.src_dims, elem_bytes))
+             if d.unit == "EW" else None for d in descs]
     fwd = [src_r[i] == (dst_r[i - 1] if i else input_region) for i in range(n)]
 
     def store_needed(region: tuple, producer: int) -> bool:
@@ -322,6 +480,70 @@ def _batched_op_from_descriptor(d: engine.Descriptor, base: int, act_lo: int,
     return op
 
 
+def _batched_op_from_descriptor_bf16(d: engine.Descriptor, base: int,
+                                     act_lo: int, fwd: bool, store: bool,
+                                     kernel: str = perfmodel.KERNEL_GEMM_BF16):
+    """bf16 twin of ``_batched_op_from_descriptor``.
+
+    Same structure: the full preload arena is shared (unbatched) across lanes
+    and read with static slices; the per-lane ``act`` arena and the forwarded
+    ``y_prev`` both carry raw bf16 *bytes* (int8), bitcast at the op boundary
+    — so the int8 and bf16 batch paths share one replay loop shape.
+    """
+    _, c, h, w = d.src_dims
+    _, k, p, q = d.dst_dims
+    so = d.src_addr - base - act_lo
+    do = d.dst_addr - base - act_lo
+    s_n = c * h * w
+    s_bytes = s_n * 2
+
+    def read_src(act, y_prev):
+        if fwd:
+            return _bytes_to_bf16(y_prev, (c, h, w))
+        raw = jax.lax.dynamic_slice(act, (so,), (s_bytes,))
+        return _bytes_to_bf16(raw, (c, h, w))
+
+    def finish(act, y):
+        y_flat = _bf16_to_bytes(y)
+        if store:
+            act = jax.lax.dynamic_update_slice(act, y_flat, (do,))
+        return act, y_flat
+
+    if d.unit in ("CONV", "FC"):
+        r, s = d.kernel
+        cin_g = c // d.groups if d.unit == "CONV" else c * h * w
+        wt_n = k * cin_g * (r * s if d.unit == "CONV" else 1)
+        wo, bo = d.wt_addr - base, d.bias_addr - base
+
+        def op(weights, act, y_prev):
+            x = read_src(act, y_prev)
+            wq = _bytes_to_bf16(weights[wo:wo + 2 * wt_n], (k, -1))
+            bias = jax.lax.bitcast_convert_type(
+                weights[bo:bo + 4 * k].reshape(k, 4), jnp.float32)
+            if d.unit == "CONV":
+                y = _conv_bf16(x, wq, bias, r, d.stride, d.pad, d.groups,
+                               d.relu, kernel)
+            else:
+                y = _fc_bf16(x, wq, bias, d.relu, kernel)
+            return finish(act, y)
+    elif d.unit == "PDP":
+        def op(weights, act, y_prev):
+            y = _pool_bf16(read_src(act, y_prev), d.kernel, d.stride, d.pad,
+                           d.pool_mode)
+            return finish(act, y)
+    elif d.unit == "EW":
+        ao = d.aux_addr - base - act_lo
+
+        def op(weights, act, y_prev):
+            a = read_src(act, y_prev)
+            raw = jax.lax.dynamic_slice(act, (ao,), (s_bytes,))
+            b = _bytes_to_bf16(raw, (c, h, w))
+            return finish(act, _add_bf16(a, b, d.relu))
+    else:
+        raise ValueError(d.unit)
+    return op
+
+
 # ---------------------------------------------------------------------------
 # Executors
 # ---------------------------------------------------------------------------
@@ -383,7 +605,13 @@ class _ExecutorBase:
                  input_scale: float = 1.0, output_scale: float = 1.0,
                  output_elems: Optional[int] = None,
                  kernel_plan: Union[str, Sequence, Dict[int, str], None] = None):
-        assert cfg.dtype == "int8", "executors implement the nv_small INT8 path"
+        if cfg.dtype not in ("int8", "bf16"):
+            known = ", ".join(f"{n} (dtype={c.dtype})"
+                              for n, c in engine.CONFIGS.items())
+            raise NotImplementedError(
+                f"executor backends implement the int8 (nv_small) and bf16 "
+                f"(nv_full) datapaths; engine config {cfg.name!r} declares "
+                f"dtype={cfg.dtype!r}.  Known engine configs: {known}")
         self.cfg = cfg
         self.trace = trace
         self.input_scale = input_scale
@@ -396,11 +624,14 @@ class _ExecutorBase:
         # choices for debugging/A-B (a kernel name for all CONV/FC, a
         # per-descriptor sequence, or an {index: name} dict).
         self.kernel_plan = self._resolve_kernel_plan(kernel_plan)
-        # Arena geometry, derived from the trace alone.
+        # Arena geometry, derived from the trace alone.  All addresses are
+        # byte addresses; surfaces occupy elem_bytes per element (1 for int8,
+        # 2 for bf16 — see core/memory.plan_arena).
+        eb = cfg.elem_bytes
         hi = engine.DRAM_BASE
         for d in self.descs:
-            hi = max(hi, d.dst_addr + _surface_bytes(d.dst_dims, 1),
-                     d.src_addr + _surface_bytes(d.src_dims, 1))
+            hi = max(hi, d.dst_addr + _surface_bytes(d.dst_dims, eb),
+                     d.src_addr + _surface_bytes(d.src_dims, eb))
         for a, b in weight_image.items():
             hi = max(hi, a + len(b))
         self.base = engine.DRAM_BASE
@@ -415,7 +646,9 @@ class _ExecutorBase:
         self.input_dims = self.descs[0].src_dims
         self.output_off = self.descs[-1].dst_addr - self.base
         self.output_dims = self.descs[-1].dst_dims
-        self.output_elems = output_elems or _surface_bytes(self.output_dims, 1)
+        self.output_elems = output_elems or \
+            _surface_bytes(self.output_dims, 1)       # ELEMENT count
+        self.output_bytes = self.output_elems * eb    # arena-slice length
 
     def _resolve_kernel_plan(self, spec) -> List[perfmodel.KernelChoice]:
         if isinstance(spec, (list, tuple)) and len(spec) != len(self.descs):
@@ -452,7 +685,8 @@ class _ExecutorBase:
                 ov = spec                      # None or a kernel name for all
             if d.unit not in ("CONV", "FC"):
                 ov = None
-            choices.append(perfmodel.select_kernel(d, backend, override=ov))
+            choices.append(perfmodel.select_kernel(d, backend, override=ov,
+                                                   dtype=self.cfg.dtype))
         return choices
 
     def kernel_plan_summary(self) -> List[Dict]:
@@ -461,12 +695,28 @@ class _ExecutorBase:
                 for i, (d, c) in enumerate(zip(self.descs, self.kernel_plan))]
 
     def _quant_in(self, x: np.ndarray) -> np.ndarray:
-        if x.dtype == np.int8:
-            return x
-        return quant.quantize_act(x, self.input_scale)
+        """Input image -> the engine's surface dtype (int8 or bf16)."""
+        x = np.asarray(x)
+        if self.cfg.dtype == "int8":
+            if x.dtype == np.int8:
+                return x
+            return quant.quantize_act(x, self.input_scale)
+        return np.ascontiguousarray(x).astype(ml_dtypes.bfloat16)
 
     def _dequant_out(self, y_i8: np.ndarray) -> np.ndarray:
         return y_i8.astype(np.float32) * self.output_scale
+
+    def _finish_out(self, y_bytes: np.ndarray) -> ExecResult:
+        """Raw output-surface bytes (last axis = ``output_bytes``) ->
+        ``ExecResult``.  ``output_int8`` carries the raw engine bytes — int8
+        logits for nv_small, the bf16 byte stream for nv_full (the same
+        convention as ``VpResult``); ``output`` is always float32."""
+        if self.cfg.dtype == "int8":
+            y_i8 = y_bytes.view(np.int8)
+            return ExecResult(output_int8=y_i8, output=self._dequant_out(y_i8))
+        out = y_bytes.view(ml_dtypes.bfloat16).astype(np.float32) \
+            * self.output_scale
+        return ExecResult(output_int8=y_bytes.view(np.uint8), output=out)
 
     def _plan_kernels(self) -> tuple:
         return tuple(sorted({c.kernel for c in self.kernel_plan
@@ -502,9 +752,14 @@ class BareMetalExecutor(_ExecutorBase):
         # stores of activations that are never read back).
         del donate
         super().__init__(*args, **kw)
-        ops = [_op_from_descriptor(d, self.base, 1, c.kernel)
-               for d, c in zip(self.descs, self.kernel_plan)]
-        n_out = self.output_elems
+        eb = self.cfg.elem_bytes
+        if self.cfg.dtype == "int8":
+            ops = [_op_from_descriptor(d, self.base, 1, c.kernel)
+                   for d, c in zip(self.descs, self.kernel_plan)]
+        else:
+            ops = [_op_from_descriptor_bf16(d, self.base, c.kernel)
+                   for d, c in zip(self.descs, self.kernel_plan)]
+        n_out = self.output_bytes
         out_off = self.output_off
 
         def replay(arena, x_flat):
@@ -522,20 +777,22 @@ class BareMetalExecutor(_ExecutorBase):
         act_offs = []
         for d in self.descs:
             act_offs.append((d.src_addr - self.base,
-                             d.src_addr - self.base + _surface_bytes(d.src_dims, 1)))
+                             d.src_addr - self.base + _surface_bytes(d.src_dims, eb)))
             act_offs.append((d.dst_addr - self.base,
-                             d.dst_addr - self.base + _surface_bytes(d.dst_dims, 1)))
+                             d.dst_addr - self.base + _surface_bytes(d.dst_dims, eb)))
             if d.unit == "EW":
                 act_offs.append((d.aux_addr - self.base,
-                                 d.aux_addr - self.base + _surface_bytes(d.src_dims, 1)))
+                                 d.aux_addr - self.base + _surface_bytes(d.src_dims, eb)))
         act_lo = min(lo for lo, _ in act_offs)
         act_hi = max(hi for _, hi in act_offs)
         self._act_lo, self._act_hi = act_lo, act_hi
         in_region = (self.base + self.input_off,
-                     _surface_bytes(self.input_dims, 1))
-        fwd, store, store_input = _batch_plan(self.descs, in_region)
-        bops = [_batched_op_from_descriptor(d, self.base, act_lo, fwd[i],
-                                            store[i], self.kernel_plan[i].kernel)
+                     _surface_bytes(self.input_dims, eb))
+        fwd, store, store_input = _batch_plan(self.descs, in_region, eb)
+        bop_builder = (_batched_op_from_descriptor if self.cfg.dtype == "int8"
+                       else _batched_op_from_descriptor_bf16)
+        bops = [bop_builder(d, self.base, act_lo, fwd[i], store[i],
+                            self.kernel_plan[i].kernel)
                 for i, d in enumerate(self.descs)]
 
         def batch_replay(weights, act0, xs):
@@ -570,15 +827,15 @@ class BareMetalExecutor(_ExecutorBase):
 
     def compile(self):
         """AOT-compile the fused program (the 'binary')."""
-        x = jax.ShapeDtypeStruct((_surface_bytes(self.input_dims, 1),), jnp.int8)
+        x = jax.ShapeDtypeStruct(
+            (_surface_bytes(self.input_dims, self.cfg.elem_bytes),), jnp.int8)
         a = jax.ShapeDtypeStruct((self.size,), jnp.int8)
         return self._fn.lower(a, x).compile()
 
     def run(self, x: np.ndarray) -> ExecResult:
         xq = self._quant_in(x).reshape(-1)
         y = self._fn(self._ensure_arena(), jnp.asarray(xq.view(np.int8)))
-        y_i8 = np.asarray(y).view(np.int8)[:self.output_elems]
-        return ExecResult(output_int8=y_i8, output=self._dequant_out(y_i8))
+        return self._finish_out(np.asarray(y))
 
     def capabilities(self) -> ExecutorCapabilities:
         return ExecutorCapabilities(native_batching=True, resident_arena=True,
@@ -604,8 +861,7 @@ class BareMetalExecutor(_ExecutorBase):
             xs = jax.device_put(xs, self.batch_sharding)
         y = np.asarray(self._batch_fn(self._ensure_arena(), self._batch_state,
                                       xs))
-        y_i8 = y.view(np.int8)[:lanes, :self.output_elems]
-        return ExecResult(output_int8=y_i8, output=self._dequant_out(y_i8))
+        return self._finish_out(y[:lanes])
 
 
 class LinuxStackExecutor(_ExecutorBase):
@@ -627,6 +883,8 @@ class LinuxStackExecutor(_ExecutorBase):
                               self._bind(d)))
 
     def _op_fn(self, d: engine.Descriptor, kernel: str):
+        if self.cfg.dtype == "bf16":
+            return self._op_fn_bf16(d, kernel)
         if d.unit in ("CONV", "FC"):
             r, s = d.kernel
             def f(x, wq, bias, words):
@@ -643,9 +901,27 @@ class LinuxStackExecutor(_ExecutorBase):
             return lambda a, b: _add_int8(a, b, wa, wb, d.relu)
         raise ValueError(d.unit)
 
+    def _op_fn_bf16(self, d: engine.Descriptor, kernel: str):
+        if d.unit in ("CONV", "FC"):
+            r, s = d.kernel
+            def f(x, wq, bias):
+                if d.unit == "CONV":
+                    return _conv_bf16(x, wq, bias, r, d.stride, d.pad,
+                                      d.groups, d.relu, kernel)
+                return _fc_bf16(x, wq, bias, d.relu, kernel)
+            return f
+        if d.unit == "PDP":
+            return lambda x: _pool_bf16(x, d.kernel, d.stride, d.pad,
+                                        d.pool_mode)
+        if d.unit == "EW":
+            return lambda a, b: _add_bf16(a, b, d.relu)
+        raise ValueError(d.unit)
+
     def _bind(self, d: engine.Descriptor):
         """Static per-descriptor binding: weight-region views (the preload
         image is immutable during serving) + activation offsets/shapes."""
+        eb = self.cfg.elem_bytes
+        bf16 = self.cfg.dtype == "bf16"
         _, c, h, w = d.src_dims
         b = dict(src_off=d.src_addr - self.base, src_shape=(c, h, w),
                  src_n=c * h * w, dst_off=d.dst_addr - self.base)
@@ -656,9 +932,14 @@ class LinuxStackExecutor(_ExecutorBase):
             wt_n = k * cin_g * (r * s if d.unit == "CONV" else 1)
             wo, bo, so = (d.wt_addr - self.base, d.bias_addr - self.base,
                           d.scale_addr - self.base)
-            b["wq"] = self.arena0[wo:wo + wt_n].view(np.int8).reshape(k, -1)
-            b["bias"] = self.arena0[bo:bo + 4 * k].view(np.int32)
-            b["words"] = self.arena0[so:so + 4 * k].view(np.int32)
+            if bf16:
+                b["wq"] = self.arena0[wo:wo + eb * wt_n] \
+                    .view(ml_dtypes.bfloat16).reshape(k, -1)
+                b["bias"] = self.arena0[bo:bo + 4 * k].view(np.float32)
+            else:
+                b["wq"] = self.arena0[wo:wo + wt_n].view(np.int8).reshape(k, -1)
+                b["bias"] = self.arena0[bo:bo + 4 * k].view(np.int32)
+                b["words"] = self.arena0[so:so + 4 * k].view(np.int32)
         elif d.unit == "EW":
             b["aux_off"] = d.aux_addr - self.base
         return b
@@ -666,23 +947,29 @@ class LinuxStackExecutor(_ExecutorBase):
     def run(self, x: np.ndarray) -> ExecResult:
         xq = self._quant_in(x)
         dram = self.arena0.copy()       # driver re-stages buffers per submission
+        eb = self.cfg.elem_bytes
+        sdtype = ml_dtypes.bfloat16 if self.cfg.dtype == "bf16" else np.int8
 
-        def surf_i8(off, shape, n):
-            return dram[off:off + n].view(np.int8).reshape(shape)
+        def surf(off, shape, n):
+            return dram[off:off + n * eb].view(sdtype).reshape(shape)
 
         in_off = self.descs[0].src_addr - self.base
-        dram[in_off:in_off + xq.size] = xq.reshape(-1).view(np.uint8)
+        x_bytes = np.ascontiguousarray(xq.reshape(-1)).view(np.uint8)
+        dram[in_off:in_off + x_bytes.size] = x_bytes
         for d, fn, bnd in self._ops:
-            src = surf_i8(bnd["src_off"], bnd["src_shape"], bnd["src_n"])
+            src = surf(bnd["src_off"], bnd["src_shape"], bnd["src_n"])
             if d.unit in ("CONV", "FC"):
-                y = fn(src, bnd["wq"], bnd["bias"], bnd["words"])
+                if "words" in bnd:
+                    y = fn(src, bnd["wq"], bnd["bias"], bnd["words"])
+                else:
+                    y = fn(src, bnd["wq"], bnd["bias"])
             elif d.unit == "PDP":
                 y = fn(src)
             else:
-                y = fn(src, surf_i8(bnd["aux_off"], bnd["src_shape"],
-                                    bnd["src_n"]))
-            y = np.asarray(y).reshape(-1)
-            dram[bnd["dst_off"]:bnd["dst_off"] + y.size] = \
+                y = fn(src, surf(bnd["aux_off"], bnd["src_shape"],
+                                 bnd["src_n"]))
+            y = np.ascontiguousarray(np.asarray(y).reshape(-1))
+            dram[bnd["dst_off"]:bnd["dst_off"] + y.size * eb] = \
                 y.view(np.uint8)        # driver flushes the buffer
-        out = dram[self.output_off:self.output_off + self.output_elems].view(np.int8)
-        return ExecResult(output_int8=out.copy(), output=self._dequant_out(out))
+        out = dram[self.output_off:self.output_off + self.output_bytes]
+        return self._finish_out(out.copy().view(np.int8))

@@ -110,8 +110,15 @@ def _pool_f32(x: np.ndarray, l, mode: str) -> np.ndarray:
 def build_loadable(graph: NetGraph, params: Dict[str, Dict[str, np.ndarray]],
                    cal: quant.CalibrationTable,
                    cfg: engine.EngineConfig = engine.NV_SMALL) -> Loadable:
-    if cfg.dtype != "int8":
+    if cfg.dtype == "bf16":
         return _build_loadable_bf16(graph, params, cal, cfg)
+    if cfg.dtype != "int8":
+        known = ", ".join(f"{n} (dtype={c.dtype})"
+                          for n, c in engine.CONFIGS.items())
+        raise ValueError(
+            f"cannot build a loadable for engine dtype {cfg.dtype!r} "
+            f"(config {cfg.name!r}); supported datapaths are int8 (nv_small) "
+            f"and bf16 (nv_full).  Known engine configs: {known}")
     plan = memory.plan_arena(graph, elem_bytes=1)
     by = graph.by_name()
     image = np.zeros(plan.weight_end - engine.DRAM_BASE, np.uint8)

@@ -25,6 +25,15 @@ backend — never by a hard-coded size cliff:
     GEMM with the NVDLA SDP epilogue fused so the int32 accumulator never
     leaves VMEM.
 
+The bf16 (nv_full) datapath has its own candidate family, selected when the
+engine config's dtype is ``bf16`` (``KERNELS_BY_DTYPE``):
+
+  * ``gemm_bf16``        — XLA GEMM over bf16 operands, f32 accumulate (bf16
+    products are exact in f32, so no K tiling is ever needed).
+  * ``pallas_bf16_fused``— the ``kernels/bf16_conv`` Pallas kernel: MXU bf16
+    GEMM with the nv_full SDP epilogue (f32 bias + ReLU) fused so the f32
+    accumulator never leaves VMEM.
+
 ``kernel_plan`` maps a whole descriptor list; the pipeline's ``cost_model``
 stage publishes the plan into the ``Artifacts`` manifest.
 """
@@ -48,6 +57,17 @@ KERNEL_VPU = "vpu"                     # PDP / EW: no GEMM, pure vector ops
 
 GEMM_KERNELS = (KERNEL_GEMM_EXACT, KERNEL_GEMM_TILED, KERNEL_PALLAS)
 
+# bf16 (nv_full) kernel family: float accumulate, no requant, no exactness
+# tiling (f32 accumulation of exact bf16 products needs no K split)
+KERNEL_GEMM_BF16 = "gemm_bf16"         # XLA bf16 GEMM, f32 accumulate
+KERNEL_PALLAS_BF16 = "pallas_bf16_fused"
+
+BF16_KERNELS = (KERNEL_GEMM_BF16, KERNEL_PALLAS_BF16)
+
+# which GEMM kernels may serve a descriptor, per engine dtype — selection and
+# ``kernel_plan=`` override validation both consult this
+KERNELS_BY_DTYPE = {"int8": GEMM_KERNELS, "bf16": BF16_KERNELS}
+
 # Largest contraction K for which a single f32 GEMM is provably bit-exact:
 # every int8*int8 product has |p| <= 128*128, so the worst-case partial sum
 # K * 128 * 128 must stay within the 2^24 f32 integer-exact window.
@@ -70,15 +90,25 @@ class BackendProfile:
     bytes_per_cycle: float             # weight-stream bandwidth
     pallas_native: bool                # Pallas runs compiled (TPU) vs interpret
     tile_overhead_macs: float = 4096.0  # int32 partial-sum add per extra K-tile
+    bf16_macs_per_cycle: float = 0.0   # native bf16 MAC rate (0 = cast to f32)
+
+    @property
+    def bf16_rate(self) -> float:
+        """Effective bf16 MAC rate: native when the substrate has bf16 units
+        (TPU MXU runs bf16 at 2x the f32 rate), else the f32 units after an
+        upcast."""
+        return self.bf16_macs_per_cycle or self.f32_macs_per_cycle
 
 
 PROFILES: Dict[str, BackendProfile] = {
     "cpu": BackendProfile(platform="cpu", f32_macs_per_cycle=16.0,
                           bytes_per_cycle=32.0, pallas_native=False),
     "tpu": BackendProfile(platform="tpu", f32_macs_per_cycle=256.0,
-                          bytes_per_cycle=512.0, pallas_native=True),
+                          bytes_per_cycle=512.0, pallas_native=True,
+                          bf16_macs_per_cycle=512.0),
     "gpu": BackendProfile(platform="gpu", f32_macs_per_cycle=128.0,
-                          bytes_per_cycle=256.0, pallas_native=False),
+                          bytes_per_cycle=256.0, pallas_native=False,
+                          bf16_macs_per_cycle=256.0),
 }
 
 
@@ -170,28 +200,51 @@ def _kernel_cost(kernel: str, k: int, macs: int, n_cols: int,
         # in VMEM): both sides of the roofline are cheaper than f32
         return max(0.9 * macs / prof.f32_macs_per_cycle,
                    1.0 * weight_elems / prof.bytes_per_cycle)
+    if kernel == KERNEL_GEMM_BF16:
+        # bf16 operands stream at 2 bytes/elem; accumulate rides the bf16
+        # units when they exist, the f32 units after an upcast otherwise
+        return max(macs / prof.bf16_rate,
+                   2.0 * weight_elems / prof.bytes_per_cycle)
+    if kernel == KERNEL_PALLAS_BF16:
+        if not prof.pallas_native:
+            return float("inf")            # interpret mode: test-only on CPU
+        # fused epilogue: the f32 accumulator never leaves VMEM
+        return max(0.9 * macs / prof.bf16_rate,
+                   2.0 * weight_elems / prof.bytes_per_cycle)
     raise ValueError(f"unknown kernel {kernel!r}")
 
 
 def select_kernel(d: engine.Descriptor,
                   backend: Union[str, BackendProfile, None] = None,
-                  override: Optional[str] = None) -> KernelChoice:
+                  override: Optional[str] = None,
+                  dtype: str = "int8") -> KernelChoice:
     """Pick the cheapest applicable kernel for one descriptor.
 
-    ``override`` forces a specific GEMM kernel (debugging / A-B testing);
-    forcing ``gemm_f32_exact`` on a contraction too large for the exactness
-    bound raises rather than silently producing wrong bits.
+    ``dtype`` is the engine datapath (``EngineConfig.dtype``): it decides the
+    candidate set — int8 descriptors resolve to the bit-exact integer GEMMs,
+    bf16 (nv_full) descriptors to the f32-accumulate family.  ``override``
+    forces a specific GEMM kernel (debugging / A-B testing); forcing
+    ``gemm_f32_exact`` on a contraction too large for the exactness bound, or
+    a kernel from the wrong dtype family, raises rather than silently
+    producing wrong bits.
     """
     if d.unit not in ("CONV", "FC"):
         return KernelChoice(kernel=KERNEL_VPU, reason="no contraction")
+    try:
+        candidates = KERNELS_BY_DTYPE[dtype]
+    except KeyError:
+        raise ValueError(f"no kernel family for engine dtype {dtype!r}; "
+                         f"known: {', '.join(sorted(KERNELS_BY_DTYPE))}") \
+            from None
     prof = resolve_profile(backend)
     k = contract_k(d)
     macs = descriptor_macs(d)
-    n_tiles = -(-k // EXACT_K) if k else 1
+    n_tiles = (-(-k // EXACT_K) if k else 1) if dtype == "int8" else 1
     if override is not None:
-        if override not in GEMM_KERNELS:
-            raise ValueError(f"unknown kernel {override!r}; GEMM kernels: "
-                             f"{', '.join(GEMM_KERNELS)}")
+        if override not in candidates:
+            raise ValueError(
+                f"unknown kernel {override!r} for dtype {dtype!r}; "
+                f"{dtype} GEMM kernels: {', '.join(candidates)}")
         if override == KERNEL_GEMM_EXACT and k > EXACT_K:
             raise ValueError(
                 f"kernel {override!r} forced for K={k} > {EXACT_K}: a single "
@@ -200,7 +253,7 @@ def select_kernel(d: engine.Descriptor,
                             reason="forced by kernel_plan override")
     n_cols = gemm_cols(d)
     costs = {name: _kernel_cost(name, k, macs, n_cols, prof)
-             for name in GEMM_KERNELS}
+             for name in candidates}
     best = min(costs, key=costs.get)
     return KernelChoice(
         kernel=best, contract_k=k, k_tiles=n_tiles,
@@ -212,15 +265,16 @@ def select_kernel(d: engine.Descriptor,
 def kernel_plan(descs: Sequence[engine.Descriptor],
                 names: Optional[Sequence[str]] = None,
                 backend: Union[str, BackendProfile, None] = None,
-                override: Optional[str] = None) -> List[Dict]:
+                override: Optional[str] = None,
+                dtype: str = "int8") -> List[Dict]:
     """Per-descriptor kernel plan, as JSON-ready dicts (manifest format)."""
     names = names or [f"op{i}" for i in range(len(descs))]
     prof = resolve_profile(backend)
     out = []
     for d, n in zip(descs, names):
-        ch = select_kernel(d, prof, override=override)
+        ch = select_kernel(d, prof, override=override, dtype=dtype)
         e = ch.to_dict()
-        e.update(layer=n, unit=d.unit, backend=prof.platform)
+        e.update(layer=n, unit=d.unit, backend=prof.platform, dtype=dtype)
         out.append(e)
     return out
 
@@ -311,4 +365,5 @@ def model_cost(descs: List[engine.Descriptor], cfg: engine.EngineConfig,
     total = sum(o.cycles for o in ops)
     return ModelCost(ops=ops, total_cycles=total,
                      ms_at_clock=cfg.cycles_to_ms(total),
-                     kernel_plan=kernel_plan(descs, names, backend))
+                     kernel_plan=kernel_plan(descs, names, backend,
+                                             dtype=cfg.dtype))

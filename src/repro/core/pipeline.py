@@ -284,7 +284,8 @@ def _hash_update_array(h, a: Optional[np.ndarray]) -> None:
 # Mixed into every cache key.  Bump whenever a stage's implementation changes
 # semantics, so the *persistent* disk tier never serves stage outputs pickled
 # by an older build (the in-memory tier dies with the process; disk doesn't).
-CACHE_SCHEMA_VERSION = 3
+CACHE_SCHEMA_VERSION = 4   # 4: kernel_plan entries gained a dtype field
+                           #    (bf16/nv_full kernel family)
 
 
 def _fingerprint(graph: NetGraph, params, calib_samples, cfg, sample_input,

@@ -150,3 +150,21 @@ def fc_bf16(x: np.ndarray, w: np.ndarray, bias: np.ndarray, relu: bool = False) 
     if relu:
         acc = np.maximum(acc, 0)
     return acc.reshape(-1, 1, 1)
+
+
+def pool_f32(x: np.ndarray, r: int, s: int, stride: int, pad: int,
+             mode: str) -> np.ndarray:
+    """Float PDP reference (max with -inf fill / avg as sum over window),
+    shared by the VP functional model and the ref executor backend — ONE
+    copy of the nv_full pooling semantics."""
+    c, h, w = x.shape
+    fill = -np.inf if mode == "max" else 0.0
+    xp = np.pad(x, ((0, 0), (pad, pad), (pad, pad)), constant_values=fill)
+    p = (h + 2 * pad - r) // stride + 1
+    q = (w + 2 * pad - s) // stride + 1
+    acc = np.full((c, p, q), fill, np.float32)
+    for i in range(r):
+        for j in range(s):
+            win = xp[:, i:i + stride * p:stride, j:j + stride * q:stride]
+            acc = np.maximum(acc, win) if mode == "max" else acc + win
+    return acc if mode == "max" else acc / (r * s)

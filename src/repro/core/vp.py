@@ -212,11 +212,11 @@ class VirtualPlatform:
             x = surf(d.src_addr, d.src_dims).astype(np.float32)
             r, s = d.kernel
             if d.pool_mode == 1:
-                y = _pool32(x, r, d.stride, d.pad, "max")
+                y = refops.pool_f32(x, r, s, d.stride, d.pad, "max")
             elif (r, s) == (h, w) and d.pad == 0:
                 y = x.mean(axis=(1, 2), keepdims=True)
             else:
-                y = _pool32(x, r, d.stride, d.pad, "avg")
+                y = refops.pool_f32(x, r, s, d.stride, d.pad, "avg")
             self._write_dram(d.dst_addr, y.astype(ml_dtypes.bfloat16).tobytes())
         elif d.unit == "EW":
             a = surf(d.src_addr, d.src_dims).astype(np.float32)
@@ -225,17 +225,3 @@ class VirtualPlatform:
             if d.relu:
                 y = np.maximum(y, 0)
             self._write_dram(d.dst_addr, y.astype(ml_dtypes.bfloat16).tobytes())
-
-
-def _pool32(x: np.ndarray, k: int, stride: int, pad: int, mode: str) -> np.ndarray:
-    c, h, w = x.shape
-    fill = -np.inf if mode == "max" else 0.0
-    xp = np.pad(x, ((0, 0), (pad, pad), (pad, pad)), constant_values=fill)
-    p = (h + 2 * pad - k) // stride + 1
-    q = (w + 2 * pad - k) // stride + 1
-    acc = np.full((c, p, q), fill, np.float32)
-    for r in range(k):
-        for s in range(k):
-            win = xp[:, r:r + stride * p:stride, s:s + stride * q:stride]
-            acc = np.maximum(acc, win) if mode == "max" else acc + win
-    return acc if mode == "max" else acc / (k * k)

@@ -1,0 +1,18 @@
+"""Fused BF16 convolution / FC kernel family (NVDLA nv_full CONV->SDP).
+
+The bf16 twin of ``kernels/int8_conv``: im2col + fused-epilogue GEMM where the
+float32 accumulator never leaves VMEM — bf16 x bf16 products are exact in f32
+(8-bit significands multiply into 16 bits), accumulation happens in a
+persistent f32 scratch tile (the CACC analogue), and the SDP epilogue (f32
+bias add, optional ReLU, round back to bf16) runs in the kernel on the last K
+step.  No requantisation: nv_full's SDP is a float pipeline.
+
+``ops.conv2d_bf16`` / ``ops.fc_bf16`` are the public entry points used by the
+executors through ``perfmodel.select_kernel``; ``ref.py`` holds the pure-jnp
+oracle the kernel is tested against (itself tolerance-checked against numpy
+``core/refops.conv_bf16`` — see ``core/tolerances.py`` for why bf16 parity is
+bounded rather than bit-exact).
+"""
+
+from repro.kernels.bf16_conv.ops import conv2d_bf16, fc_bf16  # noqa: F401
+from repro.kernels.bf16_conv.ref import conv2d_bf16_ref, fc_bf16_ref  # noqa: F401

@@ -1,0 +1,84 @@
+"""Public fused bf16-conv entry points: pad to MXU blocks, dispatch kernel.
+
+These are the functions ``core/executor.py`` routes CONV/FC descriptors to
+when ``perfmodel.select_kernel`` resolves ``pallas_bf16_fused`` on an nv_full
+artifact.  They are jit- and vmap-compatible (the batched executor path vmaps
+them per lane), and ``interpret=True`` runs the very same kernel through the
+Pallas interpreter on CPU — the path the tolerance-parity tests exercise.
+
+Zero padding is epilogue-safe here for the same reason it is in the int8
+family: padded K contributes exact 0.0 products to the f32 accumulator, and
+padded M/N rows/columns are sliced off before the caller sees them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.intmath import im2col
+from repro.kernels.bf16_conv.kernel import bf16_conv_gemm
+from repro.kernels.bf16_conv.ref import conv2d_bf16_ref, fc_bf16_ref
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _fused_gemm(wq, cols, bias, relu, block_m, block_n, block_k, interpret):
+    """Pad operands to block multiples, run the fused kernel, unpad."""
+    m, n = wq.shape[0], cols.shape[1]
+    wp = _pad_to(_pad_to(wq, block_m, 0), block_k, 1)
+    cp = _pad_to(_pad_to(cols, block_k, 0), block_n, 1)
+    bp = _pad_to(bias, block_m, 0)
+    out = bf16_conv_gemm(wp, cp, bp, relu=relu, block_m=block_m,
+                         block_n=block_n, block_k=block_k, interpret=interpret)
+    return out[:m, :n]
+
+
+def conv2d_bf16(x: jax.Array, wq: jax.Array, bias: jax.Array, k: int,
+                stride: int, pad: int, groups: int = 1, relu: bool = False, *,
+                use_kernel: bool = True, block_m: int = 128,
+                block_n: int = 128, block_k: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """Fused CONV+SDP: (C,H,W) bf16 -> (K,P,Q) bf16, f32 accumulate.
+
+    x (C,H,W) bfloat16; wq (K, C/g*k*k) bfloat16; bias (K,) float32.
+    """
+    if not use_kernel:
+        return conv2d_bf16_ref(x, wq, bias, k, stride, pad, groups, relu)
+    kk = wq.shape[0]
+    c, h, w_in = x.shape
+    p = (h + 2 * pad - k) // stride + 1
+    q = (w_in + 2 * pad - k) // stride + 1
+    if groups == 1:
+        cols = im2col(x, k, stride, pad)
+        out = _fused_gemm(wq, cols, bias, relu, block_m, block_n, block_k,
+                          interpret)
+        return out.reshape(kk, p, q)
+    cg, kg = c // groups, kk // groups
+    outs = []
+    for g in range(groups):
+        cols = im2col(x[g * cg:(g + 1) * cg], k, stride, pad)
+        outs.append(_fused_gemm(wq[g * kg:(g + 1) * kg], cols,
+                                bias[g * kg:(g + 1) * kg], relu,
+                                block_m, block_n, block_k, interpret))
+    return jnp.concatenate(outs, 0).reshape(kk, p, q)
+
+
+def fc_bf16(x: jax.Array, wq: jax.Array, bias: jax.Array,
+            relu: bool = False, *, use_kernel: bool = True,
+            block_m: int = 128, block_n: int = 128, block_k: int = 128,
+            interpret: bool = True) -> jax.Array:
+    """Fused FC+SDP: flat bf16 input, wq (K_out, Cin) -> (K_out,1,1) bf16."""
+    if not use_kernel:
+        return fc_bf16_ref(x, wq, bias, relu)
+    cols = x.reshape(-1, 1)
+    out = _fused_gemm(wq, cols, bias, relu, block_m, block_n, block_k,
+                      interpret)
+    return out.reshape(-1, 1, 1)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the fused bf16 conv/FC kernels.
+
+Same f32-accumulate semantics as the Pallas kernel (bf16 operands, exact
+products, f32 accumulation, f32 bias, round to bf16 at the end) in one
+unblocked ``dot_general`` — the independent second implementation is numpy
+``core/refops.conv_bf16``; parity against it is tolerance-bounded
+(``core/tolerances.py``), never bit-asserted.  ``im2col`` comes from
+``core/intmath.py`` — it is dtype-generic, so the int8 and bf16 families
+share the one patch-matrix implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.intmath import im2col
+
+
+def _gemm_epilogue(wq, cols, bias, relu):
+    acc = jax.lax.dot_general(wq, cols, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    acc = acc + bias[:, None]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc.astype(jnp.bfloat16)
+
+
+def conv2d_bf16_ref(x, wq, bias, k, stride, pad, groups=1,
+                    relu=False) -> jax.Array:
+    """(C,H,W) bf16 conv oracle: f32-accumulate GEMM + bias/ReLU epilogue."""
+    kk = wq.shape[0]
+    c, h, w_in = x.shape
+    p = (h + 2 * pad - k) // stride + 1
+    q = (w_in + 2 * pad - k) // stride + 1
+    if groups == 1:
+        return _gemm_epilogue(wq, im2col(x, k, stride, pad), bias,
+                              relu).reshape(kk, p, q)
+    cg, kg = c // groups, kk // groups
+    outs = []
+    for g in range(groups):
+        cols = im2col(x[g * cg:(g + 1) * cg], k, stride, pad)
+        outs.append(_gemm_epilogue(wq[g * kg:(g + 1) * kg], cols,
+                                   bias[g * kg:(g + 1) * kg], relu))
+    return jnp.concatenate(outs, 0).reshape(kk, p, q)
+
+
+def fc_bf16_ref(x, wq, bias, relu=False) -> jax.Array:
+    """x flat bf16, wq (K_out, Cin): FC oracle -> (K_out, 1, 1) bf16."""
+    return _gemm_epilogue(wq, x.reshape(-1, 1), bias, relu).reshape(-1, 1, 1)

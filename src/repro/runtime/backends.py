@@ -46,7 +46,8 @@ def _make_linuxstack(art, **kw):
 
 
 class RefExecutor(_ExecutorBase):
-    """Numpy golden model: replays the decoded descriptors with core/refops."""
+    """Numpy golden model: replays the decoded descriptors with core/refops
+    (integer-exact for int8; f32-accumulate ``refops.*_bf16`` for nv_full)."""
 
     def capabilities(self) -> ExecutorCapabilities:
         # the golden model ignores the kernel plan: always scalar refops
@@ -55,12 +56,13 @@ class RefExecutor(_ExecutorBase):
     def run(self, x: np.ndarray) -> ExecResult:
         xq = self._quant_in(x)
         dram = self.arena0.copy()
-        dram[self.input_off:self.input_off + xq.size] = \
-            xq.reshape(-1).view(np.uint8)
+        x_bytes = np.ascontiguousarray(xq.reshape(-1)).view(np.uint8)
+        dram[self.input_off:self.input_off + x_bytes.size] = x_bytes
+        ex = self._exec if self.cfg.dtype == "int8" else self._exec_bf16
         for d in self.descs:
-            self._exec(d, dram)
-        out = dram[self.output_off:self.output_off + self.output_elems].view(np.int8)
-        return ExecResult(output_int8=out.copy(), output=self._dequant_out(out))
+            ex(d, dram)
+        out = dram[self.output_off:self.output_off + self.output_bytes]
+        return self._finish_out(out.copy().view(np.int8))
 
     def _exec(self, d: engine.Descriptor, dram: np.ndarray) -> None:
         base = self.base
@@ -107,6 +109,55 @@ class RefExecutor(_ExecutorBase):
         flat = np.asarray(y).reshape(-1)
         doff = d.dst_addr - base
         dram[doff:doff + flat.size] = flat.view(np.uint8)
+
+    def _exec_bf16(self, d: engine.Descriptor, dram: np.ndarray) -> None:
+        """nv_full replay: mirrors ``VirtualPlatform._execute_bf16`` over the
+        resident arena copy (bf16 surfaces, f32 accumulate, no requant)."""
+        import ml_dtypes
+        base = self.base
+        _, c, h, w = d.src_dims
+        _, k, p, q = d.dst_dims
+
+        def surf(addr, dims):
+            _, c_, h_, w_ = dims
+            off = addr - base
+            return dram[off:off + c_ * h_ * w_ * 2] \
+                .view(ml_dtypes.bfloat16).reshape(c_, h_, w_)
+
+        if d.unit in ("CONV", "FC"):
+            r, s = d.kernel
+            cin_g = c // d.groups if d.unit == "CONV" else c * h * w
+            wt_n = k * cin_g * (r * s if d.unit == "CONV" else 1)
+            wo, bo = d.wt_addr - base, d.bias_addr - base
+            wq = dram[wo:wo + 2 * wt_n].view(ml_dtypes.bfloat16).reshape(k, -1)
+            bias = dram[bo:bo + 4 * k].view(np.float32)
+            x = surf(d.src_addr, d.src_dims)
+            if d.unit == "CONV":
+                y = refops.conv_bf16(x, wq, bias, r, d.stride, d.pad,
+                                     d.groups, d.relu)
+            else:
+                y = refops.fc_bf16(x, wq, bias, d.relu)
+        elif d.unit == "PDP":
+            x = surf(d.src_addr, d.src_dims).astype(np.float32)
+            r, s = d.kernel
+            if d.pool_mode == 1:
+                y = refops.pool_f32(x, r, s, d.stride, d.pad, "max")
+            elif (r, s) == (h, w) and d.pad == 0:
+                y = x.mean(axis=(1, 2), keepdims=True)
+            else:
+                y = refops.pool_f32(x, r, s, d.stride, d.pad, "avg")
+        elif d.unit == "EW":
+            a = surf(d.src_addr, d.src_dims).astype(np.float32)
+            b = surf(d.aux_addr, d.src_dims).astype(np.float32)
+            y = a + b
+            if d.relu:
+                y = np.maximum(y, 0)
+        else:
+            raise ValueError(d.unit)
+        flat = np.ascontiguousarray(
+            np.asarray(y, np.float32).astype(ml_dtypes.bfloat16).reshape(-1))
+        doff = d.dst_addr - base
+        dram[doff:doff + flat.size * 2] = flat.view(np.uint8)
 
 
 @register_backend("ref")

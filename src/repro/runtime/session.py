@@ -142,6 +142,7 @@ class _Net:
     artifacts: Artifacts
     stats: NetStats = dataclasses.field(default_factory=NetStats)
     input_elems: Optional[int] = None    # cached expected input size
+    dtype: str = "int8"                  # engine datapath (capabilities())
 
 
 class Session:
@@ -179,9 +180,12 @@ class Session:
         stats = NetStats(latencies_us=collections.deque(
             maxlen=self._scheduler.config.latency_window))
         dims = getattr(ex, "input_dims", None)
+        # a capabilities() failure must be loud at load time — a silent
+        # int8 fallback would mis-handle a bf16 net's inputs at serve time
+        dtype = ex.capabilities().dtype
         self._nets[name] = _Net(
             name=name, backend=backend, executor=ex, artifacts=artifacts,
-            stats=stats,
+            stats=stats, dtype=dtype,
             input_elems=int(np.prod(dims[1:])) if dims is not None else None)
         return name
 
@@ -252,8 +256,13 @@ class Session:
         the futures of well-formed requests coalesced into the same batch,
         and canonicalise shape/dtype so every lane of a coalesced batch
         stacks cleanly: flat, and either int8 (pre-quantised, passed
-        through) or float32 (quantised by the backend).  The scheduler never
-        coalesces int8 with float32 lanes."""
+        through) or float32 (converted by the backend).  The scheduler never
+        coalesces int8 with float32 lanes.
+
+        A bf16 (nv_full) net has no pre-quantised int8 notion — every input
+        is canonicalised to float32, so all of a bf16 net's lanes share one
+        dtype and its batches form their own buckets (a launch never mixes
+        engine dtypes; each dispatcher serves exactly one net/config)."""
         x = np.asarray(x)
         want = n.input_elems
         if want is not None and (x.dtype == object or x.size != want):
@@ -261,7 +270,7 @@ class Session:
                 f"bad input for network {n.name!r}: got dtype={x.dtype} "
                 f"size={x.size}, expected {want} elements")
         if want is not None:
-            if x.dtype != np.int8:
+            if x.dtype != np.int8 or n.dtype != "int8":
                 x = x.astype(np.float32, copy=False)
             x = x.reshape(-1)
         return x

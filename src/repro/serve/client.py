@@ -97,15 +97,22 @@ class ServeClient:
 
     # -- introspection -------------------------------------------------------
     def nets(self) -> List[Dict]:
-        """One descriptor per resident network (the ``/v1/nets`` body)."""
+        """One descriptor per resident network (the ``/v1/nets`` body).
+
+        Includes the engine metadata a client needs to discover precision
+        *before* submitting: ``config`` (``nv_small`` / ``nv_full``) and
+        ``dtype`` (``int8`` / ``bf16``) alongside the input shape."""
         out = []
         for name in self.session.networks:
             art = self.session.artifacts(name)
             ex = self.session.executor(name)
             dims = getattr(ex, "input_dims", None)
+            cfg = getattr(art, "cfg", None)
             out.append({
                 "name": name,
                 "backend": self.session._resolve(name).backend,
+                "config": getattr(cfg, "name", None),
+                "dtype": getattr(cfg, "dtype", None),
                 "input_shape": list(dims[1:]) if dims is not None else None,
                 "output_elems": getattr(art, "output_elems", None),
                 "queue_depth": self.session.queue_depth(name),

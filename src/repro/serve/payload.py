@@ -13,7 +13,10 @@ Two request formats, negotiated by Content-Type:
 Responses mirror the negotiation: JSON by default (int8 logits are small —
 exact integers survive JSON round-trips, which is what the bit-exactness
 tests assert), or a raw ``.npy`` of ``output_int8`` when the client sends
-``Accept: application/x-npy``.
+``Accept: application/x-npy``.  On a bf16 (``nv_full``) net, ``output_int8``
+carries the raw bf16 byte stream (the engine's output surface, uint8) and
+``output`` the decoded float values — check ``GET /v1/nets`` ``dtype`` to
+know which you are talking to.
 
 Malformed payloads raise ``ValueError`` — the layer above maps it to 400.
 """
@@ -84,11 +87,16 @@ def encode_result(net: str, res, latency_us: float,
         np.save(buf, np.asarray(res.output_int8))
         return buf.getvalue(), NPY_TYPES[0]
     out_i8 = np.asarray(res.output_int8)
+    out = np.asarray(res.output, dtype=np.float64)
     doc = {
         "net": net,
         "output_int8": out_i8.tolist(),
-        "output": np.asarray(res.output, dtype=np.float64).tolist(),
-        "argmax": int(np.argmax(out_i8)),
+        "output": out.tolist(),
+        # argmax over the float output: identical to argmax(output_int8) on
+        # int8 nets (dequant is a positive per-tensor scale) and the only
+        # meaningful choice on bf16 nets, where output_int8 carries the raw
+        # bf16 byte stream
+        "argmax": int(np.argmax(out)),
         "latency_us": round(float(latency_us), 1),
     }
     return json.dumps(doc).encode("utf-8"), JSON_TYPE
