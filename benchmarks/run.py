@@ -1,7 +1,7 @@
 """Benchmark harness: one module per paper table.  Prints name,us_per_call,derived.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke] [--table N]
-                                            [--out DIR]
+                                            [--out DIR] [--model SPEC]...
 
 Tables:
   1  storage / resource accounting of the bare-metal artifacts   (paper Table I)
@@ -35,6 +35,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced-size run of every table + BENCH_*.json files")
     ap.add_argument("--table", type=int, default=0, help="run one table only")
+    ap.add_argument("--model", action="append", default=[], metavar="SPEC",
+                    help="extra net for the storage table: builder name or "
+                         "ONNX/JSON model file (repro.frontend; repeatable)")
     ap.add_argument("--out", default=".",
                     help="directory for --smoke JSON output")
     args = ap.parse_args()
@@ -54,7 +57,10 @@ def main() -> None:
     ok = True
     for num, mod in picked.items():
         try:
-            rows = mod.run(fast=fast)
+            kw = {"fast": fast}
+            if num == 1 and args.model:
+                kw["extra_models"] = args.model
+            rows = mod.run(**kw)
             for row in rows:
                 print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
             if args.smoke:

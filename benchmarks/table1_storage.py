@@ -14,32 +14,41 @@ claim is that bare-metal deployment needs only (program memory + weight image)
 
 from __future__ import annotations
 
+import pathlib
 import time
 
 import numpy as np
 
 from repro.core import graph
 from repro.core.pipeline import CompilerPipeline
+from repro.frontend.resolve import resolve_net
 
 LINUX_STACK_BASE_MB = 48.0      # minimal kernel+rootfs+driver the refs require
 
 MODELS = ["lenet5", "resnet18", "resnet50"]
+# an imported (no-builder) net rides along so the storage table always
+# exercises the frontend path too; --model on benchmarks.run adds more
+IMPORTED = [str(pathlib.Path(__file__).resolve().parent.parent
+                / "examples" / "models" / "tinynet.json")]
 
 
-def run(fast: bool = False):
+def run(fast: bool = False, extra_models=()):
     rows = []
-    models = MODELS[:2] if fast else MODELS
+    models = (MODELS[:2] if fast else MODELS) + IMPORTED + list(extra_models)
     for name in models:
-        g = graph.BUILDERS[name]()
+        g, params = resolve_net(name)
+        label = g.name if name in graph.BUILDERS \
+            else f"{g.name}(imported)"
         t0 = time.perf_counter()
-        art = CompilerPipeline(g, use_cache=False).run()  # time a real compile
+        art = CompilerPipeline(g, params=params,
+                               use_cache=False).run()  # time a real compile
         compile_us = (time.perf_counter() - t0) * 1e6
         rep = art.storage_report()
         baremetal_kb = (rep["config_file_bytes"] + rep["program_binary_bytes"]) / 1024
         weights_mb = rep["weight_image_bytes"] / 1e6
         linux_mb = LINUX_STACK_BASE_MB + weights_mb + rep["program_binary_bytes"] / 1e6
         rows.append({
-            "name": f"table1_storage/{name}",
+            "name": f"table1_storage/{label}",
             "us_per_call": compile_us,
             "derived": (f"cfg_kb={rep['config_file_bytes']/1024:.1f} "
                         f"prog_kb={rep['program_binary_bytes']/1024:.1f} "

@@ -1,0 +1,172 @@
+"""Regenerate the committed model fixtures in this directory.
+
+    PYTHONPATH=src python examples/models/gen_fixtures.py
+
+Produces:
+  lenet5.onnx   LeNet-5 as a spec-conformant ONNX ModelProto (Conv/Relu/
+                MaxPool/Flatten/Gemm), weights = ``graph.lenet5()``'s
+                ``init_params(0)`` — so the golden import test can assert
+                structural AND parameter equality against the hand-written
+                builder.
+  lenet5.json   the same net in the declarative repro-net-v1 format.
+  tinynet.json  a small conv-bn-relu-pool-fc net with NO NetGraph builder —
+                the end-to-end proof that unseen models compile and serve.
+
+Encoded with ``repro.frontend.protowire`` (no onnx install needed); the
+output is standard ONNX — ``onnx.load`` reads it, which the optional
+cross-validation test in tests/test_frontend.py checks.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.frontend.json_importer import FORMAT_ID
+from repro.frontend.protowire import (enc_bytes, enc_float, enc_int,
+                                      enc_packed_ints, enc_str)
+
+HERE = pathlib.Path(__file__).parent
+
+# AttributeProto.AttributeType enum values (onnx.proto)
+_AT_FLOAT, _AT_INT, _AT_INTS = 1, 2, 7
+
+
+def _attr(name: str, value) -> bytes:
+    body = enc_str(1, name)
+    if isinstance(value, float):
+        body += enc_float(2, value) + enc_int(20, _AT_FLOAT)
+    elif isinstance(value, int):
+        body += enc_int(3, value) + enc_int(20, _AT_INT)
+    else:                                  # list of ints
+        body += enc_packed_ints(8, list(value)) + enc_int(20, _AT_INTS)
+    return body
+
+
+def _node(op: str, name: str, inputs, outputs, **attrs) -> bytes:
+    body = b"".join(enc_str(1, t) for t in inputs)
+    body += b"".join(enc_str(2, t) for t in outputs)
+    body += enc_str(3, name) + enc_str(4, op)
+    body += b"".join(enc_bytes(5, _attr(k, v)) for k, v in attrs.items())
+    return body
+
+
+def _tensor(name: str, a: np.ndarray) -> bytes:
+    a = np.ascontiguousarray(a, np.float32)
+    return (enc_packed_ints(1, list(a.shape)) + enc_int(2, 1)  # FLOAT
+            + enc_str(8, name) + enc_bytes(9, a.tobytes()))
+
+
+def _value_info(name: str, dims) -> bytes:
+    shape = b"".join(enc_bytes(1, enc_int(1, int(d))) for d in dims)
+    tensor_type = enc_int(1, 1) + enc_bytes(2, shape)          # elem FLOAT
+    return enc_str(1, name) + enc_bytes(2, enc_bytes(1, tensor_type))
+
+
+def _model(graph: bytes) -> bytes:
+    opset = enc_str(1, "") + enc_int(2, 13)
+    return (enc_int(1, 8)                                      # ir_version
+            + enc_str(2, "repro.frontend.fixtures")            # producer
+            + enc_bytes(7, graph) + enc_bytes(8, opset))
+
+
+def lenet5_onnx() -> bytes:
+    g = G.lenet5()
+    params = g.init_params(0)
+    body = b""
+    body += enc_str(2, "lenet5")
+    for lname in ("conv1", "conv2", "fc1", "fc2", "fc3"):
+        body += enc_bytes(5, _tensor(f"{lname}.w", params[lname]["w"]))
+        body += enc_bytes(5, _tensor(f"{lname}.b", params[lname]["b"]))
+    nodes = [
+        _node("Conv", "conv1", ["data", "conv1.w", "conv1.b"], ["conv1.y"],
+              kernel_shape=[5, 5], strides=[1, 1], pads=[2, 2, 2, 2]),
+        _node("Relu", "relu1", ["conv1.y"], ["conv1.out"]),
+        _node("MaxPool", "pool1", ["conv1.out"], ["pool1.out"],
+              kernel_shape=[2, 2], strides=[2, 2]),
+        _node("Conv", "conv2", ["pool1.out", "conv2.w", "conv2.b"],
+              ["conv2.y"], kernel_shape=[5, 5], strides=[1, 1],
+              pads=[0, 0, 0, 0]),
+        _node("Relu", "relu2", ["conv2.y"], ["conv2.out"]),
+        _node("MaxPool", "pool2", ["conv2.out"], ["pool2.out"],
+              kernel_shape=[2, 2], strides=[2, 2]),
+        _node("Flatten", "flat", ["pool2.out"], ["flat.out"], axis=1),
+        _node("Gemm", "fc1", ["flat.out", "fc1.w", "fc1.b"], ["fc1.y"],
+              alpha=1.0, beta=1.0, transB=1),
+        _node("Relu", "relu3", ["fc1.y"], ["fc1.out"]),
+        _node("Gemm", "fc2", ["fc1.out", "fc2.w", "fc2.b"], ["fc2.y"],
+              alpha=1.0, beta=1.0, transB=1),
+        _node("Relu", "relu4", ["fc2.y"], ["fc2.out"]),
+        _node("Gemm", "fc3", ["fc2.out", "fc3.w", "fc3.b"], ["fc3.out"],
+              alpha=1.0, beta=1.0, transB=1),
+    ]
+    body += b"".join(enc_bytes(1, n) for n in nodes)
+    body += enc_bytes(11, _value_info("data", (1,) + g.input_shape))
+    body += enc_bytes(12, _value_info("fc3.out", (1, 10)))
+    return _model(body)
+
+
+def lenet5_json() -> dict:
+    return {
+        "format": FORMAT_ID,
+        "name": "lenet5",
+        "input_shape": [1, 28, 28],
+        "seed": 0,
+        "layers": [
+            {"name": "conv1", "type": "conv", "inputs": ["data"],
+             "out_channels": 6, "kernel": 5, "pad": 2, "relu": True},
+            {"name": "pool1", "type": "pool", "inputs": ["conv1"],
+             "kernel": 2, "stride": 2, "mode": "max"},
+            {"name": "conv2", "type": "conv", "inputs": ["pool1"],
+             "out_channels": 16, "kernel": 5, "relu": True},
+            {"name": "pool2", "type": "pool", "inputs": ["conv2"],
+             "kernel": 2, "stride": 2, "mode": "max"},
+            {"name": "fc1", "type": "fc", "inputs": ["pool2"],
+             "out_channels": 120, "relu": True},
+            {"name": "fc2", "type": "fc", "inputs": ["fc1"],
+             "out_channels": 84, "relu": True},
+            {"name": "fc3", "type": "fc", "inputs": ["fc2"],
+             "out_channels": 10},
+        ],
+    }
+
+
+def tinynet_json() -> dict:
+    """A net with no BUILDERS entry: only importable, never hand-built."""
+    return {
+        "format": FORMAT_ID,
+        "name": "tinynet",
+        "input_shape": [3, 16, 16],
+        "seed": 7,
+        "layers": [
+            {"name": "conv1", "type": "conv", "inputs": ["data"],
+             "out_channels": 8, "kernel": 3, "pad": 1},
+            {"name": "bn1", "type": "batchnorm", "inputs": ["conv1"]},
+            {"name": "relu1", "type": "relu", "inputs": ["bn1"]},
+            {"name": "pool1", "type": "pool", "inputs": ["relu1"],
+             "kernel": 2, "stride": 2, "mode": "max"},
+            {"name": "conv2", "type": "conv", "inputs": ["pool1"],
+             "out_channels": 16, "kernel": 3, "pad": 1, "relu": True},
+            {"name": "pool2", "type": "pool", "inputs": ["conv2"],
+             "mode": "gap"},
+            {"name": "fc1", "type": "fc", "inputs": ["pool2"],
+             "out_channels": 10},
+        ],
+    }
+
+
+def main() -> None:
+    (HERE / "lenet5.onnx").write_bytes(lenet5_onnx())
+    (HERE / "lenet5.json").write_text(json.dumps(lenet5_json(), indent=2)
+                                      + "\n")
+    (HERE / "tinynet.json").write_text(json.dumps(tinynet_json(), indent=2)
+                                       + "\n")
+    for f in ("lenet5.onnx", "lenet5.json", "tinynet.json"):
+        print(f"wrote {HERE / f} ({(HERE / f).stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

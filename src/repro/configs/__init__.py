@@ -4,6 +4,11 @@ Ten assigned architectures (full + reduced smoke variants), plus the paper's
 own CNNs (LeNet-5 / ResNet-18 / ResNet-50 / AlexNet / MobileNet / GoogLeNet)
 which live in ``repro.core.graph.BUILDERS`` (they run on the engine/trace
 substrate, not the LM substrate).
+
+CNNs *without* a hand-written builder enter through ``repro.frontend``
+(ONNX / repro-net-v1 JSON importers + pass pipeline);
+``repro.frontend.resolve.resolve_net`` accepts either a ``BUILDERS`` name or
+a model-file path, so CLI surfaces treat both uniformly.
 """
 
 from __future__ import annotations

@@ -42,11 +42,19 @@ class Layer:
     out_shape: Optional[tuple] = None
 
 
+LAYER_TYPES = ("input", "conv", "fc", "pool", "add", "concat")
+POOL_MODES = ("max", "avg", "gap")
+
+
 @dataclasses.dataclass
 class NetGraph:
     name: str
     input_shape: tuple             # (C, H, W)
     layers: List[Layer] = dataclasses.field(default_factory=list)
+    # sha256 of the source file for imported nets (see ``repro.frontend``);
+    # "" for hand-built graphs.  Mixed into compiler cache keys so two
+    # imports that share a graph name never collide.
+    source_digest: str = ""
 
     def layer(self, **kw) -> str:
         lyr = Layer(**kw)
@@ -60,6 +68,113 @@ class NetGraph:
     @property
     def output(self) -> str:
         return self.layers[-1].name
+
+    # -- structural validation ----------------------------------------------
+    def validate(self) -> "NetGraph":
+        """Reject malformed graphs with a descriptive ValueError.
+
+        Checks what the downstream stages (arena planner, loadable builder,
+        tracegen) silently assume: exactly one input layer named ``data``,
+        unique layer names, no dangling/forward references, known layer
+        types, and per-layer shape consistency (windows that fit, matching
+        ``add`` operands, concat-able spatials).  Called at
+        ``CompilerPipeline`` entry so hand-built and imported graphs fail
+        the same way, before any compilation work.
+        """
+        def err(msg: str):
+            raise ValueError(f"invalid NetGraph {self.name!r}: {msg}")
+
+        if not self.layers:
+            err("graph has no layers")
+        if len(self.input_shape) != 3 or any(d <= 0 for d in self.input_shape):
+            err(f"input_shape must be a positive (C, H, W), "
+                f"got {self.input_shape}")
+        seen: Dict[str, Layer] = {}
+        for l in self.layers:
+            if l.name in seen:
+                err(f"duplicate layer name {l.name!r}")
+            if l.type not in LAYER_TYPES:
+                err(f"layer {l.name!r} has unknown type {l.type!r} "
+                    f"(expected one of {', '.join(LAYER_TYPES)})")
+            for src in l.inputs:
+                if src not in seen:
+                    err(f"layer {l.name!r} reads {src!r}, which is not "
+                        f"produced by any earlier layer (dangling or "
+                        f"forward reference)")
+            seen[l.name] = l
+        inputs = [l for l in self.layers if l.type == "input"]
+        if len(inputs) != 1 or inputs[0].name != "data":
+            err(f"graph must have exactly one input layer named 'data' "
+                f"(the loadable/arena input contract), got "
+                f"{[l.name for l in inputs]}")
+        if inputs[0].inputs:
+            err("the input layer must not read other layers")
+
+        # per-layer shape consistency, via a local propagation (does not
+        # mutate out_shape — infer_shapes() owns that)
+        shapes: Dict[str, tuple] = {}
+        for l in self.layers:
+            if l.type == "input":
+                shapes[l.name] = self.input_shape
+                continue
+            if not l.inputs:
+                err(f"layer {l.name!r} ({l.type}) has no inputs")
+            if l.type in ("conv", "fc") and l.out_channels <= 0:
+                err(f"layer {l.name!r} ({l.type}) needs out_channels > 0")
+            if l.type == "conv":
+                c, h, w = shapes[l.inputs[0]]
+                if l.kernel <= 0 or l.stride <= 0 or l.pad < 0:
+                    err(f"conv {l.name!r} has kernel={l.kernel} "
+                        f"stride={l.stride} pad={l.pad}")
+                if l.groups <= 0 or c % l.groups or l.out_channels % l.groups:
+                    err(f"conv {l.name!r}: groups={l.groups} must divide "
+                        f"in_channels={c} and out_channels={l.out_channels}")
+                if h + 2 * l.pad < l.kernel or w + 2 * l.pad < l.kernel:
+                    err(f"conv {l.name!r}: {l.kernel}x{l.kernel} window "
+                        f"does not fit {c}x{h}x{w} input with pad={l.pad}")
+                shapes[l.name] = (l.out_channels,
+                                  (h + 2 * l.pad - l.kernel) // l.stride + 1,
+                                  (w + 2 * l.pad - l.kernel) // l.stride + 1)
+            elif l.type == "fc":
+                shapes[l.name] = (l.out_channels, 1, 1)
+            elif l.type == "pool":
+                c, h, w = shapes[l.inputs[0]]
+                if l.pool_mode not in POOL_MODES:
+                    err(f"pool {l.name!r} has pool_mode={l.pool_mode!r} "
+                        f"(expected one of {', '.join(POOL_MODES)})")
+                if l.pool_mode == "gap":
+                    shapes[l.name] = (c, 1, 1)
+                else:
+                    if l.kernel <= 0 or l.stride <= 0 or l.pad < 0 or \
+                            h + 2 * l.pad < l.kernel or \
+                            w + 2 * l.pad < l.kernel:
+                        err(f"pool {l.name!r}: {l.kernel}x{l.kernel}/"
+                            f"{l.stride} window (pad={l.pad}) does not fit "
+                            f"{c}x{h}x{w} input")
+                    shapes[l.name] = (c,
+                                      (h + 2 * l.pad - l.kernel) // l.stride + 1,
+                                      (w + 2 * l.pad - l.kernel) // l.stride + 1)
+            elif l.type == "add":
+                ops = [shapes[i] for i in l.inputs]
+                if len(ops) != 2:
+                    err(f"add {l.name!r} needs exactly 2 inputs, "
+                        f"got {len(ops)}")
+                if ops[0] != ops[1]:
+                    err(f"add {l.name!r} operand shapes differ: "
+                        f"{l.inputs[0]}={ops[0]} vs {l.inputs[1]}={ops[1]}")
+                shapes[l.name] = ops[0]
+            else:                          # concat
+                ops = [shapes[i] for i in l.inputs]
+                if len(ops) < 2:
+                    err(f"concat {l.name!r} needs >= 2 inputs")
+                if any(o[1:] != ops[0][1:] for o in ops):
+                    err(f"concat {l.name!r} spatial dims differ: "
+                        f"{dict(zip(l.inputs, ops))}")
+                shapes[l.name] = (sum(o[0] for o in ops),) + ops[0][1:]
+            if any(d <= 0 for d in shapes[l.name]):
+                err(f"layer {l.name!r} ({l.type}) infers non-positive "
+                    f"output shape {shapes[l.name]}")
+        return self
 
     # -- shape inference ----------------------------------------------------
     def infer_shapes(self) -> "NetGraph":

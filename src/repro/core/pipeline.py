@@ -284,8 +284,10 @@ def _hash_update_array(h, a: Optional[np.ndarray]) -> None:
 # Mixed into every cache key.  Bump whenever a stage's implementation changes
 # semantics, so the *persistent* disk tier never serves stage outputs pickled
 # by an older build (the in-memory tier dies with the process; disk doesn't).
-CACHE_SCHEMA_VERSION = 4   # 4: kernel_plan entries gained a dtype field
+CACHE_SCHEMA_VERSION = 5   # 4: kernel_plan entries gained a dtype field
                            #    (bf16/nv_full kernel family)
+                           # 5: fingerprint covers NetGraph.source_digest
+                           #    (imported nets, repro.frontend)
 
 
 def _fingerprint(graph: NetGraph, params, calib_samples, cfg, sample_input,
@@ -296,6 +298,7 @@ def _fingerprint(graph: NetGraph, params, calib_samples, cfg, sample_input,
     if calibration is not None:
         h.update(repr(sorted(calibration.scales.items())).encode())
     h.update(graph.name.encode())
+    h.update(graph.source_digest.encode())
     h.update(str(graph.input_shape).encode())
     for l in graph.layers:
         h.update(repr(dataclasses.astuple(l)).encode())
@@ -376,7 +379,9 @@ class CompilerPipeline:
                  seed: int = 0, use_cache: bool = True,
                  calibration=None, cache_dir=None,
                  cache_dir_max_bytes: int = DEFAULT_CACHE_DIR_MAX_BYTES):
-        self.graph = graph
+        # fail malformed graphs (hand-built or imported) here, with a
+        # descriptive error, not stages deep in the toolflow
+        self.graph = graph.validate()
         self.cfg = cfg
         self.use_cache = use_cache
         # opt-in disk tier: persists stage outputs across processes

@@ -1,0 +1,145 @@
+"""repro.frontend — import external model formats into the compiler.
+
+The missing quadrant of the toolflow: every net used to enter as a
+hand-written ``NetGraph`` builder, so the system could only compile models
+someone had already transliterated into Python.  This package makes *unseen*
+models first-class:
+
+    importer (onnx | json)          per-format parser -> FrontendGraph
+        |
+    pass pipeline                   canonicalize, shape inference, BN/scale
+        |                           folding, ReLU fusion, layout
+        v                           legalization, unsupported-op partitioner
+    lower                           FrontendGraph -> NetGraph + params
+        |
+    CompilerPipeline                unchanged: calibrate -> loadable -> VP
+                                    -> trace/weights/asm
+
+Entry point::
+
+    from repro import frontend
+    m = frontend.load("model.onnx")            # format sniffed; or format=
+    arts = CompilerPipeline(m.graph, params=m.params).run()
+
+Importers are registered by format name and implement the ``Importer``
+protocol (``format``, ``suffixes``, ``parse(data, name) -> FrontendGraph``);
+``register_importer`` lets external code plug in new formats.  Everything a
+format importer produces funnels through the *same* pass pipeline and
+lowering, so a new format costs one parser, not a new compiler.
+
+Unsupported models fail at import time with :class:`UnsupportedOpError`
+naming the op, node and supported set — never a silent fallback, never an
+error deep inside tracegen.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import pathlib
+from typing import Dict, Iterable, Optional, Protocol, Tuple, Union
+
+import numpy as np
+
+from repro.core.graph import NetGraph
+from repro.frontend.ir import (FrontendError, FrontendGraph, FrontendNode,
+                               UnsupportedOpError)
+from repro.frontend.json_importer import JsonImporter
+from repro.frontend.lower import lower
+from repro.frontend.onnx_importer import OnnxImporter
+from repro.frontend.passes import (DEFAULT_PIPELINE, LOWERABLE_OPS, PASSES,
+                                   run_pass, run_pipeline)
+
+
+class Importer(Protocol):
+    """What a format plugin implements (see ``register_importer``)."""
+    format: str                        # registry key, e.g. "onnx"
+    suffixes: Tuple[str, ...]          # file suffixes this format sniffs to
+
+    def parse(self, data: bytes, name: str = "") -> FrontendGraph: ...
+
+
+IMPORTERS: Dict[str, Importer] = {}
+
+
+def register_importer(importer: Importer) -> Importer:
+    """Register (or replace) the importer for ``importer.format``."""
+    IMPORTERS[importer.format] = importer
+    return importer
+
+
+register_importer(OnnxImporter())
+register_importer(JsonImporter())
+
+
+@dataclasses.dataclass
+class ImportedModel:
+    """``load``'s product: everything CompilerPipeline and serving need.
+
+    ``graph``/``params`` drop straight into
+    ``CompilerPipeline(graph, params=params)``; ``frontend_graph`` is the
+    post-pipeline IR kept for inspection (shapes, folded initializers).
+    """
+    graph: NetGraph
+    params: Dict[str, Dict[str, np.ndarray]]
+    frontend_graph: FrontendGraph
+    source_format: str
+    source_digest: str
+    source_path: str = ""
+
+
+def _sniff(path: pathlib.Path, data: bytes) -> str:
+    """Pick an importer format for a file (suffix first, then content)."""
+    for imp in IMPORTERS.values():
+        if path.suffix.lower() in imp.suffixes:
+            return imp.format
+    head = data.lstrip()[:1]
+    if head in (b"{", b"["):
+        return "json"
+    if data[:1] == b"\x08":            # ModelProto field 1 (ir_version) varint
+        return "onnx"
+    raise FrontendError(
+        f"cannot sniff model format of {path.name!r} (suffix "
+        f"{path.suffix!r}); pass format= explicitly — registered formats: "
+        f"{', '.join(IMPORTERS)}")
+
+
+def parse(path: Union[str, pathlib.Path], format: Optional[str] = None
+          ) -> FrontendGraph:
+    """Parse a model file to a raw (pre-pass) :class:`FrontendGraph`."""
+    path = pathlib.Path(path)
+    if not path.is_file():
+        raise FrontendError(f"model file not found: {path}")
+    data = path.read_bytes()
+    fmt = format or _sniff(path, data)
+    if fmt not in IMPORTERS:
+        raise FrontendError(f"no importer registered for format {fmt!r}; "
+                            f"registered formats: {', '.join(IMPORTERS)}")
+    g = IMPORTERS[fmt].parse(data, name=path.stem)
+    g.source_format = fmt
+    g.source_digest = hashlib.sha256(data).hexdigest()
+    return g
+
+
+def load(path: Union[str, pathlib.Path], format: Optional[str] = None,
+         passes: Optional[Iterable[str]] = None) -> ImportedModel:
+    """Import a model file end-to-end: parse -> pass pipeline -> lower.
+
+    ``format`` forces an importer (default: sniff by suffix, then content);
+    ``passes`` overrides the default pass list (mostly for tests — the
+    default pipeline is what serving and the CLI run).
+    """
+    fg = parse(path, format=format)
+    fg = run_pipeline(fg, passes)
+    graph, params = lower(fg)
+    return ImportedModel(graph=graph, params=params, frontend_graph=fg,
+                         source_format=fg.source_format,
+                         source_digest=fg.source_digest,
+                         source_path=str(path))
+
+
+__all__ = ["Importer", "ImportedModel", "IMPORTERS", "register_importer",
+           "parse", "load", "FrontendGraph", "FrontendNode", "FrontendError",
+           "UnsupportedOpError", "OnnxImporter", "JsonImporter", "lower",
+           "PASSES", "DEFAULT_PIPELINE", "LOWERABLE_OPS", "run_pass",
+           "run_pipeline"]

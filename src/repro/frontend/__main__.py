@@ -1,0 +1,101 @@
+"""CLI: import a model file, inspect it, compile it to a servable bundle.
+
+    # inspect: importer + pass pipeline + lowering, print the lowered net
+    PYTHONPATH=src python -m repro.frontend examples/models/tinynet.json
+
+    # compile to a saved Artifacts bundle (servable by `python -m repro.serve`)
+    PYTHONPATH=src python -m repro.frontend model.onnx --compile-to bundle/
+
+    # also run the compiled net on the bare-metal executor and check it
+    # matches the VP oracle bit-exactly
+    PYTHONPATH=src python -m repro.frontend model.onnx --compile-to b/ --verify
+
+Exit codes: 0 ok, 1 import/compile/verify failure (UnsupportedOpError and
+friends print their descriptive message, not a traceback).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro import frontend
+from repro.core.pipeline import CompilerPipeline
+from repro.frontend.ir import FrontendError
+
+
+def _summary(m: frontend.ImportedModel) -> str:
+    g = m.graph
+    lines = [f"{g.name}: {m.source_format} import, "
+             f"digest {m.source_digest[:12]}, input {g.input_shape}"]
+    for l in g.layers:
+        extra = ""
+        if l.type == "conv":
+            extra = (f" k{l.kernel}s{l.stride}p{l.pad} -> {l.out_channels}ch"
+                     + (f" g{l.groups}" if l.groups > 1 else ""))
+        elif l.type == "fc":
+            extra = f" -> {l.out_channels}"
+        elif l.type == "pool":
+            extra = f" {l.pool_mode}" + \
+                (f" k{l.kernel}s{l.stride}" if l.pool_mode != "gap" else "")
+        lines.append(f"  {l.name:<16} {l.type}{extra}"
+                     f"{' +relu' if l.relu else ''}  out={l.out_shape}")
+    n_params = sum(int(a.size) for p in m.params.values()
+                   for a in p.values())
+    lines.append(f"  {len(g.layers)} layers, {n_params} parameters")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.frontend",
+        description="import an ONNX / repro-net-v1 JSON model into the "
+                    "compiler toolflow")
+    ap.add_argument("model", help="model file (.onnx / .json)")
+    ap.add_argument("--format", choices=sorted(frontend.IMPORTERS),
+                    help="force an importer (default: sniff)")
+    ap.add_argument("--compile-to", metavar="DIR",
+                    help="compile and save an Artifacts bundle to DIR")
+    ap.add_argument("--verify", action="store_true",
+                    help="after compiling, run the bare-metal executor and "
+                         "check bit-exact parity with the VP oracle")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for calibration samples (default 0)")
+    args = ap.parse_args(argv)
+
+    try:
+        m = frontend.load(args.model, format=args.format)
+    except FrontendError as e:
+        print(f"import failed: {e}", file=sys.stderr)
+        return 1
+    print(_summary(m))
+
+    if not (args.compile_to or args.verify):
+        return 0
+    pipe = CompilerPipeline(m.graph, params=m.params, seed=args.seed)
+    art = pipe.run()
+    print(f"compiled: {len(art.loadable.descriptors)} descriptors, "
+          f"{art.cost.ms_at_clock:.2f} ms @100MHz (cost model)")
+    if args.compile_to:
+        path = art.save(args.compile_to)
+        print(f"saved bundle -> {path}")
+    if args.verify:
+        from repro.core.vp import VirtualPlatform
+        from repro.runtime import create_executor
+        rng = np.random.default_rng(args.seed + 17)
+        x = rng.normal(0, 1, m.graph.input_shape).astype(np.float32)
+        vp = VirtualPlatform(art.loadable).run(x)
+        bm = create_executor("baremetal", art).run(x)
+        if not np.array_equal(vp.output_int8, bm.output_int8):
+            print("verify FAILED: bare-metal executor diverges from VP "
+                  "oracle", file=sys.stderr)
+            return 1
+        print(f"verify ok: bare-metal == VP oracle "
+              f"({vp.output_int8.size} int8 outputs bit-exact)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,138 @@
+"""Format-independent frontend IR: what every importer parses *into*.
+
+``FrontendGraph`` is the one common op graph all importers target (the
+ngraph multi-frontend shape: caffe2/tf/onnx each parse to a single IR, then
+shared passes lower it).  It is deliberately closer to ONNX than to the
+engine: nodes are SSA (each tensor has exactly one producer), parameters are
+``initializers`` (named constant arrays), and ops keep their frontend
+attributes.  The pass pipeline (``repro.frontend.passes``) normalises this
+graph — folding BatchNorm, fusing activations, legalising layout — until it
+contains only ops ``repro.frontend.lower`` can map onto
+``repro.core.graph.NetGraph`` layers.
+
+Canonical op vocabulary (ONNX spelling; the JSON importer emits the same):
+
+    Conv Gemm MatMul Relu MaxPool AveragePool GlobalAveragePool Add Mul Div
+    Flatten Reshape BatchNormalization Concat Identity Dropout Constant
+    Softmax
+
+Only the subset in ``lower.LOWERABLE_OPS`` survives to lowering; everything
+else must be eliminated by a pass or rejected by the partitioner with an
+:class:`UnsupportedOpError` — never a silent fallback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+
+class FrontendError(ValueError):
+    """Base class for importer/pass failures (malformed model, bad shapes)."""
+
+
+class UnsupportedOpError(FrontendError):
+    """An op the engine cannot execute survived the pass pipeline.
+
+    Raised at *import time* (by the partitioner, or eagerly by a pass/
+    importer that can already prove an op can never lower), naming the op,
+    the node carrying it, and the supported set — so an unseen model fails
+    with an actionable message instead of deep inside tracegen/VP.
+    """
+
+    def __init__(self, op: str, node: str, supported: Iterable[str],
+                 detail: str = ""):
+        self.op = op
+        self.node = node
+        self.supported = tuple(sorted(supported))
+        msg = (f"unsupported op {op!r} (node {node!r})"
+               f"{': ' + detail if detail else ''}; "
+               f"supported ops after the pass pipeline: "
+               f"{', '.join(self.supported)}")
+        super().__init__(msg)
+
+
+@dataclasses.dataclass
+class FrontendNode:
+    """One op application.  All supported ops are single-output."""
+    name: str
+    op: str
+    inputs: List[str]                  # tensor names (activations or initializers)
+    outputs: List[str]
+    attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def output(self) -> str:
+        if len(self.outputs) != 1:
+            raise FrontendError(
+                f"node {self.name!r} ({self.op}) has {len(self.outputs)} "
+                f"outputs; only single-output nodes are supported")
+        return self.outputs[0]
+
+
+@dataclasses.dataclass
+class FrontendGraph:
+    """SSA op graph + initializers, the importers' common product.
+
+    ``inputs`` holds the graph's activation inputs as ``(name, (C, H, W))``
+    — the engine is single-image, so the importer strips/validates the ONNX
+    batch dimension before building this.  ``shapes`` is filled by the
+    shape-inference pass (tensor name -> tuple; 3-tuples are (C, H, W)
+    feature maps, 1-tuples are flattened vectors).
+    """
+    name: str
+    nodes: List[FrontendNode] = dataclasses.field(default_factory=list)
+    initializers: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    inputs: List[Tuple[str, Tuple[int, ...]]] = dataclasses.field(default_factory=list)
+    outputs: List[str] = dataclasses.field(default_factory=list)
+    source_format: str = ""
+    source_digest: str = ""            # sha256 of the imported file's bytes
+    shapes: Dict[str, Tuple[int, ...]] = dataclasses.field(default_factory=dict)
+
+    # -- topology helpers ----------------------------------------------------
+    def producer(self, tensor: str) -> Optional[FrontendNode]:
+        for n in self.nodes:
+            if tensor in n.outputs:
+                return n
+        return None
+
+    def consumers(self, tensor: str) -> List[FrontendNode]:
+        return [n for n in self.nodes if tensor in n.inputs]
+
+    def is_initializer(self, tensor: str) -> bool:
+        return tensor in self.initializers
+
+    def is_graph_input(self, tensor: str) -> bool:
+        return any(tensor == name for name, _ in self.inputs)
+
+    def remove_node(self, node: FrontendNode) -> None:
+        self.nodes.remove(node)
+
+    def node_label(self, node: FrontendNode) -> str:
+        """Stable human-readable handle (ONNX node names may be empty)."""
+        return node.name or (node.outputs[0] if node.outputs else "<unnamed>")
+
+    # -- structural validation ----------------------------------------------
+    def check_ssa(self) -> "FrontendGraph":
+        """Every tensor defined exactly once, before use; outputs resolved."""
+        defined = {name for name, _ in self.inputs} | set(self.initializers)
+        for n in self.nodes:
+            for t in n.inputs:
+                if t and t not in defined:
+                    raise FrontendError(
+                        f"{self.name}: node {self.node_label(n)!r} ({n.op}) "
+                        f"reads undefined tensor {t!r} (dangling reference "
+                        f"or use-before-def)")
+            for t in n.outputs:
+                if t in defined:
+                    raise FrontendError(
+                        f"{self.name}: tensor {t!r} defined more than once "
+                        f"(node {self.node_label(n)!r})")
+                defined.add(t)
+        for t in self.outputs:
+            if t not in defined:
+                raise FrontendError(
+                    f"{self.name}: graph output {t!r} is never produced")
+        return self

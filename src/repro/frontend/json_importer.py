@@ -1,0 +1,293 @@
+"""Declarative JSON importer: layer-list capture -> :class:`FrontendGraph`.
+
+The ``repro-net-v1`` format mirrors the hand-written ``NetGraph`` builders —
+a topologically ordered layer list — so tests and users can author nets
+without touching protobuf (and without writing Python).  It still parses
+into the *same* ``FrontendGraph`` the ONNX importer produces and runs the
+same pass pipeline, so BatchNorm folding, ReLU fusion and the partitioner
+are exercised identically on both paths.
+
+    {
+      "format": "repro-net-v1",
+      "name": "tinynet",
+      "input_shape": [3, 16, 16],
+      "seed": 7,                              // He-init any missing weights
+      "layers": [
+        {"name": "conv1", "type": "conv", "inputs": ["data"],
+         "out_channels": 8, "kernel": 3, "stride": 1, "pad": 1,
+         "relu": true},
+        {"name": "bn1",   "type": "batchnorm", "inputs": ["conv1"]},
+        {"name": "pool1", "type": "pool", "inputs": ["bn1"],
+         "kernel": 2, "stride": 2, "mode": "max"},
+        {"name": "fc1",   "type": "fc", "inputs": ["pool1"],
+         "out_channels": 10}
+      ],
+      "weights": {                            // optional, else seeded
+        "conv1": {"w": {"shape": [8,3,3,3], "dtype": "float32",
+                        "b64": "..."}}
+      }
+    }
+
+Layer types: ``conv fc pool add concat batchnorm relu flatten`` (``relu``
+may also ride as a flag on conv/fc/add, exactly like the builders — the
+importer then emits a separate Relu node for the fusion pass to fold back).
+Weights are base64-encoded little-endian arrays; anything absent is
+He-initialised from ``seed`` + the layer name, so a fixture can be a few
+hundred bytes of JSON yet fully determine the compiled bundle.
+"""
+
+from __future__ import annotations
+
+import base64
+import hashlib
+import json
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from repro.frontend.ir import (FrontendError, FrontendGraph, FrontendNode,
+                               UnsupportedOpError)
+
+FORMAT_ID = "repro-net-v1"
+
+_POOL_OPS = {"max": "MaxPool", "avg": "AveragePool", "gap": "GlobalAveragePool"}
+# declarative layer type -> canonical op (conv/fc/pool handled specially)
+_SIMPLE_OPS = {"add": "Add", "concat": "Concat",
+               "batchnorm": "BatchNormalization", "relu": "Relu",
+               "flatten": "Flatten"}
+LAYER_TYPES = ("conv", "fc", "pool", "add", "concat", "batchnorm", "relu",
+               "flatten")
+
+
+def _b64_array(spec: Dict[str, Any], where: str) -> np.ndarray:
+    for key in ("shape", "b64"):
+        if key not in spec:
+            raise FrontendError(f"{where}: weight spec missing {key!r} "
+                                f"(need shape/dtype/b64)")
+    dt = np.dtype(spec.get("dtype", "float32"))
+    raw = base64.b64decode(spec["b64"])
+    a = np.frombuffer(raw, dtype=dt.newbyteorder("<")).astype(dt)
+    shape = tuple(int(d) for d in spec["shape"])
+    if a.size != int(np.prod(shape)):
+        raise FrontendError(f"{where}: b64 payload has {a.size} elements, "
+                            f"shape {shape} needs {int(np.prod(shape))}")
+    return a.reshape(shape)
+
+
+def encode_array(a: np.ndarray) -> Dict[str, Any]:
+    """Inverse of the b64 weight spec (fixture generation helper)."""
+    return {"shape": list(a.shape), "dtype": str(a.dtype),
+            "b64": base64.b64encode(np.ascontiguousarray(a).tobytes()).decode()}
+
+
+def _seeded(seed: int, name: str, kind: str) -> np.random.Generator:
+    # stable per-tensor stream: independent of layer order, reproducible
+    h = hashlib.sha256(f"{seed}:{name}:{kind}".encode()).digest()
+    return np.random.default_rng(int.from_bytes(h[:8], "little"))
+
+
+class JsonImporter:
+    """``Importer`` protocol implementation for ``repro-net-v1`` JSON."""
+
+    format = "json"
+    suffixes = (".json",)
+
+    def parse(self, data: bytes, name: str = "") -> FrontendGraph:
+        try:
+            doc = json.loads(data.decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise FrontendError(f"{name or 'model'}: not valid JSON ({e})") \
+                from None
+        if not isinstance(doc, dict) or doc.get("format") != FORMAT_ID:
+            raise FrontendError(
+                f"{name or 'model'}: expected a {FORMAT_ID!r} document "
+                f"(got format={doc.get('format') if isinstance(doc, dict) else type(doc).__name__!r})")
+        for key in ("name", "input_shape", "layers"):
+            if key not in doc:
+                raise FrontendError(f"{doc.get('name', name)}: missing "
+                                    f"required key {key!r}")
+        net = str(doc["name"])
+        input_shape = tuple(int(d) for d in doc["input_shape"])
+        if len(input_shape) != 3 or min(input_shape) < 1:
+            raise FrontendError(f"{net}: input_shape must be (C, H, W) "
+                                f"positive ints, got {doc['input_shape']}")
+        seed = int(doc.get("seed", 0))
+        weights = doc.get("weights", {})
+
+        g = FrontendGraph(name=net, source_format="json",
+                          source_digest=hashlib.sha256(data).hexdigest())
+        g.inputs.append(("data", input_shape))
+        shapes: Dict[str, Tuple[int, ...]] = {"data": input_shape}
+
+        for i, spec in enumerate(doc["layers"]):
+            where = f"{net}: layers[{i}]"
+            lname = spec.get("name")
+            ltype = spec.get("type")
+            if not lname or not ltype:
+                raise FrontendError(f"{where}: every layer needs "
+                                    f"'name' and 'type'")
+            inputs = list(spec.get("inputs", []))
+            if not inputs:
+                raise FrontendError(f"{where} ({lname!r}): no inputs listed")
+            if ltype not in LAYER_TYPES:
+                raise UnsupportedOpError(ltype, lname, LAYER_TYPES,
+                                         detail="unknown declarative layer "
+                                                "type")
+            for t in inputs:
+                if t not in shapes:
+                    raise FrontendError(
+                        f"{where} ({lname!r}): input {t!r} is not 'data' or "
+                        f"an earlier layer (defined so far: "
+                        f"{sorted(shapes)})")
+            out = self._emit(g, where, lname, ltype, spec, inputs, shapes,
+                             weights.get(lname, {}), seed)
+            shapes[lname] = out
+        g.outputs.append(doc["layers"][-1]["name"])
+        return g.check_ssa()
+
+    # -- per-layer emission --------------------------------------------------
+    def _emit(self, g: FrontendGraph, where: str, lname: str, ltype: str,
+              spec: Dict, inputs: List[str], shapes: Dict[str, tuple],
+              w_spec: Dict, seed: int) -> Tuple[int, ...]:
+        """Append FrontendNodes for one declarative layer; return out shape.
+
+        The local shape propagation here only sizes seeded weights — the
+        authoritative shape checking happens in the shared shape-inference
+        pass, like every other frontend.
+        """
+        relu = bool(spec.get("relu", False))
+        out_t = lname if not relu else f"{lname}__preact"
+
+        def flat(shape):
+            return int(np.prod(shape))
+
+        if ltype == "conv":
+            cin = shapes[inputs[0]][0] if len(shapes[inputs[0]]) == 3 else None
+            if cin is None:
+                raise FrontendError(f"{where} ({lname!r}): conv input must "
+                                    f"be a (C,H,W) feature map")
+            k = int(spec.get("kernel", 1))
+            cout = int(spec.get("out_channels", 0))
+            groups = int(spec.get("groups", 1))
+            if groups < 1 or cin % groups:
+                raise FrontendError(f"{where} ({lname!r}): groups={groups} "
+                                    f"does not divide in_channels={cin}")
+            if "w" in w_spec:
+                w = _b64_array(w_spec["w"], f"{where} ({lname!r}) w")
+                cout = cout or int(w.shape[0])
+            else:
+                fan_in = (cin // groups) * k * k
+                w = _seeded(seed, lname, "w").normal(
+                    0, np.sqrt(2.0 / fan_in),
+                    (cout, cin // groups, k, k)).astype(np.float32)
+            if "b" in w_spec:
+                b = _b64_array(w_spec["b"], f"{where} ({lname!r}) b")
+            else:
+                b = _seeded(seed, lname, "b").normal(
+                    0, 0.05, (cout,)).astype(np.float32)
+            g.initializers[f"{lname}.w"] = w
+            g.initializers[f"{lname}.b"] = b
+            stride, pad = int(spec.get("stride", 1)), int(spec.get("pad", 0))
+            g.nodes.append(FrontendNode(
+                name=lname, op="Conv", inputs=[inputs[0], f"{lname}.w",
+                                               f"{lname}.b"],
+                outputs=[out_t],
+                attrs={"kernel_shape": [k, k], "strides": [stride, stride],
+                       "pads": [pad, pad, pad, pad], "group": groups,
+                       "dilations": [1, 1]}))
+            c, h, w_ = shapes[inputs[0]]
+            p = (h + 2 * pad - k) // stride + 1
+            q = (w_ + 2 * pad - k) // stride + 1
+            out_shape = (cout, p, q)
+        elif ltype == "fc":
+            cin = flat(shapes[inputs[0]])
+            cout = int(spec.get("out_channels", 0))
+            if "w" in w_spec:
+                w = _b64_array(w_spec["w"], f"{where} ({lname!r}) w")
+                cout = cout or int(w.shape[0])
+            else:
+                w = _seeded(seed, lname, "w").normal(
+                    0, np.sqrt(2.0 / cin), (cout, cin)).astype(np.float32)
+            if "b" in w_spec:
+                b = _b64_array(w_spec["b"], f"{where} ({lname!r}) b")
+            else:
+                b = _seeded(seed, lname, "b").normal(
+                    0, 0.05, (cout,)).astype(np.float32)
+            g.initializers[f"{lname}.w"] = w
+            g.initializers[f"{lname}.b"] = b
+            g.nodes.append(FrontendNode(
+                name=lname, op="Gemm",
+                inputs=[inputs[0], f"{lname}.w", f"{lname}.b"],
+                outputs=[out_t],
+                attrs={"alpha": 1.0, "beta": 1.0, "transB": 1}))
+            out_shape = (cout,)
+        elif ltype == "pool":
+            mode = spec.get("mode", spec.get("pool_mode", ""))
+            if mode not in _POOL_OPS:
+                raise FrontendError(f"{where} ({lname!r}): pool mode must be "
+                                    f"one of {sorted(_POOL_OPS)}, got "
+                                    f"{mode!r}")
+            attrs: Dict[str, Any] = {}
+            c, h, w_ = shapes[inputs[0]]
+            if mode == "gap":
+                out_shape = (c, 1, 1)
+            else:
+                k = int(spec.get("kernel", 1))
+                stride = int(spec.get("stride", 1))
+                pad = int(spec.get("pad", 0))
+                attrs = {"kernel_shape": [k, k], "strides": [stride, stride],
+                         "pads": [pad, pad, pad, pad]}
+                out_shape = (c, (h + 2 * pad - k) // stride + 1,
+                             (w_ + 2 * pad - k) // stride + 1)
+            g.nodes.append(FrontendNode(name=lname, op=_POOL_OPS[mode],
+                                        inputs=[inputs[0]], outputs=[out_t],
+                                        attrs=attrs))
+        elif ltype == "add":
+            g.nodes.append(FrontendNode(name=lname, op="Add", inputs=inputs,
+                                        outputs=[out_t]))
+            out_shape = shapes[inputs[0]]
+        elif ltype == "concat":
+            g.nodes.append(FrontendNode(name=lname, op="Concat",
+                                        inputs=inputs, outputs=[out_t],
+                                        attrs={"axis": 1}))
+            cs = [shapes[t] for t in inputs]
+            out_shape = (sum(c[0] for c in cs),) + cs[0][1:]
+        elif ltype == "batchnorm":
+            c = shapes[inputs[0]][0]
+            names = ("gamma", "beta", "mean", "var")
+            vals = {}
+            for kind in names:
+                if kind in w_spec:
+                    vals[kind] = _b64_array(w_spec[kind],
+                                            f"{where} ({lname!r}) {kind}")
+                elif kind in ("gamma", "var"):
+                    vals[kind] = _seeded(seed, lname, kind).uniform(
+                        0.5, 1.5, (c,)).astype(np.float32)
+                else:
+                    vals[kind] = _seeded(seed, lname, kind).normal(
+                        0, 0.1, (c,)).astype(np.float32)
+            for kind in names:
+                g.initializers[f"{lname}.{kind}"] = vals[kind]
+            g.nodes.append(FrontendNode(
+                name=lname, op="BatchNormalization",
+                inputs=[inputs[0]] + [f"{lname}.{k}" for k in names],
+                outputs=[out_t],
+                attrs={"epsilon": float(spec.get("epsilon", 1e-5))}))
+            out_shape = shapes[inputs[0]]
+        elif ltype == "relu":
+            g.nodes.append(FrontendNode(name=lname, op="Relu",
+                                        inputs=[inputs[0]], outputs=[out_t]))
+            out_shape = shapes[inputs[0]]
+        else:                                  # flatten
+            g.nodes.append(FrontendNode(name=lname, op="Flatten",
+                                        inputs=[inputs[0]], outputs=[out_t],
+                                        attrs={"axis": 1}))
+            out_shape = (flat(shapes[inputs[0]]),)
+
+        if relu:
+            if ltype not in ("conv", "fc", "add"):
+                raise FrontendError(f"{where} ({lname!r}): 'relu' flag is "
+                                    f"only meaningful on conv/fc/add")
+            g.nodes.append(FrontendNode(name=f"{lname}_relu", op="Relu",
+                                        inputs=[out_t], outputs=[lname]))
+        return out_shape

@@ -1,0 +1,152 @@
+"""Lowering: a pass-pipeline-normalised FrontendGraph -> NetGraph + params.
+
+The last frontend stage.  After ``passes.run_pipeline`` the graph contains
+only ``LOWERABLE_OPS``; this module maps them 1:1 onto
+``repro.core.graph.NetGraph`` layers (the compiler's existing input IR) and
+extracts the float32 parameter dict ``CompilerPipeline`` quantises.  The
+input layer is renamed ``data`` — the name the arena planner and the
+calibration table key on — and the produced ``NetGraph`` carries the
+frontend's ``source_digest`` so compiled-artifact cache keys distinguish two
+files that happen to share a graph name.
+
+Anything still un-mappable here (a non-square kernel that slipped past a
+custom pass list, say) raises :class:`UnsupportedOpError` — lowering is part
+of import, so these still fail at import time.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.graph import NetGraph
+from repro.frontend.ir import (FrontendError, FrontendGraph, FrontendNode,
+                               UnsupportedOpError)
+from repro.frontend.passes.partition import LOWERABLE_OPS
+
+_POOL_MODES = {"MaxPool": "max", "AveragePool": "avg",
+               "GlobalAveragePool": "gap"}
+
+
+def _scalar(node: FrontendNode, key: str, default=None) -> int:
+    vals = node.attrs.get(key, default)
+    if vals is None:
+        return 0
+    return int(vals[0]) if isinstance(vals, (list, tuple)) else int(vals)
+
+
+def _layer_name(g: FrontendGraph, node: FrontendNode, taken: set) -> str:
+    """NetGraph layer names come from node names (ONNX may leave them
+    machiney — e.g. ``/conv1/Conv``); sanitise and uniquify."""
+    base = g.node_label(node).strip("/").replace("/", "_").replace(":", "_") \
+        or "layer"
+    name = base
+    i = 1
+    while name in taken or name == "data":
+        name = f"{base}_{i}"
+        i += 1
+    return name
+
+
+def lower(fg: FrontendGraph) -> Tuple[NetGraph, Dict[str, Dict[str, np.ndarray]]]:
+    """Map a normalised FrontendGraph onto (NetGraph, params)."""
+    if len(fg.inputs) != 1:
+        raise FrontendError(f"{fg.name}: lowering needs exactly one graph "
+                            f"input, got {[n for n, _ in fg.inputs]}")
+    in_name, in_shape = fg.inputs[0]
+    if len(in_shape) != 3:
+        raise FrontendError(f"{fg.name}: graph input {in_name!r} must be "
+                            f"(C, H, W), got {tuple(in_shape)}")
+
+    g = NetGraph(fg.name, tuple(int(d) for d in in_shape))
+    g.layer(name="data", type="input", inputs=[])
+    params: Dict[str, Dict[str, np.ndarray]] = {}
+    # frontend tensor name -> NetGraph layer name
+    t2l: Dict[str, str] = {in_name: "data"}
+    taken = {"data"}
+
+    for node in fg.nodes:
+        if node.op not in LOWERABLE_OPS:
+            raise UnsupportedOpError(node.op, fg.node_label(node),
+                                     LOWERABLE_OPS,
+                                     detail="reached lowering — run the "
+                                            "partition pass first")
+        name = _layer_name(fg, node, taken)
+        taken.add(name)
+        acts = [t for t in node.inputs if not fg.is_initializer(t)]
+        try:
+            srcs = [t2l[t] for t in acts]
+        except KeyError as e:
+            raise FrontendError(f"{fg.name}: node {fg.node_label(node)!r} "
+                                f"reads {e.args[0]!r}, which no lowered "
+                                f"layer produces") from None
+        relu = bool(node.attrs.get("fused_relu", False))
+
+        if node.op == "Conv":
+            w = np.asarray(fg.initializers[node.inputs[1]], np.float32)
+            b = np.asarray(fg.initializers[node.inputs[2]],
+                           np.float32).reshape(-1)
+            k_out, _, r, s = w.shape
+            if r != s:
+                raise UnsupportedOpError(
+                    "Conv", fg.node_label(node), LOWERABLE_OPS,
+                    detail=f"non-square kernel ({r}x{s})")
+            g.layer(name=name, type="conv", inputs=srcs,
+                    out_channels=int(k_out), kernel=int(r),
+                    stride=_scalar(node, "strides", [1]) or 1,
+                    pad=_scalar(node, "pads", [0]),
+                    groups=int(node.attrs.get("group", 1)), relu=relu)
+            params[name] = {"w": w, "b": b}
+        elif node.op == "Gemm":
+            w = np.asarray(fg.initializers[node.inputs[1]], np.float32)
+            b = np.asarray(fg.initializers[node.inputs[2]],
+                           np.float32).reshape(-1)
+            g.layer(name=name, type="fc", inputs=srcs,
+                    out_channels=int(w.shape[0]), relu=relu)
+            params[name] = {"w": w, "b": b}
+        elif node.op in _POOL_MODES:
+            mode = _POOL_MODES[node.op]
+            kw = {}
+            if mode != "gap":
+                kw = dict(kernel=_scalar(node, "kernel_shape", [1]),
+                          stride=_scalar(node, "strides", [1]) or 1,
+                          pad=_scalar(node, "pads", [0]))
+            g.layer(name=name, type="pool", inputs=srcs, pool_mode=mode, **kw)
+        elif node.op == "Add":
+            g.layer(name=name, type="add", inputs=srcs, relu=relu)
+        else:                              # Concat
+            g.layer(name=name, type="concat", inputs=srcs)
+        t2l[node.output] = name
+
+    if len(fg.outputs) != 1:
+        raise FrontendError(f"{fg.name}: lowering needs exactly one graph "
+                            f"output, got {fg.outputs}")
+    out_layer = t2l.get(fg.outputs[0])
+    if out_layer != g.layers[-1].name:
+        raise FrontendError(
+            f"{fg.name}: graph output {fg.outputs[0]!r} maps to layer "
+            f"{out_layer!r}, but the engine serves the last layer "
+            f"({g.layers[-1].name!r}) — reorder the model so its output is "
+            f"produced last")
+
+    g.source_digest = fg.source_digest
+    g.validate()
+    g.infer_shapes()
+
+    # cross-check lowered shapes against the pass pipeline's inference —
+    # two independent shape computations must agree on every layer
+    if fg.shapes:
+        t2shape = {t: fg.shapes[t] for t in t2l if t in fg.shapes}
+        for t, lname in t2l.items():
+            want = t2shape.get(t)
+            got = g.by_name()[lname].out_shape
+            if want is None or lname == "data":
+                continue
+            want3 = want if len(want) == 3 else (want[0], 1, 1)
+            if tuple(want3) != tuple(got):
+                raise FrontendError(
+                    f"{fg.name}: shape disagreement on {lname!r}: frontend "
+                    f"inferred {want3}, NetGraph inferred {got} "
+                    f"(importer bug — please report)")
+    return g, params

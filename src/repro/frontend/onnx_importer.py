@@ -1,0 +1,182 @@
+"""ONNX importer: ModelProto bytes -> :class:`FrontendGraph`.
+
+Parses the ONNX protobuf directly off the wire (``repro.frontend.protowire``)
+so importing needs no ``onnx``/``protobuf`` install — the optional
+``[frontend]`` extra is only for cross-validation and fixture export.  Field
+numbers below are fixed by onnx.proto's wire contract (they can never change
+without breaking every serialized model in existence).
+
+Supported surface, mirroring what the engine can execute:
+  * single graph input, NCHW, batch dim 1 or symbolic,
+  * float32 initializers (raw_data or float_data),
+  * the op vocabulary of ``repro.frontend.ir`` — anything else still parses
+    (this importer is deliberately total over well-formed files) and is
+    rejected *by name* later, by the unsupported-op partitioner.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from repro.frontend.ir import FrontendError, FrontendGraph, FrontendNode
+from repro.frontend.protowire import Msg, WireError
+
+# -- onnx.proto field numbers (wire contract) --------------------------------
+# ModelProto
+_M_GRAPH, _M_OPSET = 7, 8
+# OperatorSetIdProto
+_OS_DOMAIN, _OS_VERSION = 1, 2
+# GraphProto
+_G_NODE, _G_NAME, _G_INIT, _G_INPUT, _G_OUTPUT = 1, 2, 5, 11, 12
+# NodeProto
+_N_INPUT, _N_OUTPUT, _N_NAME, _N_OPTYPE, _N_ATTR = 1, 2, 3, 4, 5
+# AttributeProto
+_A_NAME, _A_F, _A_I, _A_S, _A_T, _A_FLOATS, _A_INTS, _A_STRINGS = \
+    1, 2, 3, 4, 5, 7, 8, 9
+# TensorProto
+_T_DIMS, _T_DTYPE, _T_FLOAT, _T_INT32, _T_INT64, _T_NAME, _T_RAW = \
+    1, 2, 4, 5, 7, 8, 9
+# ValueInfoProto / TypeProto / TypeProto.Tensor / TensorShapeProto / Dimension
+_VI_NAME, _VI_TYPE = 1, 2
+_TY_TENSOR = 1
+_TT_ELEM, _TT_SHAPE = 1, 2
+_TS_DIM = 1
+_D_VALUE, _D_PARAM = 1, 2
+
+# TensorProto.DataType values this importer materialises
+_DTYPES = {1: np.float32, 6: np.int32, 7: np.int64, 11: np.float64}
+
+
+def _decode_tensor(t: Msg, where: str) -> Tuple[str, np.ndarray]:
+    name = t.str_(_T_NAME)
+    dims = tuple(t.ints(_T_DIMS))
+    code = t.int_(_T_DTYPE)
+    if code not in _DTYPES:
+        raise FrontendError(
+            f"{where}: initializer {name!r} has TensorProto data_type "
+            f"{code}; this importer reads float32/float64/int32/int64")
+    dt = np.dtype(_DTYPES[code])
+    raw = t.bytes_(_T_RAW)
+    if raw:
+        a = np.frombuffer(raw, dtype=dt.newbyteorder("<")).astype(dt)
+    elif code == 1:
+        a = np.asarray(t.floats(_T_FLOAT), np.float32)
+    elif code in (6, 7):
+        a = np.asarray(t.ints(_T_INT64 if code == 7 else _T_INT32), dt)
+    else:
+        raise FrontendError(f"{where}: initializer {name!r} carries neither "
+                            f"raw_data nor typed data")
+    want = int(np.prod(dims)) if dims else a.size
+    if a.size != want:
+        raise FrontendError(
+            f"{where}: initializer {name!r} dims {dims} need {want} "
+            f"elements, data has {a.size}")
+    return name, a.reshape(dims)
+
+
+def _decode_attr(a: Msg) -> Tuple[str, Any]:
+    name = a.str_(_A_NAME)
+    # onnx sets AttributeProto.type, but the populated field is unambiguous;
+    # probing fields keeps us independent of writers that omit the enum.
+    if a.has(_A_INTS):
+        return name, list(a.ints(_A_INTS))
+    if a.has(_A_FLOATS):
+        return name, list(a.floats(_A_FLOATS))
+    if a.has(_A_STRINGS):
+        return name, a.strs(_A_STRINGS)
+    if a.has(_A_S):
+        return name, a.str_(_A_S)
+    if a.has(_A_T):
+        _, arr = _decode_tensor(a.msg(_A_T), f"attribute {name!r}")
+        return name, arr
+    if a.has(_A_F):
+        return name, a.float_(_A_F)
+    if a.has(_A_I):
+        return name, a.int_(_A_I)
+    return name, None
+
+
+def _decode_value_info(vi: Msg) -> Tuple[str, List[Any]]:
+    """(name, dims) where dims entries are int or a str dim_param."""
+    name = vi.str_(_VI_NAME)
+    tt = vi.msg(_VI_TYPE).msg(_TY_TENSOR)
+    dims: List[Any] = []
+    for d in tt.msg(_TT_SHAPE).msgs(_TS_DIM):
+        dims.append(d.str_(_D_PARAM) if d.has(_D_PARAM) else d.int_(_D_VALUE))
+    return name, dims
+
+
+def _input_chw(name: str, dims: List[Any], model_name: str) -> Tuple[int, ...]:
+    """Map an ONNX input shape onto the engine's (C, H, W) single image."""
+    concrete = [d for d in dims if isinstance(d, int)]
+    if len(dims) == 4:
+        n, rest = dims[0], dims[1:]
+        if isinstance(n, int) and n != 1:
+            raise FrontendError(
+                f"{model_name}: input {name!r} has batch dimension {n}; the "
+                f"engine is single-image (batch must be 1 or symbolic — "
+                f"serving batches via the runtime scheduler instead)")
+        dims = rest
+    elif len(dims) != 3:
+        raise FrontendError(
+            f"{model_name}: input {name!r} has rank-{len(dims)} shape "
+            f"{dims}; expected NCHW (N,C,H,W) or (C,H,W)")
+    if not all(isinstance(d, int) and d > 0 for d in dims):
+        raise FrontendError(
+            f"{model_name}: input {name!r} has non-concrete feature dims "
+            f"{dims} (only the batch dim may be symbolic); concrete dims "
+            f"seen: {concrete}")
+    return tuple(dims)
+
+
+class OnnxImporter:
+    """``Importer`` protocol implementation for ``.onnx`` files."""
+
+    format = "onnx"
+    suffixes = (".onnx",)
+
+    def parse(self, data: bytes, name: str = "") -> FrontendGraph:
+        try:
+            model = Msg(data)
+            gp = model.msg(_M_GRAPH)
+            if not gp.bytes_list(_G_NODE) and not gp.bytes_list(_G_INPUT):
+                raise FrontendError(
+                    "no GraphProto found (is this an ONNX ModelProto?)")
+            graph_name = gp.str_(_G_NAME) or name or "onnx_model"
+            g = FrontendGraph(name=graph_name, source_format="onnx",
+                              source_digest=hashlib.sha256(data).hexdigest())
+            for t in gp.msgs(_G_INIT):
+                tname, arr = _decode_tensor(t, graph_name)
+                g.initializers[tname] = arr
+            for vi in gp.msgs(_G_INPUT):
+                vname, dims = _decode_value_info(vi)
+                if vname in g.initializers:    # pre-IR4 style initializer input
+                    continue
+                g.inputs.append((vname, _input_chw(vname, dims, graph_name)))
+            for vi in gp.msgs(_G_OUTPUT):
+                g.outputs.append(_decode_value_info(vi)[0])
+            for i, np_ in enumerate(gp.msgs(_G_NODE)):
+                attrs = dict(_decode_attr(a) for a in np_.msgs(_N_ATTR))
+                node = FrontendNode(
+                    name=np_.str_(_N_NAME) or f"node_{i}",
+                    op=np_.str_(_N_OPTYPE),
+                    inputs=[t for t in np_.strs(_N_INPUT)],
+                    outputs=np_.strs(_N_OUTPUT),
+                    attrs=attrs)
+                g.nodes.append(node)
+        except WireError as e:
+            raise FrontendError(f"{name or 'model'}: not a readable ONNX "
+                                f"protobuf ({e})") from None
+        if len(g.inputs) != 1:
+            raise FrontendError(
+                f"{g.name}: expected exactly one graph input, found "
+                f"{[n for n, _ in g.inputs]!r} (multi-input models are not "
+                f"servable on the single-surface engine)")
+        if len(g.outputs) != 1:
+            raise FrontendError(
+                f"{g.name}: expected exactly one graph output, found "
+                f"{g.outputs!r}")
+        return g.check_ssa()

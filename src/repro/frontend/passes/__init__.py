@@ -1,0 +1,77 @@
+"""Staged compiler passes over :class:`FrontendGraph` (ngraph-style).
+
+Each pass is a plain function ``(FrontendGraph) -> FrontendGraph`` registered
+by name, individually invocable (``run_pass(g, "fold_batchnorm")``) and
+individually unit-tested.  ``run_pipeline`` runs the default staged order:
+
+    canonicalize      Constant->initializer, drop Identity/Dropout/trailing
+                      Softmax, MatMul->Gemm
+    infer_shapes      shape inference + validation over every tensor
+    fold_constants    evaluate nodes whose inputs are all initializers
+    fold_batchnorm    BatchNormalization after Conv/Gemm -> folded w/b
+    fold_scales       constant Add/Mul/Div after Conv/Gemm -> folded into
+                      bias / per-channel weight scales (requant-scale folding
+                      — folded scales flow into the per-channel int8 weight
+                      quantisation instead of costing an EW pass)
+    fuse_relu         Relu after Conv/Gemm/Add -> fused_relu tag (the SDP
+                      epilogue executes it for free)
+    legalize_layout   NCHW legalization: full-flatten Flatten/Reshape removal,
+                      Gemm transB/alpha/beta normalisation, zero-bias
+                      materialisation
+    infer_shapes      re-validate after graph surgery
+    partition         unsupported-op partitioner: raises UnsupportedOpError
+                      naming the op, its node and the supported set
+
+A pass list is data, not policy: callers may run any subset in any order —
+every pass re-establishes its own preconditions or fails descriptively.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, Optional
+
+from repro.frontend.ir import FrontendGraph
+from repro.frontend.passes.canonicalize import canonicalize
+from repro.frontend.passes.shapes import infer_shapes
+from repro.frontend.passes.fold import (fold_batchnorm, fold_constants,
+                                        fold_scales)
+from repro.frontend.passes.fuse import fuse_relu
+from repro.frontend.passes.layout import legalize_layout
+from repro.frontend.passes.partition import LOWERABLE_OPS, partition
+
+PASSES: Dict[str, Callable[[FrontendGraph], FrontendGraph]] = {
+    "canonicalize": canonicalize,
+    "infer_shapes": infer_shapes,
+    "fold_constants": fold_constants,
+    "fold_batchnorm": fold_batchnorm,
+    "fold_scales": fold_scales,
+    "fuse_relu": fuse_relu,
+    "legalize_layout": legalize_layout,
+    "partition": partition,
+}
+
+DEFAULT_PIPELINE = ("canonicalize", "infer_shapes", "fold_constants",
+                    "fold_batchnorm", "fold_scales", "fuse_relu",
+                    "legalize_layout", "infer_shapes", "partition")
+
+
+def run_pass(g: FrontendGraph, name: str) -> FrontendGraph:
+    """Run one pass by name (unknown names raise, listing the registry)."""
+    if name not in PASSES:
+        raise ValueError(f"unknown pass {name!r}; registered passes: "
+                         f"{', '.join(PASSES)}")
+    return PASSES[name](g)
+
+
+def run_pipeline(g: FrontendGraph,
+                 names: Optional[Iterable[str]] = None) -> FrontendGraph:
+    """Run a pass list in order (default: ``DEFAULT_PIPELINE``)."""
+    for name in (DEFAULT_PIPELINE if names is None else names):
+        g = run_pass(g, name)
+    return g
+
+
+__all__ = ["PASSES", "DEFAULT_PIPELINE", "LOWERABLE_OPS", "run_pass",
+           "run_pipeline", "canonicalize", "infer_shapes", "fold_constants",
+           "fold_batchnorm", "fold_scales", "fuse_relu", "legalize_layout",
+           "partition"]

@@ -1,0 +1,58 @@
+"""Canonicalization: normalise importer output before any analysis.
+
+* ``Constant`` nodes become initializers (their only purpose).
+* ``Identity`` / ``Dropout`` (inference no-ops) are spliced out.
+* A *trailing* ``Softmax`` (producing the graph output) is dropped: the
+  engine ends pre-softmax like the paper's nets, and argmax is invariant
+  under softmax.  A mid-graph Softmax is left for the partitioner to reject.
+* ``MatMul`` with a constant right operand becomes a bias-less ``Gemm``
+  (transB=0), so every fully-connected layer flows through one op.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.frontend.ir import FrontendError, FrontendGraph
+
+
+def rewire(g: FrontendGraph, old: str, new: str) -> None:
+    """Redirect every reader of tensor ``old`` to ``new``."""
+    for n in g.nodes:
+        n.inputs = [new if t == old else t for t in n.inputs]
+    g.outputs = [new if t == old else t for t in g.outputs]
+
+
+def prune_initializers(g: FrontendGraph) -> None:
+    """Drop initializers nothing reads (after folding rewires weights)."""
+    used = {t for n in g.nodes for t in n.inputs}
+    used.update(g.outputs)
+    for name in list(g.initializers):
+        if name not in used:
+            del g.initializers[name]
+
+
+def canonicalize(g: FrontendGraph) -> FrontendGraph:
+    for node in list(g.nodes):
+        if node.op == "Constant":
+            value = node.attrs.get("value")
+            if not isinstance(value, np.ndarray):
+                raise FrontendError(
+                    f"{g.name}: Constant node {g.node_label(node)!r} has no "
+                    f"tensor 'value' attribute (sparse/typed constants are "
+                    f"not supported)")
+            g.initializers[node.output] = np.asarray(value)
+            g.remove_node(node)
+        elif node.op in ("Identity", "Dropout"):
+            rewire(g, node.output, node.inputs[0])
+            g.remove_node(node)
+        elif node.op == "Softmax" and node.output in g.outputs:
+            rewire(g, node.output, node.inputs[0])
+            g.remove_node(node)
+        elif node.op == "MatMul":
+            if len(node.inputs) == 2 and g.is_initializer(node.inputs[1]):
+                node.op = "Gemm"
+                node.attrs = {"alpha": 1.0, "beta": 1.0, "transA": 0,
+                              "transB": 0}
+    prune_initializers(g)
+    return g.check_ssa()

@@ -1,0 +1,167 @@
+"""Folding passes: constants, BatchNorm-into-Conv, scale/bias-into-Conv.
+
+All three rewrite parameters algebraically at import time so the runtime
+graph carries only engine ops:
+
+* ``fold_constants`` — a node whose inputs are all initializers is just a
+  very slow way to write an array; evaluate it (``refeval``) and promote the
+  result to an initializer.
+* ``fold_batchnorm`` — inference BatchNorm after Conv/Gemm is an affine
+  per-channel map; fold it into the producer's weights and bias
+  (``w' = w·γ/√(σ²+ε)``, ``b' = (b−μ)·γ/√(σ²+ε) + β``).  Folding is done in
+  float64 and rounded once to float32.
+* ``fold_scales`` — constant ``Add`` (bias), ``Mul``/``Div`` (per-channel or
+  scalar scales) following Conv/Gemm fold the same way.  For int8 plans this
+  is *requant-scale folding*: the folded scale flows into the per-channel
+  weight quantisation (``quant.quantize_weights``) and the SDP's fixed-point
+  requant words, instead of burning an EW pass at runtime.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.frontend import refeval
+from repro.frontend.ir import FrontendError, FrontendGraph, FrontendNode
+from repro.frontend.passes.canonicalize import prune_initializers, rewire
+
+
+def fold_constants(g: FrontendGraph) -> FrontendGraph:
+    for node in list(g.nodes):
+        ins = [t for t in node.inputs if t]
+        if node.op not in refeval._EVAL_OPS:
+            continue
+        if not ins or not all(g.is_initializer(t) for t in ins):
+            continue
+        if node.output in g.outputs:
+            continue                      # a fully-constant net stays a net
+        value = refeval.eval_node(node, [g.initializers[t] for t in ins])
+        g.initializers[node.output] = value
+        g.remove_node(node)
+    prune_initializers(g)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# shared: locate the foldable producer of a tensor
+# ---------------------------------------------------------------------------
+def _foldable_producer(g: FrontendGraph, tensor: str
+                       ) -> Optional[FrontendNode]:
+    """The Conv/Gemm producing ``tensor``, if folding into it is sound:
+    single consumer, not a graph output, constant weights."""
+    prod = g.producer(tensor)
+    if prod is None or prod.op not in ("Conv", "Gemm"):
+        return None
+    if tensor in g.outputs or len(g.consumers(tensor)) != 1:
+        return None
+    if len(prod.inputs) < 2 or not g.is_initializer(prod.inputs[1]):
+        return None
+    return prod
+
+
+def _producer_wb(g: FrontendGraph, prod: FrontendNode
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """(w, b) as float64, materialising a zero bias if the op has none."""
+    w = np.asarray(g.initializers[prod.inputs[1]], np.float64)
+    k_out = w.shape[0] if (prod.op == "Conv" or prod.attrs.get("transB", 0)) \
+        else w.shape[1]
+    if len(prod.inputs) > 2 and prod.inputs[2]:
+        b = np.asarray(g.initializers[prod.inputs[2]], np.float64).reshape(-1)
+    else:
+        b = np.zeros(k_out, np.float64)
+    return w, b
+
+
+def _store_wb(g: FrontendGraph, prod: FrontendNode, w: np.ndarray,
+              b: np.ndarray, tag: str) -> None:
+    """Write folded params under fresh names (weights may be shared)."""
+    wname, bname = f"{prod.name}.{tag}.w", f"{prod.name}.{tag}.b"
+    g.initializers[wname] = w.astype(np.float32)
+    g.initializers[bname] = b.astype(np.float32)
+    prod.inputs = [prod.inputs[0], wname, bname]
+
+
+def _scale_weights(prod: FrontendNode, w: np.ndarray,
+                   scale: np.ndarray) -> np.ndarray:
+    """Apply a per-output-channel scale to Conv/Gemm weights."""
+    if prod.op == "Conv" or prod.attrs.get("transB", 0):
+        return w * scale.reshape((-1,) + (1,) * (w.ndim - 1))
+    return w * scale.reshape(1, -1)       # Gemm transB=0: K on axis 1
+
+
+def fold_batchnorm(g: FrontendGraph) -> FrontendGraph:
+    folded = False
+    for node in list(g.nodes):
+        if node.op != "BatchNormalization":
+            continue
+        ins = [t for t in node.inputs if t]
+        if len(ins) != 5 or not all(g.is_initializer(t) for t in ins[1:]):
+            continue                      # dynamic BN params: partitioner's
+        prod = _foldable_producer(g, ins[0])
+        if prod is None:
+            continue
+        gamma, beta, mean, var = (np.asarray(g.initializers[t], np.float64)
+                                  .reshape(-1) for t in ins[1:5])
+        eps = float(node.attrs.get("epsilon", 1e-5))
+        scale = gamma / np.sqrt(var + eps)
+        w, b = _producer_wb(g, prod)
+        _store_wb(g, prod, _scale_weights(prod, w, scale),
+                  (b - mean) * scale + beta, "bnfold")
+        rewire(g, node.output, prod.output)
+        g.remove_node(node)
+        folded = True
+    if folded:
+        prune_initializers(g)
+    return g
+
+
+def _channel_const(g: FrontendGraph, node: FrontendNode, k_out: int
+                   ) -> Optional[np.ndarray]:
+    """The constant operand of a binary node, as a (K,) or scalar vector."""
+    const = [t for t in node.inputs if g.is_initializer(t)]
+    if len(const) != 1:
+        return None
+    c = np.asarray(g.initializers[const[0]], np.float64)
+    if c.size == 1:
+        return c.reshape(-1)
+    if c.size == k_out and tuple(d for d in c.shape if d != 1) == (k_out,):
+        return c.reshape(-1)
+    return None                           # not scalar / per-channel broadcast
+
+
+def fold_scales(g: FrontendGraph) -> FrontendGraph:
+    folded = False
+    for node in list(g.nodes):
+        if node.op not in ("Add", "Mul", "Div"):
+            continue
+        acts = [t for t in node.inputs if not g.is_initializer(t)]
+        if len(acts) != 1:
+            continue                      # residual add / constant-constant
+        if node.op == "Div" and g.is_initializer(node.inputs[0]):
+            continue                      # const / act is not a scale
+        prod = _foldable_producer(g, acts[0])
+        if prod is None:
+            continue
+        w, b = _producer_wb(g, prod)
+        c = _channel_const(g, node, b.shape[0])
+        if c is None:
+            continue
+        if node.op == "Add":
+            b = b + c
+        else:
+            if node.op == "Div":
+                if np.any(c == 0):
+                    raise FrontendError(
+                        f"{g.name}: Div node {g.node_label(node)!r} divides "
+                        f"by a zero constant")
+                c = 1.0 / c
+            w, b = _scale_weights(prod, w, c), b * c
+        _store_wb(g, prod, w, b, "sfold")
+        rewire(g, node.output, prod.output)
+        g.remove_node(node)
+        folded = True
+    if folded:
+        prune_initializers(g)
+    return g

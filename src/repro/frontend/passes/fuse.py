@@ -1,0 +1,34 @@
+"""ReLU fusion tagging: Relu after Conv/Gemm/Add -> ``fused_relu`` attr.
+
+NVDLA executes activation in the SDP epilogue of the producing op (the
+engine's ``Descriptor.relu`` flag), so a standalone Relu node is free — *if*
+it immediately follows a Conv/Gemm/Add that nothing else reads pre-
+activation.  This pass tags such producers and deletes the Relu node;
+any Relu it cannot fuse survives to the partitioner, which rejects it with
+an explanation rather than silently emitting an op the engine lacks.
+"""
+
+from __future__ import annotations
+
+from repro.frontend.ir import FrontendGraph
+from repro.frontend.passes.canonicalize import rewire
+
+FUSABLE = ("Conv", "Gemm", "Add")
+
+
+def fuse_relu(g: FrontendGraph) -> FrontendGraph:
+    for node in list(g.nodes):
+        if node.op != "Relu":
+            continue
+        src = node.inputs[0]
+        prod = g.producer(src)
+        if prod is None or prod.op not in FUSABLE:
+            continue
+        if src in g.outputs or len(g.consumers(src)) != 1:
+            continue                      # someone reads the pre-activation
+        # relu is idempotent: a second Relu over an already-tagged producer
+        # folds away too
+        prod.attrs["fused_relu"] = True
+        rewire(g, node.output, prod.output)
+        g.remove_node(node)
+    return g

@@ -1,0 +1,81 @@
+"""NCHW layout legalization: make every surviving op engine-shaped.
+
+The engine stores activations as single-image (C, H, W) row-major — exactly
+ONNX's NCHW with the batch dim stripped — and its FC unit flattens (C, H, W)
+row-major implicitly.  So:
+
+* full-flatten ``Flatten``/``Reshape`` nodes are erased (their consumers
+  read the unflattened map; row-major order makes this a no-op),
+* ``Gemm`` is normalised to the engine's weight layout: ``transB=1``
+  (weights (K, F)), ``alpha``/``beta`` folded into w/b, a zero bias
+  materialised when absent — so lowering sees exactly one Gemm shape,
+* ``Conv`` gets an explicit zero bias and its ``auto_pad`` resolved
+  (``VALID`` -> zero pads; ``SAME_*`` is rejected — the engine has a single
+  symmetric pad).
+
+Requires shapes (run ``infer_shapes`` first); re-run it afterwards to
+re-validate the surgered graph.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.frontend.ir import (FrontendError, FrontendGraph,
+                               UnsupportedOpError)
+from repro.frontend.passes.canonicalize import prune_initializers, rewire
+from repro.frontend.passes.partition import LOWERABLE_OPS
+
+
+def legalize_layout(g: FrontendGraph) -> FrontendGraph:
+    if not g.shapes:
+        raise FrontendError(f"{g.name}: legalize_layout needs shapes — run "
+                            f"the infer_shapes pass first")
+    for node in list(g.nodes):
+        if node.op in ("Flatten", "Reshape"):
+            src = node.inputs[0]
+            total = int(np.prod(g.shapes[src]))
+            out = g.shapes[node.output]
+            if out != (total,):
+                raise UnsupportedOpError(
+                    node.op, g.node_label(node), LOWERABLE_OPS,
+                    detail=f"only full flattens legalise away "
+                           f"({g.shapes[src]} -> {out} is a real reshape; "
+                           f"the engine has no data-movement op for it)")
+            rewire(g, node.output, src)
+            g.remove_node(node)
+        elif node.op == "Gemm":
+            a = node.attrs
+            w = np.asarray(g.initializers[node.inputs[1]], np.float64)
+            if not a.get("transB", 0):
+                w = w.T
+            alpha, beta = float(a.get("alpha", 1.0)), float(a.get("beta", 1.0))
+            w = w * alpha
+            if len(node.inputs) > 2 and node.inputs[2]:
+                b = np.asarray(g.initializers[node.inputs[2]],
+                               np.float64).reshape(-1) * beta
+            else:
+                b = np.zeros(w.shape[0], np.float64)
+            wname, bname = f"{node.name}.legal.w", f"{node.name}.legal.b"
+            g.initializers[wname] = np.ascontiguousarray(w, np.float32)
+            g.initializers[bname] = b.astype(np.float32)
+            node.inputs = [node.inputs[0], wname, bname]
+            node.attrs = {**a, "alpha": 1.0, "beta": 1.0, "transA": 0,
+                          "transB": 1}
+        elif node.op == "Conv":
+            auto = node.attrs.get("auto_pad", "NOTSET")
+            if auto == "VALID":
+                node.attrs["pads"] = [0, 0, 0, 0]
+                node.attrs["auto_pad"] = "NOTSET"
+            elif auto not in ("", "NOTSET"):
+                raise UnsupportedOpError(
+                    "Conv", g.node_label(node), LOWERABLE_OPS,
+                    detail=f"auto_pad={auto!r} is not supported — export "
+                           f"with explicit symmetric pads")
+            if len(node.inputs) < 3 or not node.inputs[2]:
+                k_out = g.initializers[node.inputs[1]].shape[0]
+                bname = f"{node.name}.legal.b"
+                g.initializers[bname] = np.zeros(k_out, np.float32)
+                node.inputs = [node.inputs[0], node.inputs[1], bname]
+    prune_initializers(g)
+    return g

@@ -1,0 +1,118 @@
+"""Unsupported-op partitioner: the pipeline's final gate (no silent fallback).
+
+Partitions the node list into maximal runs of engine-lowerable ops.  If the
+whole graph is one supported partition, it passes; otherwise it raises
+:class:`UnsupportedOpError` naming the first offending op, its node, the
+supported set, and the partition summary — at *import time*, never
+mid-compile.  Beyond op names it also enforces the engine's per-op
+constraints (square kernels, symmetric pads, no dilation), so "Conv the
+engine cannot run" fails as loudly as "op the engine has never heard of".
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.frontend.ir import (FrontendGraph, FrontendNode,
+                               UnsupportedOpError)
+
+# ops repro.frontend.lower can map onto NetGraph layers
+LOWERABLE_OPS = ("Conv", "Gemm", "MaxPool", "AveragePool",
+                 "GlobalAveragePool", "Add", "Concat")
+
+_HINTS = {
+    "Relu": "could not fuse into a preceding conv/fc/add (the engine only "
+            "executes ReLU in the SDP epilogue)",
+    "BatchNormalization": "could not fold into a preceding conv/fc "
+                          "(inference BN folds only when its input is a "
+                          "single-consumer Conv/Gemm with constant "
+                          "parameters)",
+    "Mul": "constant scales fold into a preceding conv/fc; tensor-tensor "
+           "multiply has no engine unit",
+    "Div": "constant scales fold into a preceding conv/fc; tensor-tensor "
+           "divide has no engine unit",
+    "Flatten": "only full flattens legalise away",
+    "Reshape": "only full flattens legalise away",
+    "Softmax": "only a trailing Softmax is dropped (argmax-invariant); "
+               "mid-graph Softmax has no engine unit",
+    "MatMul": "lowers only with a constant weight operand",
+}
+
+
+def _constraint(g: FrontendGraph, n: FrontendNode) -> Optional[str]:
+    """A human-readable constraint violation for a name-supported op."""
+    a = n.attrs
+    if n.op == "Conv":
+        if any(d != 1 for d in a.get("dilations", [1, 1])):
+            return f"dilations={a['dilations']} (the engine has no dilation)"
+        pt, pl, pb, pr = a.get("pads", [0, 0, 0, 0])
+        if not (pt == pb == pl == pr):
+            return (f"asymmetric pads {[pt, pl, pb, pr]} (the engine has "
+                    f"one symmetric pad register)")
+        ks = a.get("kernel_shape", [1, 1])
+        st = a.get("strides", [1, 1])
+        if ks[0] != ks[1] or st[0] != st[1]:
+            return (f"non-square kernel {ks} / strides {st} (the engine "
+                    f"walks square windows)")
+    elif n.op == "Gemm":
+        if a.get("transA", 0) or not a.get("transB", 0) or \
+                float(a.get("alpha", 1.0)) != 1.0 or \
+                float(a.get("beta", 1.0)) != 1.0:
+            return ("non-normalised Gemm (run the legalize_layout pass: "
+                    "transB=1, alpha=beta=1)")
+    elif n.op in ("MaxPool", "AveragePool"):
+        pt, pl, pb, pr = a.get("pads", [0, 0, 0, 0])
+        if not (pt == pb == pl == pr):
+            return f"asymmetric pads {[pt, pl, pb, pr]}"
+        ks = a.get("kernel_shape", [1, 1])
+        st = a.get("strides", [1, 1])
+        if ks[0] != ks[1] or st[0] != st[1]:
+            return f"non-square kernel {ks} / strides {st}"
+        if n.op == "AveragePool" and pt != 0 and \
+                not a.get("count_include_pad", 0):
+            return ("padded AveragePool with count_include_pad=0 (the "
+                    "engine's PDP divides by the full window)")
+    elif n.op == "Add":
+        init = [t for t in n.inputs if g.is_initializer(t)]
+        if init:
+            return (f"constant operand {init[0]!r} did not fold (constant "
+                    f"adds fold into a preceding conv/fc only)")
+    elif n.op == "Concat":
+        if a.get("axis", 1) not in (0, 1):
+            return f"axis={a['axis']} (only channel concat is free on NVDLA)"
+    return None
+
+
+def partition(g: FrontendGraph) -> FrontendGraph:
+    """Validate that the graph is one engine-lowerable partition."""
+    bad: List[Tuple[FrontendNode, str]] = []
+    for n in g.nodes:
+        if n.op not in LOWERABLE_OPS:
+            bad.append((n, _HINTS.get(n.op, "no engine unit for this op")))
+        else:
+            violation = _constraint(g, n)
+            if violation is not None:
+                bad.append((n, violation))
+    if not bad:
+        return g
+
+    # partition summary: how the node list splits around unsupported nodes
+    bad_set = {id(n) for n, _ in bad}
+    segments, run = [], 0
+    for n in g.nodes:
+        if id(n) in bad_set:
+            if run:
+                segments.append(run)
+            run = 0
+        else:
+            run += 1
+    if run:
+        segments.append(run)
+    node, why = bad[0]
+    others = ", ".join(f"{g.node_label(n)}({n.op})" for n, _ in bad[1:])
+    raise UnsupportedOpError(
+        node.op, g.node_label(node), LOWERABLE_OPS,
+        detail=f"{why}.  Graph partitions into {len(segments)} supported "
+               f"segment(s) of {segments or [0]} node(s) around "
+               f"{len(bad)} unsupported node(s)"
+               + (f" (also: {others})" if others else ""))

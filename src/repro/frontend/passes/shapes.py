@@ -1,0 +1,201 @@
+"""Shape inference + validation over every tensor in a FrontendGraph.
+
+Fills ``g.shapes`` (tensor name -> tuple): feature maps are (C, H, W)
+3-tuples — the engine's single-image layout, the ONNX batch dim having been
+stripped by the importer — flattened vectors are 1-tuples.  Every mismatch
+raises a descriptive :class:`FrontendError` naming the node, so a malformed
+model fails here instead of deep inside tracegen/VP.
+
+Ops the vocabulary doesn't know get best-effort passthrough (first input's
+shape) so that the *partitioner* — not this pass — owns the unsupported-op
+error message.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.frontend.ir import FrontendError, FrontendGraph, FrontendNode
+
+
+def _err(g: FrontendGraph, n: FrontendNode, msg: str) -> FrontendError:
+    return FrontendError(f"{g.name}: {n.op} node {g.node_label(n)!r}: {msg}")
+
+
+def _feature(g, n, shape, what) -> Tuple[int, int, int]:
+    if len(shape) != 3:
+        raise _err(g, n, f"{what} must be a (C, H, W) feature map, got "
+                         f"shape {tuple(shape)}")
+    return shape
+
+
+def _pool_out(g, n, shape, attrs) -> Tuple[int, int, int]:
+    c, h, w = _feature(g, n, shape, "input")
+    ks = attrs.get("kernel_shape")
+    if not ks or len(ks) != 2:
+        raise _err(g, n, f"kernel_shape must be 2-D, got {ks!r}")
+    st = attrs.get("strides", [1, 1])
+    pt, pl, pb, pr = attrs.get("pads", [0, 0, 0, 0])
+    p = (h + pt + pb - ks[0]) // st[0] + 1
+    q = (w + pl + pr - ks[1]) // st[1] + 1
+    if p < 1 or q < 1:
+        raise _err(g, n, f"kernel {ks} stride {st} pads {[pt, pl, pb, pr]} "
+                         f"produce empty output ({p}x{q}) on {h}x{w} input")
+    return c, p, q
+
+
+def infer_shapes(g: FrontendGraph) -> FrontendGraph:
+    g.check_ssa()
+    shapes = {name: tuple(arr.shape) for name, arr in g.initializers.items()}
+    for name, shape in g.inputs:
+        shapes[name] = tuple(shape)
+
+    for n in g.nodes:
+        ins = [t for t in n.inputs if t]
+        for t in ins:
+            if t not in shapes:
+                raise _err(g, n, f"input tensor {t!r} has no shape "
+                                 f"(produced by an unshaped node?)")
+        a = n.attrs
+        if n.op == "Conv":
+            c, h, w = _feature(g, n, shapes[ins[0]], "input")
+            if not g.is_initializer(ins[1]):
+                raise _err(g, n, f"weight {ins[1]!r} must be a constant "
+                                 f"initializer (dynamic weights cannot be "
+                                 f"preloaded into the DRAM image)")
+            wshape = shapes[ins[1]]
+            if len(wshape) != 4:
+                raise _err(g, n, f"weight must be (K, C/g, R, S), got "
+                                 f"{wshape}")
+            k_out, cin_g, r, s = wshape
+            group = a.get("group", 1)
+            if cin_g * group != c:
+                raise _err(g, n, f"weight expects {cin_g * group} input "
+                                 f"channels (C/g={cin_g} x group={group}), "
+                                 f"input has {c}")
+            ks = a.get("kernel_shape", [r, s])
+            if tuple(ks) != (r, s):
+                raise _err(g, n, f"kernel_shape {ks} disagrees with weight "
+                                 f"spatial dims ({r}, {s})")
+            if len(ins) > 2 and shapes[ins[2]] not in ((k_out,), (1, k_out)):
+                raise _err(g, n, f"bias shape {shapes[ins[2]]} != ({k_out},)")
+            st = a.get("strides", [1, 1])
+            pt, pl, pb, pr = a.get("pads", [0, 0, 0, 0])
+            p = (h + pt + pb - r) // st[0] + 1
+            q = (w + pl + pr - s) // st[1] + 1
+            if p < 1 or q < 1:
+                raise _err(g, n, f"kernel ({r},{s}) stride {st} pads "
+                                 f"{[pt, pl, pb, pr]} produce empty output "
+                                 f"on {h}x{w} input")
+            out = (k_out, p, q)
+        elif n.op == "Gemm":
+            f_in = int(np.prod(shapes[ins[0]]))
+            if not g.is_initializer(ins[1]):
+                raise _err(g, n, f"weight {ins[1]!r} must be a constant "
+                                 f"initializer")
+            wshape = shapes[ins[1]]
+            if len(wshape) != 2:
+                raise _err(g, n, f"weight must be 2-D, got {wshape}")
+            if a.get("transA", 0):
+                raise _err(g, n, "transA=1 is not supported (activations "
+                                 "are vectors)")
+            k_out, f_w = (wshape if a.get("transB", 0) else wshape[::-1])
+            if f_w != f_in:
+                raise _err(g, n, f"weight contracts over {f_w} features, "
+                                 f"input {ins[0]!r} flattens to {f_in} "
+                                 f"(shape {shapes[ins[0]]})")
+            if len(ins) > 2:
+                bshape = shapes[ins[2]]
+                if bshape not in ((k_out,), (1, k_out)):
+                    raise _err(g, n, f"bias shape {bshape} != ({k_out},)")
+            out = (k_out,)
+        elif n.op == "MatMul":
+            # pre-canonicalize form; same contract as Gemm transB=0
+            f_in = int(np.prod(shapes[ins[0]]))
+            wshape = shapes[ins[1]]
+            if len(wshape) != 2 or wshape[0] != f_in:
+                raise _err(g, n, f"operand shapes {shapes[ins[0]]} x "
+                                 f"{wshape} do not contract")
+            out = (wshape[1],)
+        elif n.op in ("MaxPool", "AveragePool"):
+            out = _pool_out(g, n, shapes[ins[0]], a)
+        elif n.op == "GlobalAveragePool":
+            c, _, _ = _feature(g, n, shapes[ins[0]], "input")
+            out = (c, 1, 1)
+        elif n.op == "Add":
+            s0, s1 = shapes[ins[0]], shapes[ins[1]]
+            if s0 != s1:
+                # constant bias broadcast (folded away later) is tolerated
+                n_init = sum(g.is_initializer(t) for t in ins[:2])
+                squeeze = tuple(d for d in s1 if d != 1)
+                if not (n_init == 1 and (squeeze == (s0[0],) or squeeze == ()
+                                         or squeeze == tuple(
+                                             d for d in s0 if d != 1))):
+                    raise _err(g, n, f"operand shapes differ: {s0} vs {s1} "
+                                     f"(residual adds need identical "
+                                     f"shapes)")
+            out = s0 if not g.is_initializer(ins[0]) else s1
+        elif n.op in ("Mul", "Div"):
+            s0, s1 = shapes[ins[0]], shapes[ins[1]]
+            act = s1 if g.is_initializer(ins[0]) else s0
+            out = act
+        elif n.op == "BatchNormalization":
+            c = _feature(g, n, shapes[ins[0]], "input")[0]
+            for t in ins[1:5]:
+                if tuple(d for d in shapes[t] if d != 1) != (c,):
+                    raise _err(g, n, f"parameter {t!r} has shape "
+                                     f"{shapes[t]}, expected ({c},) to "
+                                     f"match {c} channels")
+            out = shapes[ins[0]]
+        elif n.op == "Relu":
+            out = shapes[ins[0]]
+        elif n.op == "Flatten":
+            out = (int(np.prod(shapes[ins[0]])),)
+        elif n.op == "Reshape":
+            total = int(np.prod(shapes[ins[0]]))
+            if len(ins) > 1:
+                if not g.is_initializer(ins[1]):
+                    raise _err(g, n, f"shape operand {ins[1]!r} must be "
+                                     f"constant")
+                target = [int(d) for d in g.initializers[ins[1]].ravel()]
+                if len(target) > 1 and target[0] == 1:
+                    target = target[1:]    # strip the batch dim, like inputs
+                if target.count(-1) > 1:
+                    raise _err(g, n, f"reshape target {target} has more "
+                                     f"than one -1")
+                known = int(np.prod([d for d in target if d != -1])) or 1
+                if -1 in target:
+                    if total % known:
+                        raise _err(g, n, f"reshape to {target} incompatible "
+                                         f"with {total} elements")
+                    target = [total // known if d == -1 else d
+                              for d in target]
+                if int(np.prod(target)) != total:
+                    raise _err(g, n, f"reshape to {target} incompatible "
+                                     f"with {total} elements")
+                out = tuple(target)
+            else:
+                out = (total,)
+        elif n.op == "Concat":
+            axis = a.get("axis", 1)
+            if axis not in (0, 1):
+                raise _err(g, n, f"only channel concat is supported "
+                                 f"(axis 1 in NCHW), got axis={axis}")
+            cs = [shapes[t] for t in ins]
+            if any(len(c) != 3 for c in cs) or \
+                    any(c[1:] != cs[0][1:] for c in cs):
+                raise _err(g, n, f"operands must be (C, H, W) maps with "
+                                 f"equal spatial dims, got {cs}")
+            out = (sum(c[0] for c in cs),) + cs[0][1:]
+        elif n.op in ("Identity", "Dropout", "Softmax"):
+            out = shapes[ins[0]]
+        else:
+            # unknown op: best-effort passthrough; the partitioner owns the
+            # descriptive rejection
+            out = shapes[ins[0]] if ins else ()
+        shapes[n.output] = tuple(out)
+
+    g.shapes = shapes
+    return g

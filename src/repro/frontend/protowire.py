@@ -1,0 +1,202 @@
+"""Minimal protobuf *wire-format* codec (no generated code, no deps).
+
+ONNX models are protobuf messages, but depending on the ``onnx``/``protobuf``
+packages would make the frontend's core path optional-dependency-shaped.  The
+wire format itself is tiny — varints plus length-delimited submessages — so
+the ONNX importer decodes it directly with this module and stays stdlib+numpy
+only.  The ``onnx`` package remains an optional ``[frontend]`` extra used for
+cross-validation tests and for exporting fixtures from real frameworks.
+
+Decode: :class:`Msg` lazily indexes ``field_number -> [raw values]`` for one
+message buffer; typed accessors (``ints``/``floats``/``str_``/``msgs``)
+handle both packed and repeated encodings.  Encode: ``enc_*`` helpers build
+messages bottom-up (used by the committed fixture generator and the tests'
+round-trip checks).
+
+Wire types: 0 varint · 1 fixed64 · 2 length-delimited · 5 fixed32.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, Iterator, List, Tuple
+
+
+class WireError(ValueError):
+    """Malformed wire data (truncated varint, bad wire type, overrun)."""
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def read_varint(buf: bytes, pos: int) -> Tuple[int, int]:
+    """Decode one varint at ``pos``; returns (value, next_pos)."""
+    result = 0
+    shift = 0
+    while True:
+        if pos >= len(buf):
+            raise WireError(f"truncated varint at byte {pos}")
+        b = buf[pos]
+        pos += 1
+        result |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return result, pos
+        shift += 7
+        if shift > 63:
+            raise WireError(f"varint longer than 10 bytes at byte {pos}")
+
+
+def to_signed64(v: int) -> int:
+    """Reinterpret an unsigned varint as two's-complement int64."""
+    return v - (1 << 64) if v >= (1 << 63) else v
+
+
+def iter_fields(buf: bytes) -> Iterator[Tuple[int, int, bytes]]:
+    """Yield (field_number, wire_type, raw) triples for one message buffer.
+
+    To keep one value shape, varints are yielded as their minimal
+    little-endian byte string (re-parsed by the typed accessors);
+    fixed/length-delimited fields yield their payload bytes.
+    """
+    pos = 0
+    n = len(buf)
+    while pos < n:
+        tag, pos = read_varint(buf, pos)
+        field, wt = tag >> 3, tag & 7
+        if field == 0:
+            raise WireError(f"field number 0 at byte {pos}")
+        if wt == 0:
+            v, pos = read_varint(buf, pos)
+            yield field, wt, v.to_bytes((v.bit_length() + 7) // 8 or 1, "little")
+        elif wt == 1:
+            if pos + 8 > n:
+                raise WireError(f"truncated fixed64 at byte {pos}")
+            yield field, wt, buf[pos:pos + 8]
+            pos += 8
+        elif wt == 2:
+            ln, pos = read_varint(buf, pos)
+            if pos + ln > n:
+                raise WireError(f"length-delimited field {field} overruns "
+                                f"buffer ({ln} bytes at {pos}, have {n - pos})")
+            yield field, wt, buf[pos:pos + ln]
+            pos += ln
+        elif wt == 5:
+            if pos + 4 > n:
+                raise WireError(f"truncated fixed32 at byte {pos}")
+            yield field, wt, buf[pos:pos + 4]
+            pos += 4
+        else:
+            raise WireError(f"unsupported wire type {wt} (field {field}); "
+                            f"groups are not part of proto3")
+
+
+class Msg:
+    """One decoded message: ``field_number -> [(wire_type, payload)]``."""
+
+    def __init__(self, buf: bytes):
+        self._f: Dict[int, List[Tuple[int, bytes]]] = {}
+        for field, wt, payload in iter_fields(buf):
+            self._f.setdefault(field, []).append((wt, payload))
+
+    def has(self, field: int) -> bool:
+        return field in self._f
+
+    # -- scalar accessors ----------------------------------------------------
+    def int_(self, field: int, default: int = 0) -> int:
+        """Last int64/enum value of ``field`` (proto3 last-one-wins)."""
+        vals = self.ints(field)
+        return vals[-1] if vals else default
+
+    def ints(self, field: int) -> List[int]:
+        """All int64 values: repeated varints and/or packed payloads."""
+        out: List[int] = []
+        for wt, payload in self._f.get(field, []):
+            if wt == 0:
+                out.append(to_signed64(int.from_bytes(payload, "little")))
+            elif wt == 2:                      # packed repeated varints
+                pos = 0
+                while pos < len(payload):
+                    v, pos = read_varint(payload, pos)
+                    out.append(to_signed64(v))
+            else:
+                raise WireError(f"field {field}: wire type {wt} is not an int")
+        return out
+
+    def float_(self, field: int, default: float = 0.0) -> float:
+        vals = self.floats(field)
+        return vals[-1] if vals else default
+
+    def floats(self, field: int) -> List[float]:
+        """All float32 values: repeated fixed32 and/or packed payloads."""
+        out: List[float] = []
+        for wt, payload in self._f.get(field, []):
+            if wt == 5:
+                out.append(struct.unpack("<f", payload)[0])
+            elif wt == 2:                      # packed repeated floats
+                if len(payload) % 4:
+                    raise WireError(f"field {field}: packed float payload "
+                                    f"of {len(payload)} bytes")
+                out.extend(struct.unpack(f"<{len(payload) // 4}f", payload))
+            else:
+                raise WireError(f"field {field}: wire type {wt} is not a float")
+        return out
+
+    def bytes_(self, field: int, default: bytes = b"") -> bytes:
+        vals = self._f.get(field, [])
+        return vals[-1][1] if vals else default
+
+    def bytes_list(self, field: int) -> List[bytes]:
+        return [p for _, p in self._f.get(field, [])]
+
+    def str_(self, field: int, default: str = "") -> str:
+        return self.bytes_(field, default.encode()).decode("utf-8")
+
+    def strs(self, field: int) -> List[str]:
+        return [p.decode("utf-8") for p in self.bytes_list(field)]
+
+    def msg(self, field: int) -> "Msg":
+        return Msg(self.bytes_(field))
+
+    def msgs(self, field: int) -> List["Msg"]:
+        return [Msg(p) for p in self.bytes_list(field)]
+
+
+# ---------------------------------------------------------------------------
+# encode (fixture generation + round-trip tests)
+# ---------------------------------------------------------------------------
+def enc_varint(v: int) -> bytes:
+    if v < 0:
+        v += 1 << 64                           # two's-complement int64
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def enc_tag(field: int, wt: int) -> bytes:
+    return enc_varint((field << 3) | wt)
+
+
+def enc_int(field: int, v: int) -> bytes:
+    return enc_tag(field, 0) + enc_varint(v)
+
+
+def enc_float(field: int, v: float) -> bytes:
+    return enc_tag(field, 5) + struct.pack("<f", v)
+
+
+def enc_bytes(field: int, payload: bytes) -> bytes:
+    return enc_tag(field, 2) + enc_varint(len(payload)) + payload
+
+
+def enc_str(field: int, s: str) -> bytes:
+    return enc_bytes(field, s.encode("utf-8"))
+
+
+def enc_packed_ints(field: int, vals) -> bytes:
+    return enc_bytes(field, b"".join(enc_varint(v) for v in vals))

@@ -1,0 +1,139 @@
+"""Float32 numpy reference evaluator for :class:`FrontendGraph` ops.
+
+Three consumers share these semantics:
+  * the constant-folding pass (evaluating nodes whose inputs are all
+    initializers),
+  * pass unit tests (e.g. proving BatchNorm folding is numerically exact by
+    evaluating a graph before and after the pass),
+  * importer sanity checks.
+
+This is *frontend* float32 semantics — the post-import fp32 model a user
+would run in their framework — not the engine oracle (``core/refops`` stays
+the int8/bf16 authority the executors are tested against).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.frontend.ir import (FrontendGraph, FrontendNode, FrontendError,
+                               UnsupportedOpError)
+
+
+def _conv(x, w, b, strides, pads, group):
+    cin, h, win = x.shape
+    k_out, cin_g, r, s = w.shape
+    st, (pt, pl, pb, pr) = strides[0], pads
+    xp = np.pad(x, ((0, 0), (pt, pb), (pl, pr)))
+    p = (h + pt + pb - r) // st + 1
+    q = (win + pl + pr - s) // st + 1
+    out = np.empty((k_out, p, q), np.float32)
+    kg = k_out // group
+    for g in range(group):
+        xg = xp[g * cin_g:(g + 1) * cin_g]
+        cols = np.empty((cin_g, r, s, p, q), np.float32)
+        for rr in range(r):
+            for ss in range(s):
+                cols[:, rr, ss] = xg[:, rr:rr + st * p:st, ss:ss + st * q:st]
+        wg = w[g * kg:(g + 1) * kg].reshape(kg, -1)
+        out[g * kg:(g + 1) * kg] = \
+            (wg @ cols.reshape(cin_g * r * s, p * q)).reshape(kg, p, q)
+    return out + b.reshape(-1, 1, 1)
+
+
+def _pool(x, kernel, strides, pads, mode):
+    c, h, w = x.shape
+    (r, s), st, (pt, pl, pb, pr) = kernel, strides[0], pads
+    fill = -np.inf if mode == "max" else 0.0
+    xp = np.pad(x, ((0, 0), (pt, pb), (pl, pr)), constant_values=fill)
+    p = (h + pt + pb - r) // st + 1
+    q = (w + pl + pr - s) // st + 1
+    acc = np.full((c, p, q), fill, np.float32)
+    for rr in range(r):
+        for ss in range(s):
+            win = xp[:, rr:rr + st * p:st, ss:ss + st * q:st]
+            acc = np.maximum(acc, win) if mode == "max" else acc + win
+    return acc if mode == "max" else acc / (r * s)
+
+
+def eval_node(node: FrontendNode, inputs: List[np.ndarray]) -> np.ndarray:
+    """Evaluate one node on concrete float32 inputs (frontend semantics)."""
+    op, a = node.op, node.attrs
+    x = [np.asarray(v, np.float32) for v in inputs]
+    if op == "Conv":
+        w = x[1]
+        b = x[2] if len(x) > 2 else np.zeros(w.shape[0], np.float32)
+        out = _conv(x[0], w, b, a.get("strides", [1, 1]),
+                    a.get("pads", [0, 0, 0, 0]), a.get("group", 1))
+    elif op in ("Gemm", "MatMul"):
+        w = x[1]
+        if op == "MatMul" or not a.get("transB", 0):
+            w = w.T
+        out = float(a.get("alpha", 1.0)) * (w @ x[0].reshape(-1))
+        if len(x) > 2:
+            out = out + float(a.get("beta", 1.0)) * x[2]
+    elif op == "Relu":
+        out = np.maximum(x[0], 0)
+    elif op == "MaxPool":
+        out = _pool(x[0], a["kernel_shape"], a.get("strides", [1, 1]),
+                    a.get("pads", [0, 0, 0, 0]), "max")
+    elif op == "AveragePool":
+        out = _pool(x[0], a["kernel_shape"], a.get("strides", [1, 1]),
+                    a.get("pads", [0, 0, 0, 0]), "avg")
+    elif op == "GlobalAveragePool":
+        out = x[0].mean(axis=(1, 2), keepdims=True)
+    elif op == "Add":
+        out = x[0] + x[1].reshape(x[0].shape if x[1].size == x[0].size
+                                  else x[1].shape)
+    elif op == "Mul":
+        out = x[0] * x[1]
+    elif op == "Div":
+        out = x[0] / x[1]
+    elif op == "BatchNormalization":
+        gamma, beta, mean, var = (v.reshape(-1, 1, 1) for v in x[1:5])
+        eps = float(a.get("epsilon", 1e-5))
+        out = gamma * (x[0] - mean) / np.sqrt(var + eps) + beta
+    elif op in ("Flatten", "Reshape"):
+        out = x[0].reshape(-1)
+    elif op == "Concat":
+        out = np.concatenate(x, axis=0)
+    elif op in ("Identity", "Dropout"):
+        out = x[0]
+    elif op == "Softmax":
+        e = np.exp(x[0] - x[0].max())
+        out = e / e.sum()
+    else:
+        raise UnsupportedOpError(op, node.name, _EVAL_OPS,
+                                 detail="no reference evaluation")
+    return np.asarray(out, np.float32)
+
+
+_EVAL_OPS = ("Conv", "Gemm", "MatMul", "Relu", "MaxPool", "AveragePool",
+             "GlobalAveragePool", "Add", "Mul", "Div", "BatchNormalization",
+             "Flatten", "Reshape", "Concat", "Identity", "Dropout", "Softmax")
+
+
+def evaluate(g: FrontendGraph, feed: Dict[str, np.ndarray]
+             ) -> Dict[str, np.ndarray]:
+    """Forward-evaluate the whole graph; returns every tensor's value."""
+    vals: Dict[str, np.ndarray] = {k: np.asarray(v, np.float32)
+                                   for k, v in g.initializers.items()}
+    for name, shape in g.inputs:
+        if name not in feed:
+            raise FrontendError(f"evaluate: missing graph input {name!r}")
+        x = np.asarray(feed[name], np.float32)
+        if x.shape != tuple(shape):
+            raise FrontendError(f"evaluate: input {name!r} has shape "
+                                f"{x.shape}, graph declares {tuple(shape)}")
+        vals[name] = x
+    for node in g.nodes:
+        ins = []
+        for t in node.inputs:
+            if t == "":                    # optional ONNX input slot
+                continue
+            ins.append(vals[t])
+        out = eval_node(node, ins)
+        vals[node.output] = out
+    return vals

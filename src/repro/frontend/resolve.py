@@ -1,0 +1,48 @@
+"""resolve_net: one spec grammar for "which model?" across every entry point.
+
+Before the frontend existed, the CLI surfaces (``repro.serve``,
+``benchmarks.run``) could only name nets out of ``graph.BUILDERS``.  This
+resolver accepts either:
+
+  * a builder name   — ``"lenet5"`` -> ``graph.BUILDERS["lenet5"]()`` with
+    ``init_params(seed)`` weights (the historical behaviour), or
+  * a model file     — ``"models/net.onnx"`` / ``"net.json"`` ->
+    ``repro.frontend.load`` (importer + pass pipeline + lowering).
+
+so every tool that compiles a net gains frontend support by switching one
+lookup.  Ambiguity is impossible: a spec containing a path separator or an
+importer suffix is a file, anything else must be a builder name.
+"""
+
+from __future__ import annotations
+
+import pathlib
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.graph import BUILDERS, NetGraph
+from repro.frontend import IMPORTERS, load
+from repro.frontend.ir import FrontendError
+
+
+def _looks_like_path(spec: str) -> bool:
+    suffixes = {s for imp in IMPORTERS.values() for s in imp.suffixes}
+    return ("/" in spec or "\\" in spec
+            or pathlib.Path(spec).suffix.lower() in suffixes)
+
+
+def resolve_net(spec: str, seed: int = 0
+                ) -> Tuple[NetGraph, Dict[str, Dict[str, np.ndarray]]]:
+    """Resolve a builder name or model-file path to (NetGraph, params)."""
+    if spec in BUILDERS:
+        g = BUILDERS[spec]()
+        return g, g.init_params(seed)
+    if _looks_like_path(spec):
+        m = load(spec)
+        return m.graph, m.params
+    raise FrontendError(
+        f"cannot resolve net {spec!r}: not a registered builder "
+        f"({', '.join(sorted(BUILDERS))}) and not a model file path "
+        f"(suffixes: "
+        f"{', '.join(sorted(s for i in IMPORTERS.values() for s in i.suffixes))})")

@@ -2,6 +2,11 @@
 
 Every module implements the same functional protocol (see transformer.py):
 param_shapes / init_params / loss / prefill / init_cache / decode_step.
+
+This registry covers the *LM substrate* only.  Engine-side CNNs resolve
+elsewhere: hand-written builders in ``repro.core.graph.BUILDERS``, imported
+models (ONNX / declarative JSON) via ``repro.frontend`` — with
+``repro.frontend.resolve.resolve_net`` as the one lookup that accepts both.
 """
 
 from __future__ import annotations

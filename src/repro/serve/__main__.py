@@ -1,31 +1,53 @@
-"""CLI: serve saved artifact bundles over HTTP.
+"""CLI: serve saved artifact bundles — or import+compile models — over HTTP.
 
     PYTHONPATH=src python -m repro.serve --artifacts lenet5_bundle \
         --artifacts resnet18_bundle --backend baremetal --port 8000 \
         --max-queue 256 --max-batch 8 --max-wait-us 200
 
+    # no pre-compiled bundle needed: builder names and model files
+    # (ONNX / repro-net-v1 JSON) compile on startup via repro.frontend
+    PYTHONPATH=src python -m repro.serve --model lenet5 \
+        --model examples/models/tinynet.json
+
 Each ``--artifacts`` directory is an ``Artifacts.save`` bundle; it becomes
 resident under its manifest ``graph_name`` (override one with
-``--artifacts dir:name``).  Every net gets its own dispatcher thread;
-``--max-queue`` bounds each queue (admission control -> HTTP 429).
+``--artifacts dir:name``).  ``--model`` accepts anything
+``repro.frontend.resolve.resolve_net`` does (builder name or model file; an
+unsupported model fails here at startup, with the frontend's descriptive
+error).  Every net gets its own dispatcher thread; ``--max-queue`` bounds
+each queue (admission control -> HTTP 429).
 """
 
 from __future__ import annotations
 
 import argparse
 
-from repro.core.pipeline import Artifacts
+from repro.core.pipeline import Artifacts, CompilerPipeline
 from repro.runtime import Session, SchedulerConfig
 from repro.serve.http import serve_forever
+
+
+def _split_name(spec: str) -> tuple:
+    """``SPEC[:NAME]`` — the trailing ``:NAME`` must look like a bare name
+    (no path separators / suffix dots), so ``dir/net.onnx`` stays a path."""
+    head, sep, tail = spec.rpartition(":")
+    if sep and tail and "/" not in tail and "\\" not in tail \
+            and "." not in tail:
+        return head, tail
+    return spec, None
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         prog="python -m repro.serve",
         description="multi-tenant HTTP serving front-end over repro.runtime")
-    ap.add_argument("--artifacts", action="append", required=True,
+    ap.add_argument("--artifacts", action="append", default=[],
                     metavar="DIR[:NAME]",
                     help="saved Artifacts bundle to serve (repeatable)")
+    ap.add_argument("--model", action="append", default=[],
+                    metavar="SPEC[:NAME]",
+                    help="builder name or ONNX/JSON model file to import, "
+                         "compile and serve (repeatable)")
     ap.add_argument("--backend", default="baremetal",
                     help="executor backend for every net (default: baremetal)")
     ap.add_argument("--host", default="127.0.0.1")
@@ -41,6 +63,8 @@ def main(argv=None) -> None:
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-request access logs")
     args = ap.parse_args(argv)
+    if not args.artifacts and not args.model:
+        ap.error("nothing to serve: pass --artifacts and/or --model")
 
     cfg = SchedulerConfig(max_batch=args.max_batch,
                           max_wait_us=args.max_wait_us,
@@ -50,6 +74,13 @@ def main(argv=None) -> None:
         path, _, name = spec.partition(":")
         loaded = ses.load(Artifacts.load(path), name=name or None)
         print(f"[repro.serve] resident: {loaded} <- {path}")
+    for spec in args.model:
+        from repro.frontend.resolve import resolve_net
+        src, name = _split_name(spec)
+        g, params = resolve_net(src)
+        art = CompilerPipeline(g, params=params).run()
+        loaded = ses.load(art, name=name or None)
+        print(f"[repro.serve] resident: {loaded} <- compiled {src}")
     serve_forever(ses, host=args.host, port=args.port,
                   verbose=not args.quiet)
 

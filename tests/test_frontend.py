@@ -1,0 +1,490 @@
+"""Frontend tests: importers, pass pipeline, lowering, end-to-end serving.
+
+Layers of coverage, mirroring the subsystem's structure:
+  * per-pass unit tests — every pass individually invoked via ``run_pass``,
+  * golden imports — the committed LeNet-5 ONNX/JSON fixtures lower to a
+    NetGraph structurally equal to the hand-written ``graph.lenet5()``
+    builder (the ONNX fixture also parameter-equal to ``init_params(0)``),
+  * NetGraph.validate + the CompilerPipeline entry gate,
+  * end-to-end — a net with NO builder (tinynet.json) imports, compiles,
+    matches the VP oracle bit-exactly on the bare-metal executor, and
+    answers inference through ``ServeClient``,
+  * optional onnx cross-validation (``importorskip``): the protowire-encoded
+    fixture is a spec-conformant ModelProto the real onnx package accepts.
+"""
+
+import copy
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import frontend
+from repro.core import graph as G
+from repro.core.pipeline import CompilerPipeline
+from repro.core.vp import VirtualPlatform
+from repro.frontend import refeval
+from repro.frontend.ir import (FrontendError, FrontendGraph, FrontendNode,
+                               UnsupportedOpError)
+from repro.frontend.passes import DEFAULT_PIPELINE, PASSES, run_pass
+from repro.frontend.resolve import resolve_net
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "examples" / "models"
+
+
+# ---------------------------------------------------------------------------
+# FrontendGraph construction helpers
+# ---------------------------------------------------------------------------
+def _n(name, op, inputs, outputs, **attrs):
+    return FrontendNode(name=name, op=op, inputs=list(inputs),
+                        outputs=list(outputs), attrs=attrs)
+
+
+def _conv_bn_graph(relu=True):
+    """data -> Conv -> BatchNormalization [-> Relu], all params constant."""
+    rng = np.random.default_rng(3)
+    g = FrontendGraph(name="cb", inputs=[("data", (3, 6, 6))],
+                      outputs=["out"])
+    g.initializers = {
+        "w": rng.normal(0, 0.5, (4, 3, 3, 3)).astype(np.float32),
+        "b": rng.normal(0, 0.1, (4,)).astype(np.float32),
+        "gamma": rng.uniform(0.5, 1.5, (4,)).astype(np.float32),
+        "beta": rng.normal(0, 0.2, (4,)).astype(np.float32),
+        "mean": rng.normal(0, 0.3, (4,)).astype(np.float32),
+        "var": rng.uniform(0.2, 2.0, (4,)).astype(np.float32),
+    }
+    g.nodes = [
+        _n("conv", "Conv", ["data", "w", "b"], ["cy"],
+           kernel_shape=[3, 3], strides=[1, 1], pads=[1, 1, 1, 1]),
+        _n("bn", "BatchNormalization",
+           ["cy", "gamma", "beta", "mean", "var"], ["by"], epsilon=1e-5),
+    ]
+    if relu:
+        g.nodes.append(_n("relu", "Relu", ["by"], ["out"]))
+    else:
+        g.nodes[-1].outputs = ["out"]
+    return g.check_ssa()
+
+
+# ---------------------------------------------------------------------------
+# per-pass unit tests
+# ---------------------------------------------------------------------------
+class TestPasses:
+    def test_registry_and_unknown_pass(self):
+        assert set(DEFAULT_PIPELINE) <= set(PASSES)
+        with pytest.raises(ValueError, match="unknown pass"):
+            run_pass(_conv_bn_graph(), "not_a_pass")
+
+    def test_canonicalize_splices_identity_and_trailing_softmax(self):
+        g = FrontendGraph(name="c", inputs=[("data", (2, 4, 4))],
+                          outputs=["out"])
+        g.initializers["w"] = np.zeros((2, 2, 1, 1), np.float32)
+        g.initializers["b"] = np.zeros((2,), np.float32)
+        g.nodes = [
+            _n("id", "Identity", ["data"], ["idy"]),
+            _n("conv", "Conv", ["idy", "w", "b"], ["cy"],
+               kernel_shape=[1, 1], strides=[1, 1], pads=[0, 0, 0, 0]),
+            _n("drop", "Dropout", ["cy"], ["dy"], ratio=0.5),
+            _n("sm", "Softmax", ["dy"], ["out"]),
+        ]
+        g.check_ssa()
+        g = run_pass(g, "canonicalize")
+        assert [n.op for n in g.nodes] == ["Conv"]
+        assert g.nodes[0].inputs[0] == "data"   # Identity spliced through
+        assert g.outputs == [g.nodes[0].output]  # Softmax dropped
+
+    def test_canonicalize_matmul_to_gemm(self):
+        g = FrontendGraph(name="mm", inputs=[("data", (8,))],
+                          outputs=["out"])
+        g.initializers["w"] = np.ones((8, 3), np.float32)
+        g.nodes = [_n("mm", "MatMul", ["data", "w"], ["out"])]
+        g.check_ssa()
+        g = run_pass(g, "canonicalize")
+        assert g.nodes[0].op == "Gemm"
+        assert g.nodes[0].attrs.get("transB", 0) == 0
+
+    def test_infer_shapes_fills_and_validates(self):
+        g = _conv_bn_graph()
+        g = run_pass(g, "infer_shapes")
+        assert g.shapes["cy"] == (4, 6, 6)
+        assert g.shapes["out"] == (4, 6, 6)
+
+    def test_infer_shapes_rejects_bad_weight_shape(self):
+        g = _conv_bn_graph()
+        g.initializers["w"] = np.zeros((4, 5, 3, 3), np.float32)  # C/g wrong
+        with pytest.raises(FrontendError, match="conv"):
+            run_pass(g, "infer_shapes")
+
+    def test_fold_constants(self):
+        g = FrontendGraph(name="fc", inputs=[("data", (2, 2, 2))],
+                          outputs=["out"])
+        g.initializers["a"] = np.full((2, 1, 1), 2.0, np.float32)
+        g.initializers["b"] = np.full((2, 1, 1), 3.0, np.float32)
+        g.nodes = [
+            _n("cadd", "Add", ["a", "b"], ["c"]),        # fully constant
+            _n("use", "Add", ["data", "c"], ["out"]),
+        ]
+        g.check_ssa()
+        g = run_pass(g, "fold_constants")
+        assert [n.name for n in g.nodes] == ["use"]
+        np.testing.assert_array_equal(g.initializers["c"],
+                                      np.full((2, 1, 1), 5.0, np.float32))
+
+    def test_fold_batchnorm_reduces_layers_and_is_exact_in_f32(self):
+        g = _conv_bn_graph(relu=False)
+        x = np.random.default_rng(11).normal(
+            0, 1, (3, 6, 6)).astype(np.float32)
+        want = refeval.evaluate(g, {"data": x})["out"]
+        before = len(g.nodes)
+        g = run_pass(g, "fold_batchnorm")
+        assert len(g.nodes) == before - 1          # BN gone
+        assert [n.op for n in g.nodes] == ["Conv"]
+        # folding rewires the graph output to the conv's tensor
+        got = refeval.evaluate(g, {"data": x})[g.outputs[0]]
+        # folding is computed in float64 and rounded once to f32: equal to
+        # the unfolded graph up to f32 reassociation error
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_fold_batchnorm_skips_multi_consumer_producer(self):
+        g = _conv_bn_graph(relu=False)
+        # a second consumer of the conv output makes folding unsound
+        g.nodes.append(_n("extra", "Relu", ["cy"], ["extra_out"]))
+        g = run_pass(g, "fold_batchnorm")
+        assert "BatchNormalization" in [n.op for n in g.nodes]
+
+    def test_fold_scales_mul_and_add(self):
+        g = FrontendGraph(name="fs", inputs=[("data", (2, 4, 4))],
+                          outputs=["out"])
+        rng = np.random.default_rng(5)
+        g.initializers = {
+            "w": rng.normal(0, 0.5, (3, 2, 1, 1)).astype(np.float32),
+            "b": rng.normal(0, 0.1, (3,)).astype(np.float32),
+            "s": rng.uniform(0.5, 2.0, (3, 1, 1)).astype(np.float32),
+            "c": rng.normal(0, 0.2, (3, 1, 1)).astype(np.float32),
+        }
+        g.nodes = [
+            _n("conv", "Conv", ["data", "w", "b"], ["cy"],
+               kernel_shape=[1, 1], strides=[1, 1], pads=[0, 0, 0, 0]),
+            _n("mul", "Mul", ["cy", "s"], ["my"]),
+            _n("add", "Add", ["my", "c"], ["out"]),
+        ]
+        g.check_ssa()
+        x = rng.normal(0, 1, (2, 4, 4)).astype(np.float32)
+        want = refeval.evaluate(g, {"data": x})["out"]
+        g = run_pass(g, "fold_scales")
+        assert [n.op for n in g.nodes] == ["Conv"]
+        got = refeval.evaluate(g, {"data": x})[g.outputs[0]]
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_fold_scales_div_by_zero_raises(self):
+        g = FrontendGraph(name="dz", inputs=[("data", (1, 2, 2))],
+                          outputs=["out"])
+        g.initializers = {"w": np.ones((1, 1, 1, 1), np.float32),
+                          "b": np.zeros((1,), np.float32),
+                          "z": np.zeros((1, 1, 1), np.float32)}
+        g.nodes = [
+            _n("conv", "Conv", ["data", "w", "b"], ["cy"],
+               kernel_shape=[1, 1], strides=[1, 1], pads=[0, 0, 0, 0]),
+            _n("div", "Div", ["cy", "z"], ["out"]),
+        ]
+        g.check_ssa()
+        with pytest.raises(FrontendError, match="zero"):
+            run_pass(g, "fold_scales")
+
+    def test_fuse_relu_tags_producer(self):
+        g = _conv_bn_graph(relu=True)
+        g = run_pass(g, "fold_batchnorm")
+        g = run_pass(g, "fuse_relu")
+        assert [n.op for n in g.nodes] == ["Conv"]
+        assert g.nodes[0].attrs["fused_relu"] is True
+
+    def test_unfusable_relu_rejected_by_partitioner(self):
+        # Relu directly on the graph input: no producer to fuse into
+        g = FrontendGraph(name="ur", inputs=[("data", (1, 2, 2))],
+                          outputs=["out"])
+        g.nodes = [_n("r", "Relu", ["data"], ["out"])]
+        g.check_ssa()
+        g = run_pass(g, "fuse_relu")       # no-op: nothing to fuse into
+        with pytest.raises(UnsupportedOpError, match="Relu") as ei:
+            run_pass(g, "partition")
+        assert "SDP epilogue" in str(ei.value)
+
+    def test_legalize_layout_erases_flatten_and_normalises_gemm(self):
+        g = FrontendGraph(name="ll", inputs=[("data", (2, 2, 2))],
+                          outputs=["out"])
+        rng = np.random.default_rng(9)
+        g.initializers = {"w": rng.normal(0, 1, (8, 3)).astype(np.float32)}
+        g.nodes = [
+            _n("flat", "Flatten", ["data"], ["fy"], axis=1),
+            _n("fc", "Gemm", ["fy", "w"], ["out"],
+               alpha=2.0, beta=1.0, transA=0, transB=0),
+        ]
+        g.check_ssa()
+        x = rng.normal(0, 1, (2, 2, 2)).astype(np.float32)
+        want = refeval.evaluate(g, {"data": x})["out"]
+        g = run_pass(g, "infer_shapes")
+        g = run_pass(g, "legalize_layout")
+        assert [n.op for n in g.nodes] == ["Gemm"]
+        a = g.nodes[0].attrs
+        assert (a["transB"], a["alpha"], a["beta"]) == (1, 1.0, 1.0)
+        assert g.initializers[g.nodes[0].inputs[1]].shape == (3, 8)
+        # flatten erased: the Gemm reads the (C, H, W) input directly
+        got = refeval.evaluate(g, {"data": x})["out"]
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_legalize_layout_rejects_real_reshape(self):
+        g = FrontendGraph(name="rr", inputs=[("data", (2, 4, 4))],
+                          outputs=["out"])
+        g.initializers["shape"] = np.asarray([1, 8, 2, 2], np.int64)
+        g.nodes = [_n("rs", "Reshape", ["data", "shape"], ["out"])]
+        g.check_ssa()
+        g = run_pass(g, "infer_shapes")
+        with pytest.raises(UnsupportedOpError, match="Reshape"):
+            run_pass(g, "legalize_layout")
+
+    def test_partitioner_error_names_everything(self):
+        g = FrontendGraph(name="pe", inputs=[("data", (1, 4, 4))],
+                          outputs=["out"])
+        g.nodes = [_n("sig", "Sigmoid", ["data"], ["out"])]
+        g.check_ssa()
+        with pytest.raises(UnsupportedOpError) as ei:
+            run_pass(g, "partition")
+        e = ei.value
+        assert e.op == "Sigmoid" and e.node == "sig"
+        assert "Conv" in e.supported and "Gemm" in e.supported
+        assert "supported ops after the pass pipeline" in str(e)
+
+    def test_partitioner_enforces_engine_constraints(self):
+        g = FrontendGraph(name="pc", inputs=[("data", (1, 8, 8))],
+                          outputs=["out"])
+        g.initializers = {"w": np.ones((1, 1, 3, 3), np.float32),
+                          "b": np.zeros((1,), np.float32)}
+        g.nodes = [_n("conv", "Conv", ["data", "w", "b"], ["out"],
+                      kernel_shape=[3, 3], strides=[1, 1],
+                      pads=[0, 0, 0, 0], dilations=[2, 2])]
+        g.check_ssa()
+        with pytest.raises(UnsupportedOpError, match="dilation"):
+            run_pass(g, "partition")
+
+
+# ---------------------------------------------------------------------------
+# golden imports
+# ---------------------------------------------------------------------------
+class TestGoldenImports:
+    @pytest.mark.parametrize("fixture", ["lenet5.onnx", "lenet5.json"])
+    def test_lenet5_structurally_equals_builder(self, fixture):
+        m = frontend.load(FIXTURES / fixture)
+        ref = G.lenet5()
+        assert [dataclasses.astuple(l) for l in m.graph.layers] == \
+               [dataclasses.astuple(l) for l in ref.layers]
+
+    def test_lenet5_onnx_parameters_equal_builder_init(self):
+        m = frontend.load(FIXTURES / "lenet5.onnx")
+        want = G.lenet5().init_params(0)
+        assert set(m.params) == set(want)
+        for lname in want:
+            for k in want[lname]:
+                np.testing.assert_array_equal(m.params[lname][k],
+                                              want[lname][k])
+
+    def test_source_digest_separates_cache_keys(self):
+        a = frontend.load(FIXTURES / "lenet5.onnx")
+        b = frontend.load(FIXTURES / "lenet5.json")
+        assert a.source_digest != b.source_digest
+        assert a.graph.source_digest == a.source_digest
+
+    def test_format_sniffing_and_forcing(self):
+        assert frontend.load(FIXTURES / "tinynet.json").source_format == "json"
+        assert frontend.load(FIXTURES / "lenet5.onnx",
+                             format="onnx").source_format == "onnx"
+        with pytest.raises(FrontendError, match="not found"):
+            frontend.load(FIXTURES / "nope.onnx")
+
+
+# ---------------------------------------------------------------------------
+# NetGraph.validate + pipeline entry gate
+# ---------------------------------------------------------------------------
+class TestNetGraphValidate:
+    def _ok(self):
+        g = G.NetGraph("v", (2, 8, 8))
+        g.layer(name="data", type="input", inputs=[])
+        g.layer(name="c1", type="conv", inputs=["data"], out_channels=4,
+                kernel=3, pad=1)
+        g.layer(name="fc", type="fc", inputs=["c1"], out_channels=3)
+        return g
+
+    def test_valid_graph_passes(self):
+        assert self._ok().validate() is not None
+        for b in G.BUILDERS.values():
+            b().validate()
+
+    def test_dangling_reference(self):
+        g = self._ok()
+        g.layers[1].inputs = ["ghost"]
+        with pytest.raises(ValueError, match="ghost"):
+            g.validate()
+
+    def test_duplicate_name(self):
+        g = self._ok()
+        g.layers.append(copy.deepcopy(g.layers[1]))
+        with pytest.raises(ValueError, match="duplicate"):
+            g.validate()
+
+    def test_input_must_be_named_data(self):
+        g = G.NetGraph("v", (2, 8, 8))
+        g.layer(name="x", type="input", inputs=[])
+        g.layer(name="fc", type="fc", inputs=["x"], out_channels=3)
+        with pytest.raises(ValueError, match="'data'"):
+            g.validate()
+
+    def test_add_shape_mismatch(self):
+        g = self._ok()
+        g.layer(name="c2", type="conv", inputs=["data"], out_channels=8,
+                kernel=3, pad=1)
+        g.layer(name="bad", type="add", inputs=["c1", "c2"])
+        with pytest.raises(ValueError, match="operand shapes differ"):
+            g.validate()
+
+    def test_window_does_not_fit(self):
+        g = G.NetGraph("v", (2, 4, 4))
+        g.layer(name="data", type="input", inputs=[])
+        g.layer(name="c1", type="conv", inputs=["data"], out_channels=4,
+                kernel=7)
+        with pytest.raises(ValueError, match="does not fit"):
+            g.validate()
+
+    def test_compiler_pipeline_validates_at_entry(self):
+        g = self._ok()
+        g.layers[1].inputs = ["ghost"]
+        with pytest.raises(ValueError, match="ghost"):
+            CompilerPipeline(g)
+
+
+# ---------------------------------------------------------------------------
+# resolve_net
+# ---------------------------------------------------------------------------
+class TestResolveNet:
+    def test_builder_name(self):
+        g, params = resolve_net("lenet5")
+        assert g.name == "lenet5" and "conv1" in params
+
+    def test_model_path(self):
+        g, params = resolve_net(str(FIXTURES / "tinynet.json"))
+        assert g.name == "tinynet" and g.source_digest
+
+    def test_unresolvable(self):
+        with pytest.raises(FrontendError, match="cannot resolve"):
+            resolve_net("not_a_model")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: no-builder net -> compile -> VP parity -> serve
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tinynet_art():
+    m = frontend.load(FIXTURES / "tinynet.json")
+    assert m.graph.name not in G.BUILDERS       # genuinely unseen
+    pipe = CompilerPipeline(m.graph, params=m.params)
+    return m, pipe.run(), pipe
+
+
+class TestEndToEnd:
+    def test_vp_parity_baremetal(self, tinynet_art):
+        m, art, _ = tinynet_art
+        from repro.runtime import create_executor
+        x = np.random.default_rng(21).normal(
+            0, 1, m.graph.input_shape).astype(np.float32)
+        vp = VirtualPlatform(art.loadable).run(x)
+        bm = create_executor("baremetal", art).run(x)
+        np.testing.assert_array_equal(bm.output_int8, vp.output_int8)
+
+    def test_serves_via_client(self, tinynet_art):
+        from repro.runtime import Session
+        from repro.serve.client import ServeClient
+        m, art, _ = tinynet_art
+        with Session(art) as ses:
+            client = ServeClient(ses)
+            x = np.random.default_rng(22).normal(
+                0, 1, m.graph.input_shape).astype(np.float32)
+            rsp = client.infer("tinynet", x)
+            want = ses.run(x).output_int8
+            np.testing.assert_array_equal(rsp.output_int8, want)
+
+    def test_bundle_roundtrip(self, tinynet_art, tmp_path):
+        from repro.core.pipeline import Artifacts
+        from repro.runtime import create_executor
+        m, art, _ = tinynet_art
+        art.save(tmp_path / "bundle")
+        again = Artifacts.load(tmp_path / "bundle")
+        x = np.random.default_rng(23).normal(
+            0, 1, m.graph.input_shape).astype(np.float32)
+        np.testing.assert_array_equal(
+            create_executor("baremetal", again).run(x).output_int8,
+            create_executor("baremetal", art).run(x).output_int8)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+class TestCLI:
+    def test_inspect_and_compile(self, tmp_path, capsys):
+        from repro.frontend.__main__ import main
+        rc = main([str(FIXTURES / "tinynet.json"),
+                   "--compile-to", str(tmp_path / "b")])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "tinynet" in out and "saved bundle" in out
+        assert (tmp_path / "b").is_dir()
+
+    def test_import_failure_is_descriptive_not_a_traceback(self, tmp_path,
+                                                           capsys):
+        from repro.frontend.__main__ import main
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps({
+            "format": "repro-net-v1", "name": "bad",
+            "input_shape": [1, 4, 4], "seed": 0,
+            "layers": [{"name": "r", "type": "relu", "inputs": ["data"]}],
+        }))
+        rc = main([str(bad)])
+        err = capsys.readouterr().err
+        assert rc == 1
+        assert "import failed" in err and "unsupported op 'Relu'" in err
+
+    def test_module_entrypoint(self):
+        rc = subprocess.run(
+            [sys.executable, "-m", "repro.frontend",
+             str(FIXTURES / "tinynet.json")],
+            cwd=REPO, env={"PYTHONPATH": str(REPO / "src"),
+                           "PATH": "/usr/bin:/bin"},
+            capture_output=True, text=True)
+        assert rc.returncode == 0, rc.stderr
+        assert "tinynet" in rc.stdout
+
+
+# ---------------------------------------------------------------------------
+# optional cross-validation against the real onnx package
+# ---------------------------------------------------------------------------
+class TestOnnxCrossValidation:
+    def test_fixture_is_spec_conformant(self):
+        onnx = pytest.importorskip("onnx")
+        model = onnx.load(str(FIXTURES / "lenet5.onnx"))
+        onnx.checker.check_model(model)
+        got = {i.name for i in model.graph.initializer}
+        m = frontend.parse(FIXTURES / "lenet5.onnx")
+        assert got == set(m.initializers)
+        assert [n.op_type for n in model.graph.node] == \
+               [n.op for n in m.nodes]
+
+    def test_weights_match_real_parser(self):
+        onnx = pytest.importorskip("onnx")
+        from onnx import numpy_helper
+        model = onnx.load(str(FIXTURES / "lenet5.onnx"))
+        m = frontend.parse(FIXTURES / "lenet5.onnx")
+        for init in model.graph.initializer:
+            np.testing.assert_array_equal(numpy_helper.to_array(init),
+                                          m.initializers[init.name])
