@@ -36,6 +36,15 @@ engine config's dtype is ``bf16`` (``KERNELS_BY_DTYPE``):
 
 ``kernel_plan`` maps a whole descriptor list; the pipeline's ``cost_model``
 stage publishes the plan into the ``Artifacts`` manifest.
+
+The cost model is **batch-aware**: ``select_kernel``/``kernel_plan`` take the
+coalesced bucket size and compare, per kernel, executing the bucket as N
+vmapped single-image launches (weights stream from HBM once *per lane*)
+against one natively batched launch that folds the lanes into the GEMM's N
+axis (weights stream **once**, amortised over every lane).  The winning
+execution style is recorded as ``KernelChoice.batched`` and drives the
+executors' batched replay — ``batched_kernel_plans`` publishes the
+per-(layer, bucket) plans for the whole coalescing ladder into the manifest.
 """
 
 from __future__ import annotations
@@ -74,6 +83,32 @@ KERNELS_BY_DTYPE = {"int8": GEMM_KERNELS, "bf16": BF16_KERNELS}
 EXACT_K = (1 << 24) // (128 * 128)     # = 1024
 
 
+def bucket_ladder(max_batch: int) -> tuple:
+    """The power-of-two coalescing bucket ladder for a ``max_batch`` ceiling.
+
+    Rungs are 1, 2, 4, ... doubling below ``max_batch``, and ``max_batch``
+    itself is always the top rung (a non-power-of-two ceiling still gets a
+    bucket, matching the scheduler's padded-shape cap).  This is the ONE
+    source of truth for which batch shapes exist: ``SchedulerConfig.buckets``
+    defaults to it, ``Session.warmup`` precompiles it, and
+    ``batched_kernel_plans`` publishes a plan per rung into the manifest.
+    """
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    rungs = []
+    b = 1
+    while b < max_batch:
+        rungs.append(b)
+        b *= 2
+    rungs.append(int(max_batch))
+    return tuple(rungs)
+
+
+# ladder used for manifest publication when no scheduler config is in scope
+# (the serving default: scheduler buckets cap at the executor's batch ceiling)
+DEFAULT_BUCKET_LADDER = bucket_ladder(32)
+
+
 @dataclasses.dataclass(frozen=True)
 class BackendProfile:
     """What the serving substrate can do, for the kernel cost model.
@@ -91,6 +126,20 @@ class BackendProfile:
     pallas_native: bool                # Pallas runs compiled (TPU) vs interpret
     tile_overhead_macs: float = 4096.0  # int32 partial-sum add per extra K-tile
     bf16_macs_per_cycle: float = 0.0   # native bf16 MAC rate (0 = cast to f32)
+    launch_overhead_macs: float = 8192.0  # fixed dispatch cost per kernel
+                                       # launch (MAC-equivalents) — this is
+                                       # the per-lane tax a vmapped bucket
+                                       # pays N times and a native-batch
+                                       # launch pays once
+    vmap_folds: bool = False           # XLA's vmap batching rule already
+                                       # folds a broadcast-weight dot_general
+                                       # into ONE batched GEMM inside one
+                                       # executable (measured parity on CPU),
+                                       # so a vmapped bucket pays the weight
+                                       # stream and launch once, not per
+                                       # lane.  False for the Pallas TPU
+                                       # path, where each lane's program
+                                       # really does re-stream weights.
 
     @property
     def bf16_rate(self) -> float:
@@ -102,13 +151,14 @@ class BackendProfile:
 
 PROFILES: Dict[str, BackendProfile] = {
     "cpu": BackendProfile(platform="cpu", f32_macs_per_cycle=16.0,
-                          bytes_per_cycle=32.0, pallas_native=False),
+                          bytes_per_cycle=32.0, pallas_native=False,
+                          vmap_folds=True),
     "tpu": BackendProfile(platform="tpu", f32_macs_per_cycle=256.0,
                           bytes_per_cycle=512.0, pallas_native=True,
                           bf16_macs_per_cycle=512.0),
     "gpu": BackendProfile(platform="gpu", f32_macs_per_cycle=128.0,
                           bytes_per_cycle=256.0, pallas_native=False,
-                          bf16_macs_per_cycle=256.0),
+                          bf16_macs_per_cycle=256.0, vmap_folds=True),
 }
 
 
@@ -133,11 +183,19 @@ def resolve_profile(backend: Union[str, BackendProfile, None]) -> BackendProfile
 
 @dataclasses.dataclass(frozen=True)
 class KernelChoice:
-    """One descriptor's resolved kernel: what runs, and why."""
+    """One descriptor's resolved kernel: what runs, and why.
+
+    ``batch`` is the coalesced bucket size the choice was made for;
+    ``batched`` says the kernel should run as ONE natively batched launch
+    (lanes folded into the GEMM N axis, weights streamed once) rather than
+    ``batch`` vmapped single-image launches.
+    """
     kernel: str
     contract_k: int = 0
     k_tiles: int = 1
     reason: str = ""
+    batch: int = 1
+    batched: bool = False
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -172,52 +230,74 @@ def descriptor_macs(d: engine.Descriptor) -> int:
 
 
 def _kernel_cost(kernel: str, k: int, macs: int, n_cols: int,
-                 prof: BackendProfile) -> float:
-    """Estimated cost (relative cycles) of running ``kernel`` for this
-    contraction on ``prof``; ``inf`` when the kernel is not applicable.
+                 prof: BackendProfile, batch: int = 1,
+                 native: bool = False) -> float:
+    """Estimated cost (relative cycles) of serving a ``batch``-lane bucket
+    with ``kernel`` on ``prof``; ``inf`` when the kernel is not applicable.
 
     max(compute, weight-stream) roofline: ``n_cols`` (output positions, or
     positions x coalesced lanes) decides which side binds — GEMV-shaped
     layers (n_cols ~ 1) are weight-bandwidth-bound, so the f32 kernels pay
     their 4-byte weight stream there, while wide GEMMs are compute-bound
     and the f32 units win on rate.
+
+    ``native=False`` models ``batch`` vmapped single-image launches: the
+    weight stream and the fixed launch overhead are paid once per lane.
+    ``native=True`` models ONE batched launch with the lanes folded into the
+    GEMM N axis: compute scales with the lanes but the weight stream and the
+    launch overhead are paid once — the amortisation the batched kernels buy.
+
+    On ``vmap_folds`` substrates (XLA CPU/GPU) the vmapped style pays the
+    stream and launch once too: XLA's batching rule turns the broadcast-weight
+    dot_general into a single batched GEMM inside one executable, so vmapping
+    already IS the fold there (measured bit-exact parity on CPU) and native
+    batching ties rather than wins.
     """
+    lanes = max(batch, 1)
     n_tiles = -(-k // EXACT_K) if k else 1
     weight_elems = macs // max(n_cols, 1)
+    folded = native or prof.vmap_folds
+    streams = 1 if folded else lanes       # weight-stream trips over HBM
+    launch = ((1 if folded else lanes)
+              * prof.launch_overhead_macs / prof.f32_macs_per_cycle)
+    cmacs = lanes * macs
+    # the extra-K-tile partial-sum adds cover every output column, so they
+    # scale with the lanes under either execution style
+    tiles = (n_tiles - 1) * prof.tile_overhead_macs * lanes
     if kernel == KERNEL_GEMM_EXACT:
         if k > EXACT_K:
             return float("inf")            # would break the exactness proof
-        return max(macs / prof.f32_macs_per_cycle,
-                   4.0 * weight_elems / prof.bytes_per_cycle)
+        return max(cmacs / prof.f32_macs_per_cycle,
+                   4.0 * streams * weight_elems / prof.bytes_per_cycle) + launch
     if kernel == KERNEL_GEMM_TILED:
-        return (max(macs / prof.f32_macs_per_cycle,
-                    4.0 * weight_elems / prof.bytes_per_cycle)
-                + (n_tiles - 1) * prof.tile_overhead_macs)
+        return (max(cmacs / prof.f32_macs_per_cycle,
+                    4.0 * streams * weight_elems / prof.bytes_per_cycle)
+                + tiles + launch)
     if kernel == KERNEL_PALLAS:
         if not prof.pallas_native:
             return float("inf")            # interpret mode: test-only on CPU
         # int8 weight stream + fused epilogue (the int32 accumulator stays
         # in VMEM): both sides of the roofline are cheaper than f32
-        return max(0.9 * macs / prof.f32_macs_per_cycle,
-                   1.0 * weight_elems / prof.bytes_per_cycle)
+        return max(0.9 * cmacs / prof.f32_macs_per_cycle,
+                   1.0 * streams * weight_elems / prof.bytes_per_cycle) + launch
     if kernel == KERNEL_GEMM_BF16:
         # bf16 operands stream at 2 bytes/elem; accumulate rides the bf16
         # units when they exist, the f32 units after an upcast otherwise
-        return max(macs / prof.bf16_rate,
-                   2.0 * weight_elems / prof.bytes_per_cycle)
+        return max(cmacs / prof.bf16_rate,
+                   2.0 * streams * weight_elems / prof.bytes_per_cycle) + launch
     if kernel == KERNEL_PALLAS_BF16:
         if not prof.pallas_native:
             return float("inf")            # interpret mode: test-only on CPU
         # fused epilogue: the f32 accumulator never leaves VMEM
-        return max(0.9 * macs / prof.bf16_rate,
-                   2.0 * weight_elems / prof.bytes_per_cycle)
+        return max(0.9 * cmacs / prof.bf16_rate,
+                   2.0 * streams * weight_elems / prof.bytes_per_cycle) + launch
     raise ValueError(f"unknown kernel {kernel!r}")
 
 
 def select_kernel(d: engine.Descriptor,
                   backend: Union[str, BackendProfile, None] = None,
                   override: Optional[str] = None,
-                  dtype: str = "int8") -> KernelChoice:
+                  dtype: str = "int8", batch: int = 1) -> KernelChoice:
     """Pick the cheapest applicable kernel for one descriptor.
 
     ``dtype`` is the engine datapath (``EngineConfig.dtype``): it decides the
@@ -227,9 +307,23 @@ def select_kernel(d: engine.Descriptor,
     ``gemm_f32_exact`` on a contraction too large for the exactness bound, or
     a kernel from the wrong dtype family, raises rather than silently
     producing wrong bits.
+
+    ``batch`` is the coalesced bucket size.  For ``batch > 1`` every
+    candidate is costed under both execution styles — ``batch`` vmapped
+    single-image launches vs one natively batched launch with the lanes
+    folded into the GEMM N axis — and the winner's style is recorded in
+    ``KernelChoice.batched``.  Native batching must *strictly* beat vmapping
+    to be selected: on ``vmap_folds`` substrates (XLA CPU/GPU) the two styles
+    cost the same, so the vmapped oracle keeps serving there and ``batched``
+    only turns on where the amortisation is real (the Pallas TPU path).  An
+    ``override`` forces the kernel but the execution style is still
+    cost-chosen (every kernel family has a batched variant, so the override
+    can never be silently ignored).
     """
+    lanes = max(int(batch), 1)
     if d.unit not in ("CONV", "FC"):
-        return KernelChoice(kernel=KERNEL_VPU, reason="no contraction")
+        return KernelChoice(kernel=KERNEL_VPU, reason="no contraction",
+                            batch=lanes)
     try:
         candidates = KERNELS_BY_DTYPE[dtype]
     except KeyError:
@@ -239,7 +333,18 @@ def select_kernel(d: engine.Descriptor,
     prof = resolve_profile(backend)
     k = contract_k(d)
     macs = descriptor_macs(d)
+    n_cols = gemm_cols(d)
     n_tiles = (-(-k // EXACT_K) if k else 1) if dtype == "int8" else 1
+
+    def exec_style(name: str) -> tuple:
+        """(best cost, native-batch wins) for one candidate kernel."""
+        vmapped = _kernel_cost(name, k, macs, n_cols, prof, lanes,
+                               native=False)
+        if lanes == 1:
+            return vmapped, False
+        fused = _kernel_cost(name, k, macs, n_cols, prof, lanes, native=True)
+        return min(vmapped, fused), fused < vmapped
+
     if override is not None:
         if override not in candidates:
             raise ValueError(
@@ -249,15 +354,17 @@ def select_kernel(d: engine.Descriptor,
             raise ValueError(
                 f"kernel {override!r} forced for K={k} > {EXACT_K}: a single "
                 f"f32 GEMM is not bit-exact past K*128*128 = 2^24")
+        _, native = exec_style(override)
         return KernelChoice(kernel=override, contract_k=k, k_tiles=n_tiles,
+                            batch=lanes, batched=native,
                             reason="forced by kernel_plan override")
-    n_cols = gemm_cols(d)
-    costs = {name: _kernel_cost(name, k, macs, n_cols, prof)
-             for name in candidates}
+    styles = {name: exec_style(name) for name in candidates}
+    costs = {name: c for name, (c, _) in styles.items()}
     best = min(costs, key=costs.get)
     return KernelChoice(
         kernel=best, contract_k=k, k_tiles=n_tiles,
-        reason=f"cost model on {prof.platform}: " + ", ".join(
+        batch=lanes, batched=styles[best][1],
+        reason=f"cost model on {prof.platform} (batch={lanes}): " + ", ".join(
             f"{n}={c:.0f}" if c != float("inf") else f"{n}=n/a"
             for n, c in costs.items()))
 
@@ -266,17 +373,36 @@ def kernel_plan(descs: Sequence[engine.Descriptor],
                 names: Optional[Sequence[str]] = None,
                 backend: Union[str, BackendProfile, None] = None,
                 override: Optional[str] = None,
-                dtype: str = "int8") -> List[Dict]:
+                dtype: str = "int8", batch: int = 1) -> List[Dict]:
     """Per-descriptor kernel plan, as JSON-ready dicts (manifest format)."""
     names = names or [f"op{i}" for i in range(len(descs))]
     prof = resolve_profile(backend)
     out = []
     for d, n in zip(descs, names):
-        ch = select_kernel(d, prof, override=override, dtype=dtype)
+        ch = select_kernel(d, prof, override=override, dtype=dtype,
+                           batch=batch)
         e = ch.to_dict()
         e.update(layer=n, unit=d.unit, backend=prof.platform, dtype=dtype)
         out.append(e)
     return out
+
+
+def batched_kernel_plans(descs: Sequence[engine.Descriptor],
+                         names: Optional[Sequence[str]] = None,
+                         backend: Union[str, BackendProfile, None] = None,
+                         override: Optional[str] = None,
+                         dtype: str = "int8",
+                         buckets: Sequence[int] = DEFAULT_BUCKET_LADDER
+                         ) -> Dict[int, List[Dict]]:
+    """Per-(layer, bucket) kernel plans for the coalescing ladder.
+
+    ``{bucket: kernel_plan entries}`` for every ladder rung above 1 (the
+    1-lane plan is the base ``kernel_plan``); this is what the pipeline
+    publishes into the manifest as ``batched_kernel_plans``.
+    """
+    return {int(b): kernel_plan(descs, names, backend, override=override,
+                                dtype=dtype, batch=int(b))
+            for b in buckets if int(b) > 1}
 
 
 @dataclasses.dataclass
@@ -300,6 +426,8 @@ class ModelCost:
     total_cycles: int
     ms_at_clock: float
     kernel_plan: Optional[List[Dict]] = None   # per-layer kernel choice dicts
+    batched_kernel_plans: Optional[Dict[int, List[Dict]]] = None
+                                               # per-(layer, bucket) choices
 
     def layer_breakdown(self) -> List[Dict]:
         """Per-layer time share + chosen kernel, sorted by modeled cycles."""
@@ -366,4 +494,6 @@ def model_cost(descs: List[engine.Descriptor], cfg: engine.EngineConfig,
     return ModelCost(ops=ops, total_cycles=total,
                      ms_at_clock=cfg.cycles_to_ms(total),
                      kernel_plan=kernel_plan(descs, names, backend,
-                                             dtype=cfg.dtype))
+                                             dtype=cfg.dtype),
+                     batched_kernel_plans=batched_kernel_plans(
+                         descs, names, backend, dtype=cfg.dtype))

@@ -70,6 +70,10 @@ class Artifacts:
     # descriptor on the compile host's platform; shipped in the manifest so
     # the chosen code path is visible on any bundle
     kernel_plan: Optional[list] = None
+    # per-(layer, bucket) plans over the coalescing ladder — whether the
+    # natively batched fused kernel serves each bucket size (keys are bucket
+    # sizes; stringified in the JSON manifest, normalised back to int on load)
+    batched_kernel_plans: Optional[dict] = None
     # -- compile-time intermediates (not shipped) ----------------------------
     asm_text: str = ""               # RISC-V assembly listing
     loadable: Optional[Loadable] = None
@@ -112,6 +116,10 @@ class Artifacts:
         }
         if self.kernel_plan is not None:
             manifest["kernel_plan"] = self.kernel_plan
+        if self.batched_kernel_plans is not None:
+            manifest["batched_kernel_plans"] = {
+                str(b): plan for b, plan in
+                sorted(self.batched_kernel_plans.items())}
         (p / "manifest.json").write_text(json.dumps(manifest, indent=1))
         return p
 
@@ -168,6 +176,10 @@ class Artifacts:
             output_scale=manifest["output_scale"],
             output_elems=manifest["output_elems"],
             kernel_plan=manifest.get("kernel_plan"),
+            batched_kernel_plans={
+                int(b): plan for b, plan in
+                manifest["batched_kernel_plans"].items()}
+            if "batched_kernel_plans" in manifest else None,
         )
 
 
@@ -284,10 +296,12 @@ def _hash_update_array(h, a: Optional[np.ndarray]) -> None:
 # Mixed into every cache key.  Bump whenever a stage's implementation changes
 # semantics, so the *persistent* disk tier never serves stage outputs pickled
 # by an older build (the in-memory tier dies with the process; disk doesn't).
-CACHE_SCHEMA_VERSION = 5   # 4: kernel_plan entries gained a dtype field
+CACHE_SCHEMA_VERSION = 6   # 4: kernel_plan entries gained a dtype field
                            #    (bf16/nv_full kernel family)
                            # 5: fingerprint covers NetGraph.source_digest
                            #    (imported nets, repro.frontend)
+                           # 6: cost_model outputs gained batched_kernel_plans
+                           #    (batch-aware selection over the bucket ladder)
 
 
 def _fingerprint(graph: NetGraph, params, calib_samples, cfg, sample_input,
@@ -483,5 +497,6 @@ class CompilerPipeline:
             input_scale=ld.input_scale, output_scale=ld.output_scale,
             output_elems=int(np.prod(out_shape)),
             kernel_plan=cost.kernel_plan,
+            batched_kernel_plans=cost.batched_kernel_plans,
             loadable=ld, vp_output=vp.output, vp_output_int8=vp.output_int8,
             cost=cost)

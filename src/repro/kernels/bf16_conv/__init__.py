@@ -14,5 +14,6 @@ oracle the kernel is tested against (itself tolerance-checked against numpy
 bounded rather than bit-exact).
 """
 
-from repro.kernels.bf16_conv.ops import conv2d_bf16, fc_bf16  # noqa: F401
+from repro.kernels.bf16_conv.ops import (conv2d_bf16, conv2d_bf16_batch,  # noqa: F401
+                                         fc_bf16, fc_bf16_batch)
 from repro.kernels.bf16_conv.ref import conv2d_bf16_ref, fc_bf16_ref  # noqa: F401

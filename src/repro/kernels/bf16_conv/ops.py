@@ -9,6 +9,13 @@ Pallas interpreter on CPU — the path the tolerance-parity tests exercise.
 Zero padding is epilogue-safe here for the same reason it is in the int8
 family: padded K contributes exact 0.0 products to the f32 accumulator, and
 padded M/N rows/columns are sliced off before the caller sees them.
+
+``conv2d_bf16_batch`` / ``fc_bf16_batch`` are the natively batched variants:
+the coalesced bucket runs as ONE fused launch with the lanes folded onto the
+Pallas grid's N axis, so bf16 weights and f32 bias stream from HBM once per
+launch.  Folding preserves each column's f32 accumulation order, so the
+batched kernel is *bit-identical* to vmapping the single-image kernel over
+lanes (the tolerance bound is only needed vs the differently-ordered refops).
 """
 
 from __future__ import annotations
@@ -39,6 +46,18 @@ def _fused_gemm(wq, cols, bias, relu, block_m, block_n, block_k, interpret):
     out = bf16_conv_gemm(wp, cp, bp, relu=relu, block_m=block_m,
                          block_n=block_n, block_k=block_k, interpret=interpret)
     return out[:m, :n]
+
+
+def _fused_gemm_batch(wq, cols_b, bias, relu, block_m, block_n, block_k,
+                      interpret):
+    """One fused launch over a (B, K, N) column stack -> (B, M, N); lanes
+    fold onto the GEMM N axis so the weight blocks stream once per launch."""
+    b, k, n = cols_b.shape
+    m = wq.shape[0]
+    folded = jnp.moveaxis(cols_b, 0, 1).reshape(k, b * n)
+    out = _fused_gemm(wq, folded, bias, relu, block_m, block_n, block_k,
+                      interpret)
+    return jnp.moveaxis(out.reshape(m, b, n), 0, 1)
 
 
 def conv2d_bf16(x: jax.Array, wq: jax.Array, bias: jax.Array, k: int,
@@ -82,3 +101,56 @@ def fc_bf16(x: jax.Array, wq: jax.Array, bias: jax.Array,
     out = _fused_gemm(wq, cols, bias, relu, block_m, block_n, block_k,
                       interpret)
     return out.reshape(-1, 1, 1)
+
+
+def conv2d_bf16_batch(xs: jax.Array, wq: jax.Array, bias: jax.Array, k: int,
+                      stride: int, pad: int, groups: int = 1,
+                      relu: bool = False, *, use_kernel: bool = True,
+                      block_m: int = 128, block_n: int = 128,
+                      block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """Natively batched fused CONV+SDP: (B,C,H,W) bf16 -> (B,K,P,Q) bf16.
+
+    ONE kernel launch serves the whole bucket — the batch rides the Pallas
+    grid's N axis, bf16 weights and f32 bias stream from HBM once, and the
+    fused epilogue + persistent f32 VMEM accumulator are unchanged.
+    Bit-identical to ``jax.vmap(conv2d_bf16)`` over the lanes.
+    """
+    if not use_kernel:
+        return jax.vmap(lambda x: conv2d_bf16_ref(x, wq, bias, k, stride,
+                                                  pad, groups, relu))(xs)
+    b, c, h, w_in = xs.shape
+    kk = wq.shape[0]
+    p = (h + 2 * pad - k) // stride + 1
+    q = (w_in + 2 * pad - k) // stride + 1
+    if groups == 1:
+        cols = jax.vmap(lambda x: im2col(x, k, stride, pad))(xs)
+        out = _fused_gemm_batch(wq, cols, bias, relu, block_m, block_n,
+                                block_k, interpret)
+        return out.reshape(b, kk, p, q)
+    cg, kg = c // groups, kk // groups
+    outs = []
+    for g in range(groups):
+        cols = jax.vmap(
+            lambda x: im2col(x[g * cg:(g + 1) * cg], k, stride, pad))(xs)
+        outs.append(_fused_gemm_batch(wq[g * kg:(g + 1) * kg], cols,
+                                      bias[g * kg:(g + 1) * kg], relu,
+                                      block_m, block_n, block_k, interpret))
+    return jnp.concatenate(outs, 1).reshape(b, kk, p, q)
+
+
+def fc_bf16_batch(xs: jax.Array, wq: jax.Array, bias: jax.Array,
+                  relu: bool = False, *, use_kernel: bool = True,
+                  block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                  interpret: bool = True) -> jax.Array:
+    """Natively batched fused FC+SDP: (B, Cin) bf16 -> (B, K_out, 1, 1) bf16.
+
+    The bucket IS the GEMM N axis: (K_out, Cin) weights stream once against
+    a (Cin, B) activation block instead of once per GEMV lane.
+    """
+    if not use_kernel:
+        return jax.vmap(lambda x: fc_bf16_ref(x, wq, bias, relu))(xs)
+    b = xs.shape[0]
+    cols = xs.reshape(b, -1).T
+    out = _fused_gemm(wq, cols, bias, relu, block_m, block_n, block_k,
+                      interpret)
+    return out.T.reshape(b, -1, 1, 1)

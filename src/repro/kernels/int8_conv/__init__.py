@@ -10,5 +10,6 @@ executors through ``perfmodel.select_kernel``; ``ref.py`` holds the pure-jnp
 oracle the kernel is tested against (itself bit-exact vs ``core/refops``).
 """
 
-from repro.kernels.int8_conv.ops import conv2d_int8, fc_int8  # noqa: F401
+from repro.kernels.int8_conv.ops import (conv2d_int8, conv2d_int8_batch,  # noqa: F401
+                                         fc_int8, fc_int8_batch)
 from repro.kernels.int8_conv.ref import conv2d_int8_ref, fc_int8_ref  # noqa: F401

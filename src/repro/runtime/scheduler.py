@@ -57,6 +57,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import perfmodel
 from repro.core.executor import ExecResult
 
 # EMA of coalesce sizes above which a dispatcher starts holding the head
@@ -106,6 +107,15 @@ class SchedulerConfig:
     ``max_queue``    — per-net queue bound; ``submit`` past it raises
                        ``QueueFullError`` (None = unbounded, the pre-serving
                        behaviour).
+    ``buckets``      — the batch-shape ladder: every coalesced dispatch pads
+                       to the smallest rung >= its size, and ``Session``
+                       warmup precompiles exactly these shapes.  Defaults to
+                       ``perfmodel.bucket_ladder(max_batch)`` (powers of two
+                       up to ``max_batch``).  This is the ONE source of truth
+                       for batch shapes — mis-shaped ladders (non-monotonic,
+                       rungs past ``max_batch``, non-power-of-two rungs while
+                       ``adaptive``) fail here at construction, not deep in
+                       the dispatcher.
     ``latency_window`` — ring-buffer size for per-request latency samples.
     ``close_timeout_s`` — the no-progress window ``close()`` allows before
                        force-cancelling outstanding futures: as long as the
@@ -120,8 +130,56 @@ class SchedulerConfig:
     adaptive: bool = True
     shard: bool = True
     max_queue: Optional[int] = None
+    buckets: Optional[tuple] = None
     latency_window: int = 2048
     close_timeout_s: float = 30.0
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(
+                f"SchedulerConfig.max_batch must be >= 1, got {self.max_batch}")
+        if self.buckets is None:
+            object.__setattr__(self, "buckets",
+                               perfmodel.bucket_ladder(self.max_batch))
+            return
+        try:
+            bs = tuple(int(b) for b in self.buckets)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"SchedulerConfig.buckets must be a sequence of ints, got "
+                f"{self.buckets!r}") from None
+        if not bs or any(b < 1 for b in bs):
+            raise ValueError(
+                f"SchedulerConfig.buckets must be a non-empty sequence of "
+                f"positive batch sizes, got {self.buckets!r}")
+        if any(b >= b2 for b, b2 in zip(bs, bs[1:])):
+            raise ValueError(
+                f"SchedulerConfig.buckets must be strictly increasing "
+                f"(each dispatch pads to the smallest rung >= its size), "
+                f"got {bs}")
+        if bs[-1] > self.max_batch:
+            raise ValueError(
+                f"SchedulerConfig.buckets rung {bs[-1]} exceeds "
+                f"max_batch={self.max_batch} — the dispatcher would pad past "
+                f"its own coalescing ceiling")
+        if self.adaptive:
+            bad = [b for b in bs if b & (b - 1)]
+            if bad:
+                raise ValueError(
+                    f"SchedulerConfig.buckets rungs {bad} are not powers of "
+                    f"two; adaptive coalescing assumes the power-of-two "
+                    f"compile-once grid (set adaptive=False to use custom "
+                    f"rungs)")
+        object.__setattr__(self, "buckets", bs)
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest ladder rung >= n.  Oversize pre-formed groups (past
+        ``max_batch``) still round up to a power of two so batch shapes stay
+        drawn from a bounded set."""
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return bucket_size(n, self.max_batch)
 
 
 @dataclasses.dataclass
@@ -370,6 +428,8 @@ class _NetDispatcher:
         net = self.net
         ex = net.executor
         k = len(batch)
+        bucket = 1
+        compiles0 = getattr(ex, "compile_count", 0)
         try:
             caps = ex.capabilities()
             if k == 1:
@@ -379,8 +439,8 @@ class _NetDispatcher:
                 # bucket-pad only for native batch programs (compile-once
                 # shapes); sequential fallbacks would just discard the pad.
                 # The backend's declared hard ceiling bounds even the padded
-                # shape (a non-power-of-two ceiling beats a pow2 bucket).
-                bucket = (bucket_size(k, self.config.max_batch)
+                # shape (a non-power-of-two ceiling beats a ladder rung).
+                bucket = (self.config.bucket_for(k)
                           if caps.native_batching else k)
                 if caps.max_batch is not None:
                     bucket = min(bucket, caps.max_batch)
@@ -396,7 +456,8 @@ class _NetDispatcher:
             return
         done = time.perf_counter()
         net.stats.note_dispatch(
-            k, [(done - r.t_submit) * 1e6 for r in batch])
+            k, [(done - r.t_submit) * 1e6 for r in batch], bucket=bucket,
+            compiles=getattr(ex, "compile_count", 0) - compiles0)
         for r, out in zip(batch, outs):
             _resolve_future(r.future, r.future.set_result, out)
         self._ema_coalesce = ((1 - _EMA_ALPHA) * self._ema_coalesce

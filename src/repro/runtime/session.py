@@ -31,6 +31,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
+import time
 import weakref
 from concurrent.futures import Future
 from typing import Dict, List, Optional
@@ -66,6 +67,12 @@ class NetStats:
     queue_depth_peak: int = 0
     rejected: int = 0            # admission control (QueueFullError)
     shed: int = 0                # deadline passed before launch
+    compile_count: int = 0       # executor program builds observed (warmup +
+                                 # dispatch) — nonzero deltas after warmup
+                                 # mean a request paid a compile stall
+    warmup_ms: float = 0.0       # time spent in Session.warmup for this net
+    bucket_launches: Dict[int, int] = dataclasses.field(
+        default_factory=dict)    # dispatched-batch count per padded bucket
     latencies_us: "collections.deque" = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=2048), repr=False)
     _lock: threading.Lock = dataclasses.field(
@@ -93,12 +100,22 @@ class NetStats:
         with self._lock:
             self.shed += n
 
-    def note_dispatch(self, k: int, latencies_us) -> None:
+    def note_dispatch(self, k: int, latencies_us, bucket: Optional[int] = None,
+                      compiles: int = 0) -> None:
         with self._lock:
             self.dispatches += 1
             self.coalesced_images += k
             self.coalesce_max = max(self.coalesce_max, k)
+            if bucket is not None:
+                self.bucket_launches[int(bucket)] = \
+                    self.bucket_launches.get(int(bucket), 0) + 1
+            self.compile_count += compiles
             self.latencies_us.extend(latencies_us)
+
+    def note_warmup(self, ms: float, compiles: int = 0) -> None:
+        with self._lock:
+            self.warmup_ms += ms
+            self.compile_count += compiles
 
     # -- readers -------------------------------------------------------------
     @property
@@ -122,9 +139,12 @@ class NetStats:
         the unit ``/metrics`` renders.  Taken under the same lock the
         dispatcher mutates under, so no cross-counter tearing."""
         with self._lock:
-            out = {f.name: getattr(self, f.name)
-                   for f in dataclasses.fields(self)
-                   if f.name not in ("latencies_us", "_lock")}
+            out = {}
+            for f in dataclasses.fields(self):
+                if f.name in ("latencies_us", "_lock"):
+                    continue
+                v = getattr(self, f.name)
+                out[f.name] = dict(v) if isinstance(v, dict) else v
             samples = list(self.latencies_us)
         arr = np.asarray(samples) if samples else None
         for p in (50, 90, 99):
@@ -150,11 +170,15 @@ class Session:
 
     def __init__(self, artifacts: Optional[Artifacts] = None,
                  backend: str = "baremetal", name: Optional[str] = None,
-                 scheduler: Optional[SchedulerConfig] = None):
+                 scheduler: Optional[SchedulerConfig] = None,
+                 warmup: bool = False):
         self._nets: Dict[str, _Net] = {}
         self._order: List[str] = []
         self.default_backend = backend
         self._scheduler = Scheduler(scheduler)
+        # ``warmup=True``: every net precompiles its bucket ladder at load
+        # time (see ``warmup()``), so no first request ever compile-stalls
+        self._warmup_on_load = bool(warmup)
         # stop the dispatcher thread when the Session is garbage-collected,
         # so un-close()d sessions don't leak threads for the process lifetime
         self._finalizer = weakref.finalize(self, Scheduler.close,
@@ -187,7 +211,49 @@ class Session:
             name=name, backend=backend, executor=ex, artifacts=artifacts,
             stats=stats, dtype=dtype,
             input_elems=int(np.prod(dims[1:])) if dims is not None else None)
+        if self._warmup_on_load:
+            self.warmup(name)
         return name
+
+    def warmup(self, net: Optional[str] = None) -> Dict[str, float]:
+        """Precompile every (net, bucket) program before traffic arrives.
+
+        For each targeted net (all resident nets when ``net`` is None): one
+        zero-input inference at batch 1, plus one ``run_batch`` per rung of
+        the scheduler's bucket ladder (``SchedulerConfig.buckets``) on
+        natively batching backends — exactly the shapes the dispatcher pads
+        to, so the first real request of any bucket shape never pays a
+        compile stall.  Sharding mirrors the dispatcher's lane placement so
+        warmed programs are the ones that serve.  Call before admitting
+        traffic (the serve front-end holds requests until this returns);
+        per-net wall time and compile counts land in ``NetStats``.  Returns
+        ``{net_name: warmup_ms}``.
+        """
+        names = [net] if net is not None else list(self._order)
+        out: Dict[str, float] = {}
+        for nm in names:
+            n = self._resolve(nm)
+            ex = n.executor
+            dims = getattr(ex, "input_dims", None)
+            if dims is None:
+                continue
+            shape = tuple(dims[1:])
+            caps = ex.capabilities()
+            compiles0 = getattr(ex, "compile_count", 0)
+            t0 = time.perf_counter()
+            ex.run(np.zeros(shape, np.float32))
+            if caps.native_batching:
+                for b in self._scheduler.config.buckets:
+                    if b <= 1 or (caps.max_batch is not None
+                                  and b > caps.max_batch):
+                        continue
+                    if caps.shardable:
+                        ex.batch_sharding = self._scheduler._lane_sharding(b)
+                    ex.run_batch(np.zeros((b,) + shape, np.float32), lanes=b)
+            ms = (time.perf_counter() - t0) * 1e3
+            n.stats.note_warmup(ms, getattr(ex, "compile_count", 0) - compiles0)
+            out[nm] = ms
+        return out
 
     def unload(self, name: str) -> None:
         """Drop a resident network; its dispatcher drains and stops."""

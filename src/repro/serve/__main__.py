@@ -60,6 +60,13 @@ def main(argv=None) -> None:
     ap.add_argument("--max-queue", type=int, default=256,
                     help="per-net queue bound; past it submits get 429 "
                          "(0 = unbounded)")
+    ap.add_argument("--warmup", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="precompile every (net, bucket) program before "
+                         "admitting traffic; inference returns 503 and "
+                         "/healthz reports 'warming' until done "
+                         "(--no-warmup serves immediately, first requests "
+                         "may compile-stall)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-request access logs")
     args = ap.parse_args(argv)
@@ -82,7 +89,7 @@ def main(argv=None) -> None:
         loaded = ses.load(art, name=name or None)
         print(f"[repro.serve] resident: {loaded} <- compiled {src}")
     serve_forever(ses, host=args.host, port=args.port,
-                  verbose=not args.quiet)
+                  verbose=not args.quiet, warmup=args.warmup)
 
 
 if __name__ == "__main__":

@@ -42,6 +42,13 @@ class OverloadedError(ServeError):
     code = "overloaded"
 
 
+class WarmingUpError(ServeError):
+    """The server is still precompiling its bucket ladder; retry shortly.
+    ``/healthz`` reports ``"warming"`` for the duration."""
+    status = 503
+    code = "warming"
+
+
 class DeadlineError(ServeError):
     """The request's ``deadline_us`` elapsed before launch; it was shed."""
     status = 504
@@ -58,6 +65,16 @@ class ServeClient:
 
     def __init__(self, session):
         self.session = session
+        self._warming = False
+
+    # -- warmup gate ---------------------------------------------------------
+    def begin_warmup(self) -> None:
+        """Refuse inference (503 ``warming``) until ``finish_warmup``;
+        ``/healthz``, ``/metrics`` and ``/v1/nets`` keep answering."""
+        self._warming = True
+
+    def finish_warmup(self) -> None:
+        self._warming = False
 
     # -- inference -----------------------------------------------------------
     def infer_async(self, net: Optional[str], x, priority: int = 0,
@@ -65,8 +82,12 @@ class ServeClient:
         """Admit one request; returns the runtime Future.
 
         Raises ``NotFoundError`` / ``BadRequestError`` / ``OverloadedError``
-        synchronously — an exception here means the request never entered
-        the queue."""
+        / ``WarmingUpError`` synchronously — an exception here means the
+        request never entered the queue."""
+        if self._warming:
+            raise WarmingUpError(
+                "server is warming up (precompiling bucket shapes); "
+                "retry shortly")
         try:
             return self.session.submit(x, net=net, priority=priority,
                                        deadline_us=deadline_us)
@@ -120,8 +141,8 @@ class ServeClient:
         return out
 
     def healthz(self) -> Dict:
-        return {"status": "ok", "nets": len(self.session.networks),
-                "time": time.time()}
+        return {"status": "warming" if self._warming else "ok",
+                "nets": len(self.session.networks), "time": time.time()}
 
     def metrics_text(self) -> str:
         from repro.serve import metrics

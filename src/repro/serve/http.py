@@ -139,18 +139,37 @@ def make_server(session, host: str = "127.0.0.1",
 
 def serve_forever(session, host: str = "127.0.0.1", port: int = 8000,
                   verbose: bool = True,
-                  ready: Optional[threading.Event] = None) -> None:
-    """Blocking serve loop (the ``python -m repro.serve`` entry point)."""
+                  ready: Optional[threading.Event] = None,
+                  warmup: bool = False) -> None:
+    """Blocking serve loop (the ``python -m repro.serve`` entry point).
+
+    With ``warmup=True`` the socket opens immediately but inference returns
+    503 (``/healthz`` reports ``"warming"``) until every resident net's
+    bucket ladder is precompiled — no first request ever compile-stalls.
+    """
     srv = make_server(session, host, port, verbose=verbose)
     bound = srv.server_address
     print(f"[repro.serve] listening on http://{bound[0]}:{bound[1]} "
           f"nets={','.join(session.networks)}")
+    if warmup:
+        srv.client.begin_warmup()
     if ready is not None:
         ready.set()
     try:
-        srv.serve_forever()
+        if warmup:
+            thread = threading.Thread(target=srv.serve_forever,
+                                      name="repro-serve-http", daemon=True)
+            thread.start()
+            for name, ms in session.warmup().items():
+                print(f"[repro.serve] warmed {name}: {ms:.0f}ms, "
+                      f"buckets={list(session.scheduler.config.buckets)}")
+            srv.client.finish_warmup()
+            thread.join()
+        else:
+            srv.serve_forever()
     except KeyboardInterrupt:               # pragma: no cover - interactive
         print("[repro.serve] draining...")
     finally:
+        srv.shutdown()
         srv.server_close()
         session.close(drain=True)

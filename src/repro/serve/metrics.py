@@ -24,12 +24,17 @@ _COUNTERS = [
      "Requests served through coalesced dispatches"),
     ("images_total", "images", "counter",
      "Images served through the synchronous Session API"),
+    ("compile_count_total", "compile_count", "counter",
+     "Executor program builds observed (warmup + dispatch); a nonzero "
+     "delta after warmup means a request paid a compile stall"),
 ]
 _GAUGES = [
     ("queue_depth_peak", "queue_depth_peak", "gauge",
      "Peak queued requests observed for this net"),
     ("coalesce_max", "coalesce_max", "gauge",
      "Largest coalesced batch so far"),
+    ("warmup_ms", "warmup_ms", "gauge",
+     "Wall time spent precompiling this net's bucket ladder at startup"),
     ("latency_samples", "latency_samples", "gauge",
      "Latency samples in the percentile window"),
 ]
@@ -63,6 +68,12 @@ def render(session) -> str:
     emit("queue_depth", "gauge", "Requests currently queued (not in-flight)",
          [f'{PREFIX}_queue_depth{{net="{_escape(n)}"}} {d}'
           for n, d in depths.items()])
+    emit("bucket_launches_total", "counter",
+         "Dispatched batches per padded bucket size",
+         [f'{PREFIX}_bucket_launches_total'
+          f'{{net="{_escape(n)}",bucket="{b}"}} {c}'
+          for n, snap in snaps.items()
+          for b, c in sorted(snap.get("bucket_launches", {}).items())])
     emit("latency_us", "summary",
          "Submit-to-result latency percentiles over the recent window",
          [f'{PREFIX}_latency_us{{net="{_escape(n)}",quantile="{q}"}} '

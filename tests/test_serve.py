@@ -186,7 +186,7 @@ class TestHTTPEndToEnd:
         text = urllib.request.urlopen(f"{base}/metrics",
                                       timeout=30).read().decode()
         line_re = re.compile(
-            r'^[a-z_]+\{net="[^"]*"(,quantile="[0-9.]+")?\} '
+            r'^[a-z_]+\{net="[^"]*"(,(quantile|bucket)="[0-9.]+")?\} '
             r'-?[0-9.]+(e[+-]?\d+)?$')
         seen = set()
         for line in text.strip().splitlines():
