@@ -10,9 +10,13 @@ Each committed ``benchmarks/BENCH_table<N>.json`` is compared row-by-row
 perf trajectory is recorded in-tree and guarded in CI.  Rows that also
 carry a ``goodput`` field (table 5's serving front-end: requests completed
 within deadline per second) are gated on it too, with the direction
-inverted — goodput *shrinking* past the tolerance fails.  ``--update``
-rewrites the baselines from the fresh run instead (use after an intentional
-change, and commit the result).
+inverted — goodput *shrinking* past the tolerance fails.  Table 7's chaos
+rows add two more: ``recovery_ms`` (circuit-breaker outage -> healed
+primary; growth fails like us_per_call) and ``hang_count``, which is gated
+*absolutely* — any unresolved future in the fresh run fails regardless of
+baseline or tolerance, because a hung future is an outage, not a slowdown.
+``--update`` rewrites the baselines from the fresh run instead (use after
+an intentional change, and commit the result).
 
 Only tables with a committed baseline participate — add a table by committing
 its JSON.  Rows present only on one side are reported but never fail: new
@@ -104,6 +108,21 @@ def main() -> int:
             if b_gp is not None and n_gp is not None:
                 rows.append((f"{name} [goodput]", b_gp, n_gp, "req/s",
                              (b_gp / n_gp) if n_gp else float("inf"), tol))
+            b_rm, n_rm = brow.get("recovery_ms"), nrow.get("recovery_ms")
+            if b_rm is not None and n_rm is not None:
+                rows.append((f"{name} [recovery]", b_rm, n_rm, "ms",
+                             (n_rm / b_rm) if b_rm else float("inf"), tol))
+            # hang_count is absolute, not relative: a hung future is an
+            # outage, so no tolerance/normalization can excuse one
+            n_hang = nrow.get("hang_count")
+            if n_hang is not None:
+                checked += 1
+                if n_hang > 0:
+                    failures.append(f"{name} [hang_count]")
+                    print(f"FAIL {name} [hang_count]: {n_hang} unresolved "
+                          f"future(s) (must be 0)")
+                else:
+                    print(f"OK   {name} [hang_count]: 0")
         for name in sorted(set(new_rows) - set(base_rows)):
             print(f"NEW  {name}: {new_rows[name]['us_per_call']:.1f}us "
                   f"(no baseline — commit --update output to start tracking)")

@@ -13,6 +13,9 @@ Tables:
   5  serving front-end: open-loop Poisson mixed-priority load over the
      in-process ServeClient — per-priority p50/p99, goodput, FIFO A/B,
      per-net dispatcher isolation                                (serve layer)
+  7  chaos soak: the table-5 trace under injected fault storms —
+     goodput retained, watchdog hang containment (hang_count must
+     be 0), circuit-breaker outage recovery_ms                   (fault layer)
 
 ``--smoke`` runs every table in reduced-size mode (implies ``--fast``) and
 writes one ``BENCH_table<N>.json`` per table into ``--out`` (default ``.``) —
@@ -44,9 +47,11 @@ def main() -> None:
     fast = args.fast or args.smoke
 
     from benchmarks import (table1_storage, table2_nvsmall, table3_nvfull,
-                            table4_serving, table5_serving_frontend)
+                            table4_serving, table5_serving_frontend,
+                            table7_chaos)
     tables = {1: table1_storage, 2: table2_nvsmall, 3: table3_nvfull,
-              4: table4_serving, 5: table5_serving_frontend}
+              4: table4_serving, 5: table5_serving_frontend,
+              7: table7_chaos}
     picked = {args.table: tables[args.table]} if args.table else tables
 
     out_dir = pathlib.Path(args.out)

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import zlib
 from typing import Dict, List, Optional, Protocol, Sequence, Union, runtime_checkable
 
 import jax
@@ -750,6 +751,7 @@ def _native_batched_op_from_descriptor_bf16(d: engine.Descriptor, base: int,
 class ExecResult:
     output_int8: np.ndarray
     output: np.ndarray
+    degraded: bool = False      # served by a fallback backend (circuit open)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -848,6 +850,16 @@ class _ExecutorBase:
         for a, b in weight_image.items():
             arena0[a - self.base:a - self.base + len(b)] = np.frombuffer(b, np.uint8)
         self.arena0 = arena0
+        # Integrity anchor: the preload regions (weight/bias/scale tables plus
+        # the sample input) are the only arena bytes with an authoritative
+        # source, so their CRC at preload time defines "arena intact".
+        # ``arena_ok()`` re-checksums them; ``reset_arena()`` restores the
+        # pristine bytes IN PLACE — ``LinuxStackExecutor`` binds views into
+        # ``arena0``, so the array object must never be reallocated.
+        self._preload = sorted(
+            ((a - self.base, np.frombuffer(b, np.uint8))
+             for a, b in weight_image.items()), key=lambda t: t[0])
+        self._weight_crc0 = self.weight_checksum()
         # I/O surfaces: input = first op's source; output = last op's dest.
         self.input_off = self.descs[0].src_addr - self.base
         self.input_dims = self.descs[0].src_dims
@@ -943,6 +955,33 @@ class _ExecutorBase:
     def _plan_kernels(self) -> tuple:
         return tuple(sorted({c.kernel for c in self.kernel_plan
                              if c.kernel != perfmodel.KERNEL_VPU}))
+
+    # -- arena integrity -----------------------------------------------------
+    def weight_checksum(self) -> int:
+        """CRC32 over the preload regions of ``arena0`` as they are NOW."""
+        crc = 0
+        for off, b in self._preload:
+            crc = zlib.crc32(self.arena0[off:off + b.size], crc)
+        return crc
+
+    def arena_ok(self) -> bool:
+        """True when the preload regions still carry their load-time bytes.
+        The scheduler's supervisor checks this after a failed launch — a
+        crashed backend call may have scribbled on the weight arena."""
+        return self.weight_checksum() == self._weight_crc0
+
+    def reset_arena(self) -> None:
+        """Restore the pristine preload bytes in place and drop any
+        device-resident copies, so the next run re-materialises from a known
+        -good arena.  In-place is load-bearing: ``LinuxStackExecutor`` holds
+        weight views INTO ``arena0``."""
+        for off, b in self._preload:
+            self.arena0[off:off + b.size] = b
+        self._drop_device_state()
+
+    def _drop_device_state(self) -> None:
+        """Invalidate device-resident arena copies (no-op for host-only
+        backends); overridden by backends with ``resident_arena``."""
 
     def capabilities(self) -> ExecutorCapabilities:
         """Default: sequential batching, no device residency, not shardable."""
@@ -1083,7 +1122,7 @@ class BareMetalExecutor(_ExecutorBase):
             self._arena_dev = jnp.asarray(self.arena0.view(np.int8))
         return self._arena_dev
 
-    def reset_arena(self) -> None:
+    def _drop_device_state(self) -> None:
         """Drop the device-resident arena (next run re-materialises arena0)."""
         self._arena_dev = None
         self._batch_state = None

@@ -16,13 +16,19 @@ The traffic-facing HTTP front-end over this layer lives in ``repro.serve``.
 
 from repro.core.executor import ExecutorBackend, ExecutorCapabilities
 from repro.runtime import backends as _backends  # noqa: F401  (registers builtins)
+from repro.runtime.faults import (FaultPlan, FaultSpec, FaultyExecutor,
+                                  InjectedFaultError)
 from repro.runtime.registry import backend_names, create as create_executor, \
     register_backend
-from repro.runtime.scheduler import (DeadlineExceededError, QueueFullError,
+from repro.runtime.scheduler import (BackendFaultError, CircuitOpenError,
+                                     DeadlineExceededError,
+                                     LaunchTimeoutError, QueueFullError,
                                      Scheduler, SchedulerConfig)
 from repro.runtime.session import NetStats, Session
 
 __all__ = ["Session", "NetStats", "Scheduler", "SchedulerConfig",
-           "QueueFullError", "DeadlineExceededError",
+           "QueueFullError", "DeadlineExceededError", "BackendFaultError",
+           "CircuitOpenError", "LaunchTimeoutError",
+           "FaultPlan", "FaultSpec", "FaultyExecutor", "InjectedFaultError",
            "ExecutorBackend", "ExecutorCapabilities", "register_backend",
            "create_executor", "backend_names"]

@@ -50,6 +50,8 @@ import dataclasses
 import heapq
 import itertools
 import math
+import queue
+import random
 import threading
 import time
 from concurrent.futures import Future, InvalidStateError
@@ -94,6 +96,46 @@ class DeadlineExceededError(RuntimeError):
         self.deadline_us, self.waited_us = deadline_us, waited_us
 
 
+class LaunchTimeoutError(RuntimeError):
+    """A supervised launch exceeded its watchdog timeout and was abandoned
+    (the backend call may still be blocked on an orphaned worker thread).
+    Retried like any other launch failure; surfaces to futures only inside
+    a :class:`BackendFaultError` once retries are exhausted."""
+
+    def __init__(self, net_name: str, timeout_s: float):
+        super().__init__(
+            f"launch for network {net_name!r} exceeded its watchdog "
+            f"timeout ({timeout_s:.3f}s) and was abandoned")
+        self.net_name, self.timeout_s = net_name, timeout_s
+
+
+class BackendFaultError(RuntimeError):
+    """The dispatcher exhausted its retry budget for one batch: every
+    attempt raised or timed out.  Delivered through each affected request's
+    future (never a hang); ``cause`` (also ``__cause__``) carries the last
+    attempt's causal exception.  The HTTP front-end maps this to 500."""
+
+    def __init__(self, net_name: str, attempts: int, cause: BaseException):
+        super().__init__(
+            f"backend for network {net_name!r} failed {attempts} "
+            f"launch attempt(s); last: {type(cause).__name__}: {cause}")
+        self.net_name, self.attempts, self.cause = net_name, attempts, cause
+
+
+class CircuitOpenError(RuntimeError):
+    """Admission refused: the net's circuit breaker is open (N consecutive
+    launch failures) and no fallback backend is configured.  Raised
+    synchronously by ``submit`` — the request was never enqueued.  The HTTP
+    front-end maps this to 503 with a ``Retry-After`` of ``retry_after_s``
+    (the time left until the breaker's half-open probe)."""
+
+    def __init__(self, net_name: str, retry_after_s: float):
+        super().__init__(
+            f"circuit for network {net_name!r} is open after repeated "
+            f"backend failures; retry in {retry_after_s:.2f}s")
+        self.net_name, self.retry_after_s = net_name, retry_after_s
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     """Micro-batching + SLA knobs (per-net dispatchers all share one config).
@@ -124,6 +166,30 @@ class SchedulerConfig:
                        nothing completes means a hung backend — and a hung
                        backend must never leave a caller blocked on
                        ``result()``.
+
+    Fault-tolerance knobs (the supervisor around every launch):
+
+    ``max_retries``  — failed/timed-out launches are retried up to this many
+                       times (inputs are still held, so a retry is idempotent
+                       by construction); past it the batch's futures resolve
+                       with ``BackendFaultError``.
+    ``retry_backoff_s`` — base of the exponential backoff between retries
+                       (doubles per attempt, with deterministic ±20% jitter).
+    ``watchdog_timeout_s`` — absolute per-launch watchdog timeout; ``None``
+                       derives it from the cost model instead:
+                       ``max(watchdog_floor_s, predicted_batch_ms/1000 *
+                       watchdog_mult)``.  The floor is generous because a
+                       cold bucket's first launch pays an XLA compile that
+                       dwarfs any modeled execution time.
+    ``watchdog_mult`` / ``watchdog_floor_s`` — see above.
+    ``breaker_threshold`` — consecutive failed launch attempts that trip the
+                       net's circuit breaker open (``None`` disables the
+                       breaker).  While open, submits fail fast with
+                       ``CircuitOpenError`` (HTTP 503 + Retry-After) unless
+                       a fallback backend serves degraded traffic.
+    ``breaker_reset_s`` — how long the breaker stays open before the next
+                       launch runs as a half-open probe of the primary;
+                       a successful probe closes the breaker.
     """
     max_batch: int = 8
     max_wait_us: float = 200.0
@@ -133,11 +199,36 @@ class SchedulerConfig:
     buckets: Optional[tuple] = None
     latency_window: int = 2048
     close_timeout_s: float = 30.0
+    max_retries: int = 2
+    retry_backoff_s: float = 0.01
+    watchdog_timeout_s: Optional[float] = None
+    watchdog_mult: float = 50.0
+    watchdog_floor_s: float = 30.0
+    breaker_threshold: Optional[int] = 5
+    breaker_reset_s: float = 5.0
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError(
                 f"SchedulerConfig.max_batch must be >= 1, got {self.max_batch}")
+        if self.max_retries < 0:
+            raise ValueError(f"SchedulerConfig.max_retries must be >= 0, "
+                             f"got {self.max_retries}")
+        if self.retry_backoff_s < 0:
+            raise ValueError(f"SchedulerConfig.retry_backoff_s must be >= 0, "
+                             f"got {self.retry_backoff_s}")
+        if self.watchdog_timeout_s is not None and self.watchdog_timeout_s <= 0:
+            raise ValueError(f"SchedulerConfig.watchdog_timeout_s must be "
+                             f"> 0 or None, got {self.watchdog_timeout_s}")
+        if self.watchdog_floor_s <= 0:
+            raise ValueError(f"SchedulerConfig.watchdog_floor_s must be > 0, "
+                             f"got {self.watchdog_floor_s}")
+        if self.breaker_threshold is not None and self.breaker_threshold < 1:
+            raise ValueError(f"SchedulerConfig.breaker_threshold must be "
+                             f">= 1 or None, got {self.breaker_threshold}")
+        if self.breaker_reset_s <= 0:
+            raise ValueError(f"SchedulerConfig.breaker_reset_s must be > 0, "
+                             f"got {self.breaker_reset_s}")
         if self.buckets is None:
             object.__setattr__(self, "buckets",
                                perfmodel.bucket_ladder(self.max_batch))
@@ -232,12 +323,78 @@ def pad_batch(xs: List[np.ndarray], bucket: int) -> np.ndarray:
     return X
 
 
+class _Launcher:
+    """Watchdog-supervised executor calls for one dispatcher.
+
+    A persistent worker thread executes launches so the dispatcher can
+    *abandon* one that hangs: ``call`` hands the closure to the worker and
+    waits up to ``timeout_s``; past it, the worker is orphaned (it may still
+    be blocked inside the backend — a sentinel tells it to exit if it ever
+    unblocks) and the next call spawns a fresh worker.  One persistent
+    thread, not one per dispatch, so the steady-state cost is a queue
+    hand-off + event wait, not thread creation."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._q: Optional[queue.SimpleQueue] = None
+        self._thread: Optional[threading.Thread] = None
+
+    def call(self, fn, timeout_s: float):
+        if self._thread is None or not self._thread.is_alive():
+            self._spawn()
+        done = threading.Event()
+        box: dict = {}
+        self._q.put((fn, box, done))
+        if not done.wait(timeout_s):
+            self._q.put(None)        # exit-if-you-ever-unblock sentinel
+            self._thread = None      # abandon; next call gets a fresh worker
+            raise LaunchTimeoutError(self.name, timeout_s)
+        if "exc" in box:
+            raise box["exc"]
+        return box["res"]
+
+    def _spawn(self) -> None:
+        self._q = q = queue.SimpleQueue()
+
+        def loop():
+            while True:
+                job = q.get()
+                if job is None:
+                    return
+                fn, box, done = job
+                try:
+                    box["res"] = fn()
+                except BaseException as e:   # noqa: BLE001 — relayed to caller
+                    box["exc"] = e
+                done.set()
+
+        self._thread = threading.Thread(target=loop,
+                                        name=f"repro-exec-{self.name}",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is not None:
+            self._q.put(None)
+            self._thread = None
+
+
+# circuit-breaker states (per net, owned by its dispatcher)
+_CLOSED, _OPEN, _HALF_OPEN = "closed", "open", "half_open"
+
+
 class _NetDispatcher:
     """One resident network's queue + dispatcher thread.
 
     The heap orders requests by ``(-priority, deadline, seq)``; the collector
     sheds expired-deadline requests at launch-selection time and admits
     late arrivals into the forming batch until it actually launches.
+
+    Every launch is supervised (``_Launcher`` watchdog + retry with
+    exponential backoff), the arena is integrity-checked after failures, and
+    a per-net circuit breaker (closed -> open after ``breaker_threshold``
+    consecutive failed attempts -> half-open probe after ``breaker_reset_s``)
+    sheds fast or routes to the net's fallback executor while open.
     """
 
     def __init__(self, net, config: SchedulerConfig, scheduler: "Scheduler"):
@@ -252,6 +409,14 @@ class _NetDispatcher:
         self._drain = False                  # exit once the queue empties
         self._inflight: List[_Request] = []  # batch currently executing
         self._ema_coalesce = 1.0
+        name = getattr(net, "name", "?")
+        self._launcher = _Launcher(name)
+        self._breaker = _CLOSED              # guarded by _cond
+        self._consec_failures = 0
+        self._opened_at = 0.0
+        self._retry_rng = random.Random(f"repro-retry-{name}")
+        self._model_ms: Optional[float] = None   # cost-model batch-1 ms
+        self._model_ms_known = False
 
     # -- client side ---------------------------------------------------------
     def enqueue(self, reqs: List[_Request]) -> None:
@@ -260,6 +425,17 @@ class _NetDispatcher:
         with self._cond:
             if self._stop or self._drain:
                 raise RuntimeError("scheduler is closed; create a new Session")
+            if self._breaker == _OPEN \
+                    and getattr(self.net, "fallback", None) is None:
+                # no fallback to absorb traffic: shed fast while open, and
+                # let the first submit past the reset window in as the probe
+                wait_s = (self._opened_at + self.config.breaker_reset_s
+                          - time.perf_counter())
+                if wait_s > 0:
+                    self.net.stats.note_circuit_reject(len(reqs))
+                    raise CircuitOpenError(getattr(self.net, "name", "?"),
+                                           wait_s)
+                self._set_breaker(_HALF_OPEN)
             bound = self.config.max_queue
             if bound is not None and len(self._heap) + len(reqs) > bound:
                 self.net.stats.note_reject(len(reqs))
@@ -286,6 +462,11 @@ class _NetDispatcher:
     def queue_depth(self) -> int:
         with self._cond:
             return len(self._heap)
+
+    def circuit_state(self) -> str:
+        """``closed`` / ``open`` / ``half_open`` (``Session.health`` input)."""
+        with self._cond:
+            return self._breaker
 
     def close(self, drain: bool = False) -> None:
         """Stop the dispatcher.  ``drain=False`` cancels queued requests
@@ -424,54 +605,176 @@ class _NetDispatcher:
             for r in expired:
                 self._shed(r, now)
 
-    def _dispatch(self, batch: List[_Request]) -> None:
-        net = self.net
-        ex = net.executor
+    # -- supervision ---------------------------------------------------------
+    def _set_breaker(self, state: str) -> None:
+        """Transition the breaker (``_cond`` held) and mirror it to stats."""
+        if state == self._breaker:
+            return
+        self._breaker = state
+        if state == _OPEN:
+            self._opened_at = time.perf_counter()
+        self.net.stats.note_circuit(state)
+
+    def _route(self) -> tuple:
+        """``(executor, degraded)`` for the next launch attempt.  While the
+        breaker is open, traffic routes to the net's fallback executor
+        (degraded) — except once per ``breaker_reset_s`` window, when the
+        primary gets a half-open probe; a closed/half-open breaker always
+        routes primary."""
+        with self._cond:
+            if self._breaker == _OPEN:
+                if (time.perf_counter() - self._opened_at
+                        >= self.config.breaker_reset_s):
+                    self._set_breaker(_HALF_OPEN)   # this launch is the probe
+                    return self.net.executor, False
+                fb = getattr(self.net, "fallback", None)
+                if fb is not None:
+                    return fb, True
+            return self.net.executor, False
+
+    def _note_launch_failure(self, ex, degraded: bool, exc) -> None:
+        stats = self.net.stats
+        stats.note_failure(timeout=isinstance(exc, LaunchTimeoutError))
+        # a crashed call may have scribbled on the resident arena: verify the
+        # preload checksum and restore the pristine image before any retry
+        try:
+            if hasattr(ex, "arena_ok") and not ex.arena_ok():
+                ex.reset_arena()
+                stats.note_arena_reset()
+        except Exception:        # noqa: BLE001 — never mask the real failure
+            pass
+        if degraded:
+            return               # fallback failures don't drive the breaker
+        with self._cond:
+            self._consec_failures += 1
+            bt = self.config.breaker_threshold
+            if self._breaker == _HALF_OPEN:
+                self._set_breaker(_OPEN)            # failed probe: reopen
+            elif self._breaker == _CLOSED and bt is not None \
+                    and self._consec_failures >= bt:
+                self._set_breaker(_OPEN)
+
+    def _note_launch_success(self, degraded: bool) -> None:
+        if degraded:
+            return               # fallback health says nothing about primary
+        with self._cond:
+            self._consec_failures = 0
+            if self._breaker != _CLOSED:
+                self._set_breaker(_CLOSED)          # successful probe
+
+    def _sync_fault_counter(self) -> None:
+        n = getattr(self.net.executor, "faults_injected", None)
+        if n is not None:
+            self.net.stats.note_faults(n)
+
+    def _launch_timeout_s(self, bucket: int) -> float:
+        """Watchdog budget for one launch: the absolute override, or the
+        cost model's predicted batch time x ``watchdog_mult``, floored
+        generously (a cold bucket's first launch pays an XLA compile)."""
+        cfg = self.config
+        if cfg.watchdog_timeout_s is not None:
+            return cfg.watchdog_timeout_s
+        if not self._model_ms_known:
+            self._model_ms_known = True
+            try:
+                ex = self.net.executor
+                cycles = sum(perfmodel.descriptor_cost(d, ex.cfg).cycles
+                             for d in ex.descs)
+                self._model_ms = ex.cfg.cycles_to_ms(cycles)
+            except Exception:    # stub/opaque backends: floor only
+                self._model_ms = None
+        if not self._model_ms:
+            return cfg.watchdog_floor_s
+        return max(cfg.watchdog_floor_s,
+                   self._model_ms * 1e-3 * bucket * cfg.watchdog_mult)
+
+    def _backoff_s(self, attempt: int) -> float:
+        """Exponential backoff with deterministic ±20% jitter: monotonically
+        increasing per attempt (2x base always beats +20% jitter)."""
+        base = self.config.retry_backoff_s * (2 ** (attempt - 1))
+        return base * self._retry_rng.uniform(0.8, 1.2)
+
+    def _launch(self, ex, batch: List[_Request]) -> tuple:
+        """One supervised execution attempt -> ``(outs, bucket, compiles)``."""
         k = len(batch)
         bucket = 1
         compiles0 = getattr(ex, "compile_count", 0)
-        try:
-            caps = ex.capabilities()
-            if k == 1:
-                res = ex.run(batch[0].x)
-                outs = [res]
-            else:
-                # bucket-pad only for native batch programs (compile-once
-                # shapes); sequential fallbacks would just discard the pad.
-                # The backend's declared hard ceiling bounds even the padded
-                # shape (a non-power-of-two ceiling beats a ladder rung).
-                bucket = (self.config.bucket_for(k)
-                          if caps.native_batching else k)
-                if caps.max_batch is not None:
-                    bucket = min(bucket, caps.max_batch)
-                padded = pad_batch([r.x for r in batch], bucket)
-                if caps.shardable:
-                    ex.batch_sharding = self.scheduler._lane_sharding(bucket)
-                res = ex.run_batch(padded, lanes=k)
-                outs = [ExecResult(output_int8=res.output_int8[i],
-                                   output=res.output[i]) for i in range(k)]
-        except BaseException as e:          # noqa: BLE001 — forwarded to callers
-            for r in batch:
-                _resolve_future(r.future, r.future.set_exception, e)
+        caps = ex.capabilities()
+        if k == 1:
+            x = batch[0].x
+            call = lambda: ex.run(x)                     # noqa: E731
+        else:
+            # bucket-pad only for native batch programs (compile-once
+            # shapes); sequential fallbacks would just discard the pad.
+            # The backend's declared hard ceiling bounds even the padded
+            # shape (a non-power-of-two ceiling beats a ladder rung).
+            bucket = (self.config.bucket_for(k)
+                      if caps.native_batching else k)
+            if caps.max_batch is not None:
+                bucket = min(bucket, caps.max_batch)
+            padded = pad_batch([r.x for r in batch], bucket)
+            if caps.shardable:
+                ex.batch_sharding = self.scheduler._lane_sharding(bucket)
+            call = lambda: ex.run_batch(padded, lanes=k)  # noqa: E731
+        res = self._launcher.call(call, self._launch_timeout_s(bucket))
+        if k == 1:
+            outs = [res]
+        else:
+            outs = [ExecResult(output_int8=res.output_int8[i],
+                               output=res.output[i]) for i in range(k)]
+        return outs, bucket, getattr(ex, "compile_count", 0) - compiles0
+
+    def _dispatch(self, batch: List[_Request]) -> None:
+        net = self.net
+        attempt = 1
+        while True:
+            ex, degraded = self._route()
+            try:
+                outs, bucket, compiles = self._launch(ex, batch)
+            except BaseException as e:  # noqa: BLE001 — forwarded to callers
+                self._note_launch_failure(ex, degraded, e)
+                self._sync_fault_counter()
+                with self._cond:
+                    stopping = self._stop
+                if attempt <= self.config.max_retries and not stopping:
+                    # the inputs are still held, so a retry is idempotent;
+                    # an open breaker reroutes the retry to the fallback
+                    net.stats.note_retry()
+                    time.sleep(self._backoff_s(attempt))
+                    attempt += 1
+                    continue
+                err = BackendFaultError(getattr(net, "name", "?"), attempt, e)
+                err.__cause__ = e
+                for r in batch:
+                    _resolve_future(r.future, r.future.set_exception, err)
+                return
+            self._note_launch_success(degraded)
+            self._sync_fault_counter()
+            k = len(batch)
+            done = time.perf_counter()
+            net.stats.note_dispatch(
+                k, [(done - r.t_submit) * 1e6 for r in batch], bucket=bucket,
+                compiles=compiles, degraded=k if degraded else 0)
+            if degraded:
+                outs = [dataclasses.replace(o, degraded=True) for o in outs]
+            for r, out in zip(batch, outs):
+                _resolve_future(r.future, r.future.set_result, out)
+            self._ema_coalesce = ((1 - _EMA_ALPHA) * self._ema_coalesce
+                                  + _EMA_ALPHA * k)
             return
-        done = time.perf_counter()
-        net.stats.note_dispatch(
-            k, [(done - r.t_submit) * 1e6 for r in batch], bucket=bucket,
-            compiles=getattr(ex, "compile_count", 0) - compiles0)
-        for r, out in zip(batch, outs):
-            _resolve_future(r.future, r.future.set_result, out)
-        self._ema_coalesce = ((1 - _EMA_ALPHA) * self._ema_coalesce
-                              + _EMA_ALPHA * k)
 
     def _loop(self) -> None:
-        while True:
-            batch = self._collect()
-            if batch is None:
-                return
-            if batch:
-                self._dispatch(batch)
-            with self._cond:
-                self._inflight = []
+        try:
+            while True:
+                batch = self._collect()
+                if batch is None:
+                    return
+                if batch:
+                    self._dispatch(batch)
+                with self._cond:
+                    self._inflight = []
+        finally:
+            self._launcher.stop()
 
 
 class Scheduler:
@@ -538,6 +841,14 @@ class Scheduler:
             ds = list(self._dispatchers.values())
         return sum(d.queue_depth() for d in ds
                    if net is None or d.net is net)
+
+    def circuit_state(self, net) -> str:
+        """The net's circuit-breaker state: ``closed`` (healthy), ``open``
+        (shedding / serving fallback), or ``half_open`` (probing the
+        primary).  A net that never dispatched is ``closed``."""
+        with self._lock:
+            d = self._dispatchers.get(id(net))
+        return d.circuit_state() if d is not None else _CLOSED
 
     def close(self, drain: bool = False) -> None:
         """Stop every dispatcher.  ``drain=False`` (default): queued requests

@@ -43,6 +43,9 @@ from repro.core.pipeline import Artifacts
 from repro.runtime import registry
 from repro.runtime.scheduler import Scheduler, SchedulerConfig
 
+# NetStats.circuit_state gauge values (Prometheus-friendly ints)
+_CIRCUIT_STATES = {"closed": 0, "half_open": 1, "open": 2}
+
 
 @dataclasses.dataclass
 class NetStats:
@@ -71,6 +74,16 @@ class NetStats:
                                  # dispatch) — nonzero deltas after warmup
                                  # mean a request paid a compile stall
     warmup_ms: float = 0.0       # time spent in Session.warmup for this net
+    # -- fault-tolerance counters (dispatcher supervisor) --------------------
+    retries: int = 0             # launch attempts beyond each batch's first
+    backend_failures: int = 0    # failed launch attempts (incl. retried ones)
+    watchdog_timeouts: int = 0   # launches abandoned by the watchdog
+    arena_resets: int = 0        # poisoned-arena restores (checksum mismatch)
+    degraded: int = 0            # requests served by the fallback backend
+    faults_injected: int = 0     # injected faults observed (FaultyExecutor)
+    circuit_state: int = 0       # breaker gauge: 0 closed, 1 half-open, 2 open
+    circuit_opens: int = 0       # closed/half-open -> open transitions
+    circuit_rejected: int = 0    # submits shed while the circuit was open
     bucket_launches: Dict[int, int] = dataclasses.field(
         default_factory=dict)    # dispatched-batch count per padded bucket
     latencies_us: "collections.deque" = dataclasses.field(
@@ -101,7 +114,7 @@ class NetStats:
             self.shed += n
 
     def note_dispatch(self, k: int, latencies_us, bucket: Optional[int] = None,
-                      compiles: int = 0) -> None:
+                      compiles: int = 0, degraded: int = 0) -> None:
         with self._lock:
             self.dispatches += 1
             self.coalesced_images += k
@@ -110,12 +123,43 @@ class NetStats:
                 self.bucket_launches[int(bucket)] = \
                     self.bucket_launches.get(int(bucket), 0) + 1
             self.compile_count += compiles
+            self.degraded += degraded
             self.latencies_us.extend(latencies_us)
 
     def note_warmup(self, ms: float, compiles: int = 0) -> None:
         with self._lock:
             self.warmup_ms += ms
             self.compile_count += compiles
+
+    def note_retry(self, n: int = 1) -> None:
+        with self._lock:
+            self.retries += n
+
+    def note_failure(self, timeout: bool = False) -> None:
+        with self._lock:
+            self.backend_failures += 1
+            if timeout:
+                self.watchdog_timeouts += 1
+
+    def note_arena_reset(self) -> None:
+        with self._lock:
+            self.arena_resets += 1
+
+    def note_faults(self, total: int) -> None:
+        """Mirror the FaultyExecutor's absolute injection count."""
+        with self._lock:
+            self.faults_injected = max(self.faults_injected, int(total))
+
+    def note_circuit(self, state: str) -> None:
+        s = _CIRCUIT_STATES[state]
+        with self._lock:
+            if s == 2 and self.circuit_state != 2:
+                self.circuit_opens += 1
+            self.circuit_state = s
+
+    def note_circuit_reject(self, n: int) -> None:
+        with self._lock:
+            self.circuit_rejected += n
 
     # -- readers -------------------------------------------------------------
     @property
@@ -163,6 +207,8 @@ class _Net:
     stats: NetStats = dataclasses.field(default_factory=NetStats)
     input_elems: Optional[int] = None    # cached expected input size
     dtype: str = "int8"                  # engine datapath (capabilities())
+    fallback: object = None              # degraded-mode executor (or None)
+    fallback_backend: Optional[str] = None
 
 
 class Session:
@@ -189,14 +235,27 @@ class Session:
     # -- residency -----------------------------------------------------------
     def load(self, artifacts: Artifacts, name: Optional[str] = None,
              backend: Optional[str] = None, replace: bool = False,
+             fallback_backend: Optional[str] = None, fault_plan=None,
              **executor_kw) -> str:
-        """Make ``artifacts`` resident under ``name``; returns the name."""
+        """Make ``artifacts`` resident under ``name``; returns the name.
+
+        ``fallback_backend`` names a second registered backend (e.g.
+        ``"ref"``) built over the same artifacts: when the net's circuit
+        breaker opens, traffic routes there with results marked
+        ``degraded=True`` instead of shedding.  ``fault_plan`` wraps the
+        primary executor in a :class:`repro.runtime.faults.FaultyExecutor`
+        (the chaos/test harness's injection point)."""
         name = name or artifacts.graph_name
         backend = backend or self.default_backend
         if name in self._nets and not replace:
             raise ValueError(f"network {name!r} already resident "
                              f"(pass replace=True or a different name)")
         ex = registry.create(backend, artifacts, **executor_kw)
+        if fault_plan is not None:
+            from repro.runtime.faults import FaultyExecutor
+            ex = FaultyExecutor(ex, fault_plan)
+        fallback = (registry.create(fallback_backend, artifacts)
+                    if fallback_backend else None)
         if name not in self._nets:
             self._order.append(name)
         else:                               # replace=True: retire the old
@@ -210,7 +269,8 @@ class Session:
         self._nets[name] = _Net(
             name=name, backend=backend, executor=ex, artifacts=artifacts,
             stats=stats, dtype=dtype,
-            input_elems=int(np.prod(dims[1:])) if dims is not None else None)
+            input_elems=int(np.prod(dims[1:])) if dims is not None else None,
+            fallback=fallback, fallback_backend=fallback_backend)
         if self._warmup_on_load:
             self.warmup(name)
         return name
@@ -309,6 +369,29 @@ class Session:
 
     def stats(self, net: Optional[str] = None) -> NetStats:
         return self._resolve(net).stats
+
+    def health(self, net: Optional[str] = None) -> Dict[str, Dict]:
+        """Per-net serving health, derived from the circuit breaker.
+
+        ``{name: {"state", "circuit", "fallback"}}`` where ``state`` is
+        ``healthy`` (breaker closed), ``degraded`` (breaker not closed but a
+        fallback backend is absorbing traffic), or ``circuit_open`` (breaker
+        not closed and nothing to fall back to — submits shed with 503).
+        ``/healthz`` renders this, returning non-200 unless all healthy."""
+        names = [net] if net is not None else list(self._order)
+        out: Dict[str, Dict] = {}
+        for nm in names:
+            n = self._resolve(nm)
+            circuit = self._scheduler.circuit_state(n)
+            if circuit == "closed":
+                state = "healthy"
+            elif n.fallback is not None:
+                state = "degraded"
+            else:
+                state = "circuit_open"
+            out[nm] = {"state": state, "circuit": circuit,
+                       "fallback": n.fallback_backend}
+        return out
 
     def queue_depth(self, net: Optional[str] = None) -> int:
         """Requests currently queued (not in-flight) — one net's, or every

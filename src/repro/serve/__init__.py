@@ -20,9 +20,14 @@ head-of-line blocks another's; requests carry ``priority`` and
 ``deadline_us`` and the queue bound rejects overload with 429.
 """
 
-from repro.serve.client import (BadRequestError, DeadlineError, NotFoundError,
-                                OverloadedError, ServeClient, ServeError)
+from repro.serve.client import (BackendError, BadRequestError,
+                                ClientTimeoutError, DeadlineError,
+                                NotFoundError, OverloadedError, ServeClient,
+                                ServeError, UnavailableError, WarmingUpError)
+from repro.serve.config import ServeConfig
 from repro.serve.http import make_server, serve_forever
 
 __all__ = ["ServeClient", "ServeError", "BadRequestError", "NotFoundError",
-           "OverloadedError", "DeadlineError", "make_server", "serve_forever"]
+           "OverloadedError", "DeadlineError", "BackendError",
+           "ClientTimeoutError", "UnavailableError", "WarmingUpError",
+           "ServeConfig", "make_server", "serve_forever"]

@@ -24,6 +24,7 @@ import argparse
 
 from repro.core.pipeline import Artifacts, CompilerPipeline
 from repro.runtime import Session, SchedulerConfig
+from repro.serve.config import ServeConfig
 from repro.serve.http import serve_forever
 
 
@@ -60,6 +61,13 @@ def main(argv=None) -> None:
     ap.add_argument("--max-queue", type=int, default=256,
                     help="per-net queue bound; past it submits get 429 "
                          "(0 = unbounded)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="failed launches are retried this many times with "
+                         "exponential backoff before futures fail")
+    ap.add_argument("--fallback-backend", default=None, metavar="BACKEND",
+                    help="degraded-mode backend (e.g. 'ref') every net "
+                         "falls back to while its circuit breaker is open; "
+                         "default: shed with 503 + Retry-After")
     ap.add_argument("--warmup", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="precompile every (net, bucket) program before "
@@ -75,21 +83,26 @@ def main(argv=None) -> None:
 
     cfg = SchedulerConfig(max_batch=args.max_batch,
                           max_wait_us=args.max_wait_us,
-                          max_queue=args.max_queue or None)
+                          max_queue=args.max_queue or None,
+                          max_retries=args.max_retries)
+    serve_cfg = ServeConfig(fallback_backend=args.fallback_backend,
+                            warmup=args.warmup)
     ses = Session(scheduler=cfg, backend=args.backend)
     for spec in args.artifacts:
         path, _, name = spec.partition(":")
-        loaded = ses.load(Artifacts.load(path), name=name or None)
+        loaded = ses.load(Artifacts.load(path), name=name or None,
+                          fallback_backend=serve_cfg.fallback_backend)
         print(f"[repro.serve] resident: {loaded} <- {path}")
     for spec in args.model:
         from repro.frontend.resolve import resolve_net
         src, name = _split_name(spec)
         g, params = resolve_net(src)
         art = CompilerPipeline(g, params=params).run()
-        loaded = ses.load(art, name=name or None)
+        loaded = ses.load(art, name=name or None,
+                          fallback_backend=serve_cfg.fallback_backend)
         print(f"[repro.serve] resident: {loaded} <- compiled {src}")
     serve_forever(ses, host=args.host, port=args.port,
-                  verbose=not args.quiet, warmup=args.warmup)
+                  verbose=not args.quiet, warmup=serve_cfg.warmup)
 
 
 if __name__ == "__main__":

@@ -11,19 +11,29 @@ exact same code path.
 
 from __future__ import annotations
 
+import math
 import time
 from concurrent.futures import CancelledError, Future
+from concurrent.futures import TimeoutError as FuturesTimeoutError
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.runtime.scheduler import DeadlineExceededError, QueueFullError
+from repro.runtime.scheduler import (BackendFaultError, CircuitOpenError,
+                                     DeadlineExceededError, QueueFullError)
+
+# client-side timeout derived from deadline_us: the deadline bounds *launch*,
+# not completion, so allow the full budget plus a generous execution grace —
+# the point is that a wedged server can never hold the caller forever
+_TIMEOUT_GRACE_S = 30.0
 
 
 class ServeError(Exception):
-    """Base serving error; ``status``/``code`` map straight onto HTTP."""
+    """Base serving error; ``status``/``code`` map straight onto HTTP.
+    ``retry_after_s`` (when set) rides 429/503 replies as ``Retry-After``."""
     status = 500
     code = "internal"
+    retry_after_s: Optional[float] = None
 
 
 class BadRequestError(ServeError):
@@ -40,6 +50,7 @@ class OverloadedError(ServeError):
     """Admission control rejected the request (queue at ``max_queue``)."""
     status = 429
     code = "overloaded"
+    retry_after_s = 1.0
 
 
 class WarmingUpError(ServeError):
@@ -47,12 +58,38 @@ class WarmingUpError(ServeError):
     ``/healthz`` reports ``"warming"`` for the duration."""
     status = 503
     code = "warming"
+    retry_after_s = 1.0
+
+
+class UnavailableError(ServeError):
+    """The net's circuit breaker is open and no fallback backend is
+    configured; ``Retry-After`` carries the time to the half-open probe."""
+    status = 503
+    code = "circuit_open"
+
+    def __init__(self, message: str = "", retry_after_s: Optional[float] = None):
+        super().__init__(message)
+        if retry_after_s is not None:
+            self.retry_after_s = retry_after_s
+
+
+class BackendError(ServeError):
+    """The backend exhausted its retry budget for this request's batch."""
+    status = 500
+    code = "backend_fault"
 
 
 class DeadlineError(ServeError):
     """The request's ``deadline_us`` elapsed before launch; it was shed."""
     status = 504
     code = "deadline_exceeded"
+
+
+class ClientTimeoutError(ServeError):
+    """The client-side ``timeout_s`` elapsed waiting for the result; the
+    request may still complete server-side, but the caller has moved on."""
+    status = 504
+    code = "client_timeout"
 
 
 class ServeClient:
@@ -63,8 +100,9 @@ class ServeClient:
     result, a backend error, or :class:`DeadlineError` when shed.
     """
 
-    def __init__(self, session):
+    def __init__(self, session, timeout_s: Optional[float] = None):
         self.session = session
+        self.timeout_s = timeout_s       # default client-side result timeout
         self._warming = False
 
     # -- warmup gate ---------------------------------------------------------
@@ -95,23 +133,43 @@ class ServeClient:
             raise NotFoundError(str(e.args[0]) if e.args else str(e)) from None
         except QueueFullError as e:
             raise OverloadedError(str(e)) from None
+        except CircuitOpenError as e:
+            raise UnavailableError(str(e),
+                                   retry_after_s=e.retry_after_s) from None
         except (ValueError, TypeError) as e:
             raise BadRequestError(str(e)) from None
 
     @staticmethod
     def resolve_future(fut: Future, timeout: Optional[float] = None):
-        """Block on a runtime future, translating shed/cancel exceptions."""
+        """Block on a runtime future, translating shed/fault/cancel/timeout
+        exceptions into their typed ``ServeError``."""
         try:
             return fut.result(timeout=timeout)
         except DeadlineExceededError as e:
             raise DeadlineError(str(e)) from None
+        except BackendFaultError as e:
+            raise BackendError(str(e)) from None
+        except FuturesTimeoutError:
+            raise ClientTimeoutError(
+                f"no result within the client-side timeout ({timeout}s); "
+                f"the server may be wedged") from None
         except CancelledError:
             raise ServeError("request cancelled: server shutting down") from None
 
     def infer(self, net: Optional[str], x, priority: int = 0,
               deadline_us: Optional[float] = None,
               timeout: Optional[float] = None):
-        """Synchronous inference -> ``ExecResult`` (or a ``ServeError``)."""
+        """Synchronous inference -> ``ExecResult`` (or a ``ServeError``).
+
+        ``timeout`` (seconds) bounds the client-side wait; it defaults to
+        the constructor's ``timeout_s``, or — when the request carries a
+        finite ``deadline_us`` — to the deadline plus an execution grace,
+        so a stuck server can never block the caller indefinitely."""
+        if timeout is None:
+            timeout = self.timeout_s
+        if timeout is None and deadline_us is not None \
+                and math.isfinite(deadline_us):
+            timeout = deadline_us * 1e-6 + _TIMEOUT_GRACE_S
         return self.resolve_future(
             self.infer_async(net, x, priority=priority,
                              deadline_us=deadline_us), timeout=timeout)
@@ -141,8 +199,20 @@ class ServeClient:
         return out
 
     def healthz(self) -> Dict:
-        return {"status": "warming" if self._warming else "ok",
-                "nets": len(self.session.networks), "time": time.time()}
+        """Liveness + per-net health.  ``status`` is ``ok`` only when every
+        resident net is ``healthy``; the HTTP layer returns 503 otherwise.
+        Per-net states: ``warming`` / ``healthy`` / ``degraded`` (circuit
+        open, fallback serving) / ``circuit_open`` (shedding)."""
+        ses = self.session
+        if self._warming:
+            states = {n: "warming" for n in ses.networks}
+            status = "warming"
+        else:
+            states = {n: h["state"] for n, h in ses.health().items()}
+            status = ("ok" if all(s == "healthy" for s in states.values())
+                      else "degraded")
+        return {"status": status, "nets": len(ses.networks),
+                "net_states": states, "time": time.time()}
 
     def metrics_text(self) -> str:
         from repro.serve import metrics

@@ -1,0 +1,28 @@
+"""Serving-policy configuration shared by the CLI and embedders.
+
+``SchedulerConfig`` owns the *runtime* knobs (batching, queues, retries,
+watchdog, breaker); ``ServeConfig`` owns the *front-end* policy layered on
+top — what to do when a net's circuit opens, and whether the socket admits
+traffic before warmup finishes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Front-end serving policy.
+
+    ``fallback_backend`` — registered backend name (e.g. ``"ref"``) every
+                       loaded net falls back to when its circuit breaker
+                       opens; responses served this way carry
+                       ``degraded: true``.  ``None`` (default): no fallback,
+                       an open circuit sheds with 503 + ``Retry-After``.
+    ``warmup``         — hold traffic (503 ``warming``) until every net's
+                       bucket ladder is precompiled.
+    """
+    fallback_backend: Optional[str] = None
+    warmup: bool = True

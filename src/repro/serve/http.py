@@ -5,11 +5,16 @@
          (``Content-Type: application/x-npy``); response JSON, or .npy of
          ``output_int8`` under ``Accept: application/x-npy``
     GET  /v1/nets     — resident networks + shapes + queue depths
-    GET  /healthz     — liveness
+    GET  /healthz     — per-net health (warming / healthy / degraded /
+                        circuit_open); non-200 when any net is unhealthy
     GET  /metrics     — Prometheus text format (``NetStats.snapshot()``)
 
 Status codes: 400 malformed payload, 404 unknown net/route, 429 queue at
-``max_queue`` (admission control), 504 deadline shed, 500 backend error.
+``max_queue`` (admission control), 503 circuit open / warming (with
+``Retry-After``), 504 deadline shed or client timeout, 500 backend fault
+(retries exhausted).  A response served by a net's fallback backend while
+its circuit is open carries ``"degraded": true`` in the JSON body and an
+``X-Repro-Degraded: 1`` header.
 
 ``ThreadingHTTPServer`` gives one handler thread per in-flight request;
 concurrent posts against the same net coalesce in that net's dispatcher,
@@ -20,6 +25,7 @@ layer adds transport, never scheduling policy.
 from __future__ import annotations
 
 import json
+import math
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -44,10 +50,13 @@ class ServeHandler(BaseHTTPRequestHandler):
         if getattr(self.server, "verbose", False):
             BaseHTTPRequestHandler.log_message(self, fmt, *args)
 
-    def _reply(self, status: int, body: bytes, content_type: str) -> None:
+    def _reply(self, status: int, body: bytes, content_type: str,
+               extra_headers: Optional[dict] = None) -> None:
         self.send_response(status)
         self.send_header("Content-Type", content_type)
         self.send_header("Content-Length", str(len(body)))
+        for k, v in (extra_headers or {}).items():
+            self.send_header(k, v)
         self.end_headers()
         self.wfile.write(body)
 
@@ -60,8 +69,15 @@ class ServeHandler(BaseHTTPRequestHandler):
         # (e.g. 404 on the route) — close the connection rather than let a
         # keep-alive client's unread body desync the next request
         self.close_connection = True
-        body, ctype = payload.encode_error(exc.status, exc.code, str(exc))
-        self._reply(exc.status, body, ctype)
+        retry_after = getattr(exc, "retry_after_s", None)
+        body, ctype = payload.encode_error(exc.status, exc.code, str(exc),
+                                           retry_after_s=retry_after)
+        extra = None
+        if exc.status in (429, 503):
+            # whole seconds per RFC 9110; a sub-second probe window still
+            # tells the client to back off for at least one
+            extra = {"Retry-After": str(max(1, math.ceil(retry_after or 1.0)))}
+        self._reply(exc.status, body, ctype, extra)
 
     # -- routes --------------------------------------------------------------
     def do_GET(self) -> None:               # noqa: N802 (stdlib casing)
@@ -69,7 +85,10 @@ class ServeHandler(BaseHTTPRequestHandler):
         path = urlparse(self.path).path
         try:
             if path == "/healthz":
-                self._reply_json(200, client.healthz())
+                doc = client.healthz()
+                # non-200 when any resident net is unhealthy, so load
+                # balancers/orchestrators act on degraded state
+                self._reply_json(200 if doc["status"] == "ok" else 503, doc)
             elif path == "/metrics":
                 self._reply(200, client.metrics_text().encode("utf-8"),
                             "text/plain; version=0.0.4")
@@ -118,7 +137,9 @@ class ServeHandler(BaseHTTPRequestHandler):
             out, ctype = payload.encode_result(
                 net, res, (time.perf_counter() - t0) * 1e6,
                 accept=self.headers.get("Accept", ""))
-            self._reply(200, out, ctype)
+            extra = ({"X-Repro-Degraded": "1"}
+                     if getattr(res, "degraded", False) else None)
+            self._reply(200, out, ctype, extra)
         except ServeError as e:
             self._reply_error(e)
         except Exception as e:              # noqa: BLE001 — last-resort 500

@@ -27,6 +27,22 @@ _COUNTERS = [
     ("compile_count_total", "compile_count", "counter",
      "Executor program builds observed (warmup + dispatch); a nonzero "
      "delta after warmup means a request paid a compile stall"),
+    ("retries_total", "retries", "counter",
+     "Batch launch attempts beyond each batch's first (supervisor retries)"),
+    ("backend_failures_total", "backend_failures", "counter",
+     "Failed launch attempts (exceptions + watchdog timeouts)"),
+    ("watchdog_timeouts_total", "watchdog_timeouts", "counter",
+     "Launches abandoned by the per-launch watchdog"),
+    ("arena_resets_total", "arena_resets", "counter",
+     "Poisoned-arena restores (weight checksum mismatch after a failure)"),
+    ("degraded_responses_total", "degraded", "counter",
+     "Requests served by the fallback backend while the circuit was open"),
+    ("faults_injected_total", "faults_injected", "counter",
+     "Injected faults observed (FaultyExecutor chaos harness)"),
+    ("circuit_opens_total", "circuit_opens", "counter",
+     "Circuit-breaker transitions to open"),
+    ("circuit_rejected_total", "circuit_rejected", "counter",
+     "Submits shed with 503 while the circuit was open"),
 ]
 _GAUGES = [
     ("queue_depth_peak", "queue_depth_peak", "gauge",
@@ -37,6 +53,8 @@ _GAUGES = [
      "Wall time spent precompiling this net's bucket ladder at startup"),
     ("latency_samples", "latency_samples", "gauge",
      "Latency samples in the percentile window"),
+    ("circuit_state", "circuit_state", "gauge",
+     "Circuit-breaker state: 0 closed, 1 half-open, 2 open"),
 ]
 _QUANTILES = [("0.5", "latency_p50_us"), ("0.9", "latency_p90_us"),
               ("0.99", "latency_p99_us")]

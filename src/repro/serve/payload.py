@@ -99,9 +99,16 @@ def encode_result(net: str, res, latency_us: float,
         "argmax": int(np.argmax(out)),
         "latency_us": round(float(latency_us), 1),
     }
+    if getattr(res, "degraded", False):
+        # served by the fallback backend while the primary's circuit was
+        # open; npy responses signal this via the X-Repro-Degraded header
+        doc["degraded"] = True
     return json.dumps(doc).encode("utf-8"), JSON_TYPE
 
 
-def encode_error(status: int, code: str, message: str) -> Tuple[bytes, str]:
+def encode_error(status: int, code: str, message: str,
+                 retry_after_s=None) -> Tuple[bytes, str]:
     doc = {"error": {"status": status, "code": code, "message": message}}
+    if retry_after_s is not None:
+        doc["error"]["retry_after_s"] = round(float(retry_after_s), 3)
     return json.dumps(doc).encode("utf-8"), JSON_TYPE
