@@ -15,6 +15,9 @@ rows add two more: ``recovery_ms`` (circuit-breaker outage -> healed
 primary; growth fails like us_per_call) and ``hang_count``, which is gated
 *absolutely* — any unresolved future in the fresh run fails regardless of
 baseline or tolerance, because a hung future is an outage, not a slowdown.
+Table 8's sampled-tracing row is gated absolutely too: its fresh
+``tracing_overhead_pct`` must stay under the ``overhead_budget_pct`` the
+baseline row declares (default 5%), on any machine.
 ``--update`` rewrites the baselines from the fresh run instead (use after
 an intentional change, and commit the result).
 
@@ -123,6 +126,21 @@ def main() -> int:
                           f"future(s) (must be 0)")
                 else:
                     print(f"OK   {name} [hang_count]: 0")
+            # tracing_overhead_pct (table 8's sampled row) is also gated
+            # absolutely, against the budget the baseline row declares:
+            # sampled tracing past a few percent is a bug on any machine,
+            # so no baseline ratio or normalization applies
+            n_ov = nrow.get("tracing_overhead_pct")
+            if n_ov is not None:
+                budget = float(brow.get("overhead_budget_pct", 5.0))
+                checked += 1
+                if n_ov > budget:
+                    failures.append(f"{name} [tracing_overhead]")
+                    print(f"FAIL {name} [tracing_overhead]: {n_ov:+.2f}% "
+                          f"(budget {budget:.1f}%)")
+                else:
+                    print(f"OK   {name} [tracing_overhead]: {n_ov:+.2f}% "
+                          f"<= {budget:.1f}%")
         for name in sorted(set(new_rows) - set(base_rows)):
             print(f"NEW  {name}: {new_rows[name]['us_per_call']:.1f}us "
                   f"(no baseline — commit --update output to start tracking)")

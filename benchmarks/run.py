@@ -16,6 +16,10 @@ Tables:
   7  chaos soak: the table-5 trace under injected fault storms —
      goodput retained, watchdog hang containment (hang_count must
      be 0), circuit-breaker outage recovery_ms                   (fault layer)
+  8  observability: request-tracing overhead (sampled mode gated
+     under its budget), per-layer profiled-path cost, perf-model
+     calibration fidelity; --smoke also writes the captured Chrome
+     trace as TRACE_table8.json                                  (obs layer)
 
 ``--smoke`` runs every table in reduced-size mode (implies ``--fast``) and
 writes one ``BENCH_table<N>.json`` per table into ``--out`` (default ``.``) —
@@ -48,10 +52,10 @@ def main() -> None:
 
     from benchmarks import (table1_storage, table2_nvsmall, table3_nvfull,
                             table4_serving, table5_serving_frontend,
-                            table7_chaos)
+                            table7_chaos, table8_observability)
     tables = {1: table1_storage, 2: table2_nvsmall, 3: table3_nvfull,
               4: table4_serving, 5: table5_serving_frontend,
-              7: table7_chaos}
+              7: table7_chaos, 8: table8_observability}
     picked = {args.table: tables[args.table]} if args.table else tables
 
     out_dir = pathlib.Path(args.out)
@@ -65,6 +69,10 @@ def main() -> None:
             kw = {"fast": fast}
             if num == 1 and args.model:
                 kw["extra_models"] = args.model
+            if num == 8 and args.smoke:
+                # ship the captured Chrome trace next to the BENCH files so
+                # CI uploads an openable timeline of its own traffic
+                kw["trace_out"] = out_dir / "TRACE_table8.json"
             rows = mod.run(**kw)
             for row in rows:
                 print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")

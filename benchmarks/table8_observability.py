@@ -1,0 +1,161 @@
+"""Observability overhead + perf-model fidelity (the repro.obs plane).
+
+Four questions the tracing/profiling tentpole must answer with numbers:
+
+  * ``tracing_off`` / ``tracing_sampled`` / ``tracing_full`` — what does
+    request tracing cost?  Per-call latency through a ``Session`` with the
+    tracer disabled, sampling every ``SAMPLE_EVERY``-th request (the
+    production setting), and tracing everything.  Measured interleaved
+    (one traced call and one untraced call per loop iteration) so machine
+    drift cancels out of the overhead ratio.  The sampled row publishes
+    ``tracing_overhead_pct`` with an ABSOLUTE ``overhead_budget_pct``
+    gate in ``check_regression.py``: sampled tracing past a few percent
+    is a bug, on any machine.
+  * ``profiled_run`` — what does the per-layer profiled path cost?  The
+    stepwise individually-timed kernels vs the fused program (bit-exact
+    by construction; the slowdown is the price of per-op timing, which is
+    why profiling is opt-in and rides the sampler).
+  * ``fidelity_*`` — does calibration work?  Per-layer measured timings
+    feed ``perfmodel.calibrate``; the row reports the mean |log error| of
+    the uncalibrated cost model (best global scale already divided out)
+    against the calibrated fit.  ``err_cal < err_uncal`` is the
+    ROADMAP's perf-model fidelity item becoming measurable.
+
+``run(trace_out=...)`` additionally dumps the fully-traced session's ring
+buffer as Chrome trace-event JSON — CI uploads it as a workflow artifact,
+so every CI run ships an openable timeline of its own benchmark traffic.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import graph, perfmodel
+from repro.core.pipeline import CompilerPipeline
+from repro.obs import TraceConfig, fidelity_report, profile_layers
+from repro.runtime import Session, create_executor
+
+SAMPLE_EVERY = 16          # the production sampling rate the gate protects
+
+
+def _bench_ab(fn_a, fn_b, iters: int) -> tuple:
+    """Interleaved medians: each loop iteration times one call of each arm,
+    so machine-load drift hits both sides equally and the overhead ratio
+    stays meaningful on small shared CI boxes."""
+    fn_a(), fn_b()                              # warmup/compile
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn_a()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        tb.append(time.perf_counter() - t0)
+    return float(np.median(ta)) * 1e6, float(np.median(tb)) * 1e6
+
+
+def _fidelity_row(name: str, art, fast: bool) -> dict:
+    ex = create_executor("baremetal", art)
+    samples = profile_layers(ex, iters=2 if fast else 5, warmup=1)
+    cal = perfmodel.calibrate(samples, ex.descs, dtype=ex.cfg.dtype)
+    rep = fidelity_report(ex, samples, cal)
+    improved = rep["err_cal"] <= rep["err_uncal"] + 1e-9
+    return {
+        "name": f"table8_obs/fidelity_{name}",
+        # summed per-layer medians: a stable proxy for one profiled pass
+        "us_per_call": float(sum(s["us"] for s in samples)),
+        # per-op profiled timings on shared boxes are noisy; this row's
+        # committed value exists for the derived fidelity fields, so it
+        # gets a wide relative budget like the table-5 load rows
+        "tolerance": 2.5,
+        "derived": (f"err_uncal={rep['err_uncal']:.3f} "
+                    f"err_cal={rep['err_cal']:.3f} "
+                    f"calibration_improves={improved} "
+                    f"gemm_layers={rep['gemm_layers']} "
+                    f"families={len(cal.families)} "
+                    f"(mean |log measured/modeled| over CONV/FC layers; "
+                    f"the uncalibrated model is charged AFTER its best "
+                    f"global scale is divided out, so the fit must win on "
+                    f"shape, not units)"),
+    }
+
+
+def run(fast: bool = False, trace_out=None):
+    g = graph.lenet5()
+    art = CompilerPipeline(g).run()
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, g.input_shape).astype(np.float32)
+    # the overhead A/B gates a few-percent effect: give it enough iters
+    # that the interleaved medians resolve it even in smoke mode
+    ab_iters = 100 if fast else 250
+
+    ses_off = Session(art, trace=TraceConfig(enabled=False), warmup=True)
+    ses_s = Session(art, trace=TraceConfig(sample_rate=SAMPLE_EVERY),
+                    warmup=True)
+    ses_full = Session(art, trace=TraceConfig(sample_rate=1), warmup=True)
+    try:
+        off_us, sampled_us = _bench_ab(lambda: ses_off.run(x),
+                                       lambda: ses_s.run(x), ab_iters)
+        off2_us, full_us = _bench_ab(lambda: ses_off.run(x),
+                                     lambda: ses_full.run(x), ab_iters)
+        sampled_pct = (sampled_us / off_us - 1.0) * 100.0
+        full_pct = (full_us / off2_us - 1.0) * 100.0
+
+        # profiled path: stepwise per-op timing vs the fused program
+        ex = ses_full.executor()
+        prof_exact = bool(np.array_equal(
+            np.asarray(ex.run_profiled(x)[0].output_int8),
+            np.asarray(ex.run(x).output_int8)))
+        run_us, prof_us = _bench_ab(lambda: ex.run(x),
+                                    lambda: ex.run_profiled(x),
+                                    max(10, ab_iters // 5))
+        n_traces = len(ses_full.tracer.traces())
+        if trace_out is not None:
+            ses_full.tracer.to_file(trace_out)
+    finally:
+        ses_off.close()
+        ses_s.close()
+        ses_full.close()
+
+    rows = [
+        {
+            "name": "table8_obs/tracing_off",
+            "us_per_call": off_us,
+            "derived": f"tracer_disabled iters={ab_iters} (overhead A/B "
+                       f"baseline; ids still assigned, nothing recorded)",
+        },
+        {
+            "name": f"table8_obs/tracing_sampled{SAMPLE_EVERY}",
+            "us_per_call": sampled_us,
+            "tracing_overhead_pct": sampled_pct,
+            "overhead_budget_pct": 5.0,
+            "derived": (f"overhead_vs_off={sampled_pct:+.2f}% "
+                        f"budget=5% sample_rate={SAMPLE_EVERY} "
+                        f"(absolute gate in check_regression.py: sampled "
+                        f"tracing past the budget fails CI on any machine)"),
+        },
+        {
+            "name": "table8_obs/tracing_full",
+            "us_per_call": full_us,
+            "derived": (f"overhead_vs_off={full_pct:+.2f}% sample_rate=1 "
+                        f"traces_recorded={n_traces} (informational: the "
+                        f"every-request ceiling, not the production mode)"),
+        },
+        {
+            "name": "table8_obs/profiled_run",
+            "us_per_call": prof_us,
+            "tolerance": 2.5,
+            "derived": (f"fused_us={run_us:.0f} "
+                        f"profiled_slowdown={prof_us/run_us:.2f}x "
+                        f"bit_exact_vs_fused={prof_exact} "
+                        f"layers_timed={len(ex.descs)} (the cost of timing "
+                        f"each descriptor's kernel individually — why "
+                        f"profiling is opt-in and rides the sampler)"),
+        },
+        _fidelity_row("lenet5", art, fast),
+        _fidelity_row("resnet18", CompilerPipeline(graph.resnet18()).run(),
+                      fast),
+    ]
+    return rows

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import zlib
 from typing import Dict, List, Optional, Protocol, Sequence, Union, runtime_checkable
 
@@ -769,6 +770,10 @@ class ExecutorCapabilities:
     ``kernels``          — the GEMM kernels this backend's plan resolved to
                            (names from ``core.perfmodel``), so callers can
                            see which code path serves each network.
+    ``profileable``      — ``run_profiled``/``run_batch_profiled`` exist:
+                           the backend can time each descriptor's kernel
+                           individually (the observability plane's per-layer
+                           sampling consults this before asking).
     """
     native_batching: bool = False
     resident_arena: bool = False
@@ -776,6 +781,7 @@ class ExecutorCapabilities:
     max_batch: Optional[int] = None
     dtype: str = "int8"
     kernels: tuple = ()
+    profileable: bool = False
 
 
 @runtime_checkable
@@ -983,10 +989,16 @@ class _ExecutorBase:
         """Invalidate device-resident arena copies (no-op for host-only
         backends); overridden by backends with ``resident_arena``."""
 
+    # Backends that can time each descriptor's kernel individually set this
+    # and implement ``run_profiled``; the scheduler consults
+    # ``capabilities().profileable`` before ever calling the profiled path.
+    _profileable = False
+
     def capabilities(self) -> ExecutorCapabilities:
         """Default: sequential batching, no device residency, not shardable."""
         return ExecutorCapabilities(dtype=self.cfg.dtype,
-                                    kernels=self._plan_kernels())
+                                    kernels=self._plan_kernels(),
+                                    profileable=self._profileable)
 
     def run_batch(self, X: np.ndarray,
                   lanes: Optional[int] = None) -> ExecResult:
@@ -1000,6 +1012,32 @@ class _ExecutorBase:
         outs = [self.run(x) for x in X[:n]]
         return ExecResult(output_int8=np.stack([o.output_int8 for o in outs]),
                           output=np.stack([o.output for o in outs]))
+
+    def run_profiled(self, x: np.ndarray) -> tuple:
+        """``(ExecResult, samples)`` with one per-layer timing sample per
+        descriptor: ``{"index", "unit", "kernel", "bucket", "native", "us",
+        "t0", "t1"}`` (``t0``/``t1`` are ``time.perf_counter`` bounds, so the
+        tracer can place the kernels on its timeline).  Only meaningful when
+        ``capabilities().profileable`` — the default raises."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support per-layer profiling "
+            f"(capabilities().profileable is False)")
+
+    def run_batch_profiled(self, X: np.ndarray,
+                           lanes: Optional[int] = None) -> tuple:
+        """Batched profiled inference, default: sequential profiled runs per
+        lane (each sample keeps ``bucket=1`` — the lanes really did execute
+        as independent single-image programs)."""
+        X = np.asarray(X)
+        n = X.shape[0] if lanes is None else lanes
+        outs, samples = [], []
+        for x in X[:n]:
+            r, s = self.run_profiled(x)
+            outs.append(r)
+            samples.extend(s)
+        res = ExecResult(output_int8=np.stack([o.output_int8 for o in outs]),
+                         output=np.stack([o.output for o in outs]))
+        return res, samples
 
 
 class BareMetalExecutor(_ExecutorBase):
@@ -1030,6 +1068,11 @@ class BareMetalExecutor(_ExecutorBase):
         else:
             ops = [_op_from_descriptor_bf16(d, self.base, c.kernel)
                    for d, c in zip(self.descs, self.kernel_plan)]
+        # kept for the profiled path: the same closures, jitted per-op so
+        # each descriptor's kernel can be timed behind block_until_ready
+        self._single_ops = ops
+        self._profile_fns = None
+        self._profile_batch_fns: Dict[int, list] = {}
         n_out = self.output_bytes
         out_off = self.output_off
 
@@ -1076,9 +1119,10 @@ class BareMetalExecutor(_ExecutorBase):
         self.batch_sharding = None
 
     def _batch_ops(self, n: int):
-        """Per-bucket op list: the natively batched fused launch where this
-        bucket's plan says so, the vmapped single-image op (the oracle and
-        the non-native fallback) everywhere else."""
+        """Per-bucket op list as ``(op, choice, native)`` triples: the
+        natively batched fused launch where this bucket's plan says so, the
+        vmapped single-image op (the oracle and the non-native fallback)
+        everywhere else."""
         int8 = self.cfg.dtype == "int8"
         native = bool(self.native_batch) and n > 1
         forced = self.native_batch == "force"
@@ -1090,18 +1134,19 @@ class BareMetalExecutor(_ExecutorBase):
         bops = []
         for i, (d, ch) in enumerate(zip(self.descs, plan)):
             if native and (ch.batched or forced) and d.unit in ("CONV", "FC"):
-                bops.append(native_b(d, self.base, self._act_lo, self._fwd[i],
-                                     self._store[i], ch.kernel))
+                bops.append((native_b(d, self.base, self._act_lo,
+                                      self._fwd[i], self._store[i],
+                                      ch.kernel), ch, True))
             else:
                 lane = lane_b(d, self.base, self._act_lo, self._fwd[i],
                               self._store[i], ch.kernel)
-                bops.append(functools.partial(
+                bops.append((functools.partial(
                     lambda f, w, a, y: jax.vmap(f, in_axes=(None, 0, 0))(w, a, y),
-                    lane))
+                    lane), ch, False))
         return bops
 
     def _make_batch_fn(self, n: int):
-        bops = self._batch_ops(n)
+        bops = [b for b, _, _ in self._batch_ops(n)]
         in_rel = self.input_off - self._act_lo
         n_out = self.output_bytes
         store_input = self._store_input
@@ -1147,7 +1192,81 @@ class BareMetalExecutor(_ExecutorBase):
     def capabilities(self) -> ExecutorCapabilities:
         return ExecutorCapabilities(native_batching=True, resident_arena=True,
                                     shardable=True, dtype=self.cfg.dtype,
-                                    kernels=self._plan_kernels())
+                                    kernels=self._plan_kernels(),
+                                    profileable=True)
+
+    def run_profiled(self, x: np.ndarray) -> tuple:
+        """Single-image inference with per-descriptor kernel timing.
+
+        Replays the SAME op closures the fused program composes, jitted
+        individually so every descriptor has a host-visible boundary
+        (``block_until_ready``) to time against.  Integer ops are exact under
+        any fusion, so the output is bit-identical to ``run`` for int8 — the
+        only cost is losing XLA's cross-op fusion, which is why this path is
+        opt-in (``TraceConfig.profile``) rather than the serving default.
+        """
+        if self._profile_fns is None:
+            self._profile_fns = [jax.jit(op) for op in self._single_ops]
+            # one program build per op; counted at build time (each fn
+            # compiles on its first call below)
+            self.compile_count += len(self._profile_fns)
+        xq = self._quant_in(x).reshape(-1)
+        arena = jax.lax.dynamic_update_slice(
+            self._ensure_arena(), jnp.asarray(xq.view(np.int8)),
+            (self.input_off,))
+        jax.block_until_ready(arena)
+        samples = []
+        for i, (fn, d, ch) in enumerate(zip(self._profile_fns, self.descs,
+                                            self.kernel_plan)):
+            t0 = time.perf_counter()
+            arena = fn(arena)
+            jax.block_until_ready(arena)
+            t1 = time.perf_counter()
+            samples.append({"index": i, "unit": d.unit, "kernel": ch.kernel,
+                            "bucket": 1, "native": False,
+                            "us": (t1 - t0) * 1e6, "t0": t0, "t1": t1})
+        y = np.asarray(jax.lax.dynamic_slice(arena, (self.output_off,),
+                                             (self.output_bytes,)))
+        return self._finish_out(y), samples
+
+    def run_batch_profiled(self, X: np.ndarray,
+                           lanes: Optional[int] = None) -> tuple:
+        """Batched profiled inference: steps the SAME per-bucket op list the
+        fused batch program composes (native fused launches included), each
+        op jitted and timed individually.  Bit-exact vs ``run_batch`` for
+        int8; samples carry the bucket size and each op's execution style."""
+        X = np.asarray(X)
+        n = X.shape[0]
+        xq = self._quant_in(X).reshape(n, -1)
+        if self._batch_state is None:
+            self._batch_state = jnp.asarray(
+                self.arena0.view(np.int8)[self._act_lo:self._act_hi])
+        entry = self._profile_batch_fns.get(n)
+        if entry is None:
+            entry = [(jax.jit(b), ch, nat) for b, ch, nat in
+                     self._batch_ops(n)]
+            self._profile_batch_fns[n] = entry
+            self.compile_count += len(entry)
+        xs = jnp.asarray(xq.view(np.int8))
+        actB = jnp.broadcast_to(self._batch_state,
+                                (n, self._batch_state.shape[0]))
+        if self._store_input:
+            actB = jax.lax.dynamic_update_slice(
+                actB, xs, (0, self.input_off - self._act_lo))
+        yB = xs
+        jax.block_until_ready((actB, yB))
+        arena = self._ensure_arena()
+        samples = []
+        for i, (fn, ch, nat) in enumerate(entry):
+            t0 = time.perf_counter()
+            actB, yB = fn(arena, actB, yB)
+            jax.block_until_ready((actB, yB))
+            t1 = time.perf_counter()
+            samples.append({"index": i, "unit": self.descs[i].unit,
+                            "kernel": ch.kernel, "bucket": n, "native": nat,
+                            "us": (t1 - t0) * 1e6, "t0": t0, "t1": t1})
+        y = np.asarray(yB[:, :self.output_bytes])
+        return self._finish_out(y[:lanes]), samples
 
     def run_batch(self, X: np.ndarray,
                   lanes: Optional[int] = None) -> ExecResult:
@@ -1187,6 +1306,9 @@ class LinuxStackExecutor(_ExecutorBase):
     resolved ONCE at construction (the driver's "model load"), so a ``run``
     measures per-op dispatch overhead, not Python re-parsing of the trace.
     """
+
+    _profileable = True      # per-op dispatch: each op is a natural timing
+                             # boundary (the host materialises every result)
 
     def __init__(self, *args, **kw):
         super().__init__(*args, **kw)
@@ -1260,6 +1382,17 @@ class LinuxStackExecutor(_ExecutorBase):
         return b
 
     def run(self, x: np.ndarray) -> ExecResult:
+        return self._run_impl(x)
+
+    def run_profiled(self, x: np.ndarray) -> tuple:
+        """Per-op dispatch with per-descriptor timing — the op loop already
+        materialises every result on the host, so each iteration IS the
+        device-execute bound; the samples simply record it."""
+        samples: list = []
+        return self._run_impl(x, samples), samples
+
+    def _run_impl(self, x: np.ndarray,
+                  samples: Optional[list] = None) -> ExecResult:
         xq = self._quant_in(x)
         dram = self.arena0.copy()       # driver re-stages buffers per submission
         eb = self.cfg.elem_bytes
@@ -1271,7 +1404,8 @@ class LinuxStackExecutor(_ExecutorBase):
         in_off = self.descs[0].src_addr - self.base
         x_bytes = np.ascontiguousarray(xq.reshape(-1)).view(np.uint8)
         dram[in_off:in_off + x_bytes.size] = x_bytes
-        for d, fn, bnd in self._ops:
+        for i, (d, fn, bnd) in enumerate(self._ops):
+            t0 = time.perf_counter()
             src = surf(bnd["src_off"], bnd["src_shape"], bnd["src_n"])
             if d.unit in ("CONV", "FC"):
                 if "words" in bnd:
@@ -1286,5 +1420,11 @@ class LinuxStackExecutor(_ExecutorBase):
             y = np.ascontiguousarray(np.asarray(y).reshape(-1))
             dram[bnd["dst_off"]:bnd["dst_off"] + y.size * eb] = \
                 y.view(np.uint8)        # driver flushes the buffer
+            if samples is not None:
+                t1 = time.perf_counter()
+                samples.append({"index": i, "unit": d.unit,
+                                "kernel": self.kernel_plan[i].kernel,
+                                "bucket": 1, "native": False,
+                                "us": (t1 - t0) * 1e6, "t0": t0, "t1": t1})
         out = dram[self.output_off:self.output_off + self.output_bytes]
         return self._finish_out(out.copy().view(np.int8))

@@ -297,7 +297,9 @@ def _kernel_cost(kernel: str, k: int, macs: int, n_cols: int,
 def select_kernel(d: engine.Descriptor,
                   backend: Union[str, BackendProfile, None] = None,
                   override: Optional[str] = None,
-                  dtype: str = "int8", batch: int = 1) -> KernelChoice:
+                  dtype: str = "int8", batch: int = 1,
+                  calibration: Optional["CalibrationProfile"] = None
+                  ) -> KernelChoice:
     """Pick the cheapest applicable kernel for one descriptor.
 
     ``dtype`` is the engine datapath (``EngineConfig.dtype``): it decides the
@@ -319,6 +321,14 @@ def select_kernel(d: engine.Descriptor,
     ``override`` forces the kernel but the execution style is still
     cost-chosen (every kernel family has a batched variant, so the override
     can never be silently ignored).
+
+    ``calibration`` swaps the a-priori relative-cycle costs for measured
+    microseconds: a ``CalibrationProfile`` fitted by ``calibrate()`` from
+    per-layer profiling spans predicts each candidate's latency from its
+    fitted per-family constants (compute rate, weight-stream bandwidth,
+    launch overhead).  Applicability is still decided by the static model —
+    a kernel the static model rules out (exactness bound, interpret-only
+    Pallas) stays out no matter what the fit says.
     """
     lanes = max(int(batch), 1)
     if d.unit not in ("CONV", "FC"):
@@ -336,13 +346,23 @@ def select_kernel(d: engine.Descriptor,
     n_cols = gemm_cols(d)
     n_tiles = (-(-k // EXACT_K) if k else 1) if dtype == "int8" else 1
 
+    def style_cost(name: str, native: bool) -> float:
+        static = _kernel_cost(name, k, macs, n_cols, prof, lanes,
+                              native=native)
+        if calibration is None or static == float("inf"):
+            return static
+        eb = 1 if dtype == "int8" else 2
+        wbytes = (macs // max(n_cols, 1)) * eb
+        us = calibration.predict_us(name, macs, wbytes, batch=lanes,
+                                    native=native, static_cost=static)
+        return us if us is not None else static
+
     def exec_style(name: str) -> tuple:
         """(best cost, native-batch wins) for one candidate kernel."""
-        vmapped = _kernel_cost(name, k, macs, n_cols, prof, lanes,
-                               native=False)
+        vmapped = style_cost(name, native=False)
         if lanes == 1:
             return vmapped, False
-        fused = _kernel_cost(name, k, macs, n_cols, prof, lanes, native=True)
+        fused = style_cost(name, native=True)
         return min(vmapped, fused), fused < vmapped
 
     if override is not None:
@@ -361,10 +381,11 @@ def select_kernel(d: engine.Descriptor,
     styles = {name: exec_style(name) for name in candidates}
     costs = {name: c for name, (c, _) in styles.items()}
     best = min(costs, key=costs.get)
+    model = "calibrated cost model" if calibration is not None else "cost model"
     return KernelChoice(
         kernel=best, contract_k=k, k_tiles=n_tiles,
         batch=lanes, batched=styles[best][1],
-        reason=f"cost model on {prof.platform} (batch={lanes}): " + ", ".join(
+        reason=f"{model} on {prof.platform} (batch={lanes}): " + ", ".join(
             f"{n}={c:.0f}" if c != float("inf") else f"{n}=n/a"
             for n, c in costs.items()))
 
@@ -373,14 +394,16 @@ def kernel_plan(descs: Sequence[engine.Descriptor],
                 names: Optional[Sequence[str]] = None,
                 backend: Union[str, BackendProfile, None] = None,
                 override: Optional[str] = None,
-                dtype: str = "int8", batch: int = 1) -> List[Dict]:
+                dtype: str = "int8", batch: int = 1,
+                calibration: Optional["CalibrationProfile"] = None
+                ) -> List[Dict]:
     """Per-descriptor kernel plan, as JSON-ready dicts (manifest format)."""
     names = names or [f"op{i}" for i in range(len(descs))]
     prof = resolve_profile(backend)
     out = []
     for d, n in zip(descs, names):
         ch = select_kernel(d, prof, override=override, dtype=dtype,
-                           batch=batch)
+                           batch=batch, calibration=calibration)
         e = ch.to_dict()
         e.update(layer=n, unit=d.unit, backend=prof.platform, dtype=dtype)
         out.append(e)
@@ -403,6 +426,196 @@ def batched_kernel_plans(descs: Sequence[engine.Descriptor],
     return {int(b): kernel_plan(descs, names, backend, override=override,
                                 dtype=dtype, batch=int(b))
             for b in buckets if int(b) > 1}
+
+
+# ---------------------------------------------------------------------------
+# Measured calibration: fit the cost model's constants from per-layer spans
+# ---------------------------------------------------------------------------
+def sample_features(d: engine.Descriptor, dtype: str = "int8") -> tuple:
+    """(MAC-equivalents, streamed bytes) of one descriptor — the two features
+    the calibration fit regresses measured microseconds against.
+
+    CONV/FC stream their weight matrix (the roofline's bandwidth side); the
+    vector units (PDP/EW) have no weights, so their "stream" is the
+    activation traffic — the fitted bandwidth constant absorbs the
+    difference in what the bytes actually are.
+    """
+    eb = 1 if dtype == "int8" else 2
+    _, c, h, w = d.src_dims
+    _, k, p, q = d.dst_dims
+    if d.unit in ("CONV", "FC"):
+        macs = descriptor_macs(d)
+        return macs, (macs // max(gemm_cols(d), 1)) * eb
+    if d.unit == "PDP":
+        r, s = d.kernel
+        return k * p * q * r * s, c * h * w * eb + k * p * q * eb
+    if d.unit == "EW":
+        return k * p * q * 2, 2 * c * h * w * eb + k * p * q * eb
+    raise ValueError(d.unit)
+
+
+def static_cost_units(d: engine.Descriptor, kernel: str,
+                      backend: Union[str, BackendProfile, None] = None,
+                      dtype: str = "int8", batch: int = 1,
+                      native: bool = False) -> float:
+    """A-priori cost (relative cycles) of one descriptor under ``kernel`` —
+    the uncalibrated model the fidelity report compares measurements against.
+    GEMM kernels use ``_kernel_cost``; the vector units use their own
+    roofline over ``sample_features`` (they have no GEMM kernel entry)."""
+    prof = resolve_profile(backend)
+    if d.unit in ("CONV", "FC"):
+        return _kernel_cost(kernel, contract_k(d), descriptor_macs(d),
+                            gemm_cols(d), prof, batch, native)
+    macs, sbytes = sample_features(d, dtype)
+    lanes = max(batch, 1)
+    return lanes * max(macs / prof.f32_macs_per_cycle,
+                       sbytes / prof.bytes_per_cycle)
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationProfile:
+    """Measured per-kernel-family cost constants, fitted by ``calibrate()``.
+
+    ``families[kernel]`` holds the fitted additive model in microseconds:
+
+        us = lanes*macs * us_per_mac
+           + streams*bytes * us_per_byte        (streams = 1 when folded)
+           + launches * launch_us               (launches = 1 when folded)
+
+    (reciprocals of the paper-facing "compute rate" / "weight-stream
+    bandwidth"; ``compute_rate``/``stream_bw`` expose those directly).
+    ``us_per_cycle`` is the global scale fallback — measured microseconds per
+    modeled relative cycle — used for kernel families the profiling run never
+    exercised, so a calibrated ``select_kernel`` still compares every
+    candidate in the same (microsecond) unit.
+    """
+    platform: str
+    dtype: str = "int8"
+    vmap_folds: bool = True
+    us_per_cycle: float = 0.0
+    families: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    samples: int = 0
+
+    def compute_rate(self, kernel: str) -> float:
+        """Fitted compute rate in MACs/us (0 when unfitted/unbounded)."""
+        f = self.families.get(kernel)
+        return 1.0 / f["us_per_mac"] if f and f["us_per_mac"] > 0 else 0.0
+
+    def stream_bw(self, kernel: str) -> float:
+        """Fitted stream bandwidth in bytes/us (0 when unfitted/unbounded)."""
+        f = self.families.get(kernel)
+        return 1.0 / f["us_per_byte"] if f and f["us_per_byte"] > 0 else 0.0
+
+    def launch_us(self, kernel: str) -> float:
+        f = self.families.get(kernel)
+        return f["launch_us"] if f else 0.0
+
+    def predict_us(self, kernel: str, macs: float, stream_bytes: float,
+                   batch: int = 1, native: bool = False,
+                   static_cost: Optional[float] = None) -> Optional[float]:
+        """Predicted latency in microseconds, or ``None`` when the family is
+        unfitted and no fallback is possible."""
+        lanes = max(int(batch), 1)
+        folded = native or self.vmap_folds
+        f = self.families.get(kernel)
+        if f is not None:
+            streams = 1 if folded else lanes
+            return (lanes * macs * f["us_per_mac"]
+                    + streams * stream_bytes * f["us_per_byte"]
+                    + streams * f["launch_us"])
+        if static_cost is not None and self.us_per_cycle > 0:
+            return static_cost * self.us_per_cycle
+        return None
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, doc: Dict) -> "CalibrationProfile":
+        return cls(platform=doc["platform"], dtype=doc.get("dtype", "int8"),
+                   vmap_folds=bool(doc.get("vmap_folds", True)),
+                   us_per_cycle=float(doc.get("us_per_cycle", 0.0)),
+                   families={k: dict(v)
+                             for k, v in doc.get("families", {}).items()},
+                   samples=int(doc.get("samples", 0)))
+
+
+def _fit_family(rows: List[tuple]) -> Optional[Dict[str, float]]:
+    """Nonnegative least squares over (cmacs, sbytes, launches) -> us.
+
+    Plain lstsq with iterative column dropping: a negative coefficient means
+    that feature is colinear with another on this sample set (tiny nets often
+    can't separate bandwidth from compute), so the offending column is
+    removed and the rest refitted rather than shipping a negative "rate"."""
+    A = np.array([[r[0], r[1], r[2]] for r in rows], dtype=np.float64)
+    b = np.array([r[3] for r in rows], dtype=np.float64)
+    cols = [0, 1, 2]
+    while True:
+        coef, *_ = np.linalg.lstsq(A[:, cols], b, rcond=None)
+        neg = [j for j, c in enumerate(coef) if c < 0]
+        if not neg or len(cols) <= 1:
+            break
+        cols = [c for j, c in enumerate(cols) if j not in neg]
+    full = [0.0, 0.0, 0.0]
+    for j, c in zip(cols, coef):
+        full[j] = max(float(c), 0.0)
+    if not all(np.isfinite(full)) or sum(full) <= 0:
+        # degenerate fit (e.g. a single repeated layer): scale-only model
+        cm = np.array([r[0] for r in rows], dtype=np.float64)
+        if cm.sum() <= 0:
+            return None
+        full = [float(np.median(b[cm > 0] / cm[cm > 0])), 0.0, 0.0]
+    return {"us_per_mac": full[0], "us_per_byte": full[1],
+            "launch_us": full[2], "samples": float(len(rows))}
+
+
+def calibrate(samples: Sequence[Dict],
+              descs: Sequence[engine.Descriptor],
+              backend: Union[str, BackendProfile, None] = None,
+              dtype: str = "int8") -> CalibrationProfile:
+    """Fit a ``CalibrationProfile`` from measured per-layer profiling samples.
+
+    ``samples`` are the dicts the executors' ``run_profiled`` emits (and the
+    tracer collects): ``{"index", "kernel", "us"}`` plus optional ``bucket``
+    (coalesced lanes, default 1) and ``native`` (batched-launch style).
+    Constants are fitted per kernel family; the global ``us_per_cycle``
+    scale comes from the median measured/modeled ratio across every sample,
+    so families the run never exercised still predict in microseconds.
+    """
+    prof = resolve_profile(backend)
+    by_family: Dict[str, List[tuple]] = {}
+    ratios = []
+    n_used = 0
+    for s in samples:
+        idx = int(s["index"])
+        if not 0 <= idx < len(descs):
+            continue
+        d = descs[idx]
+        us = float(s["us"])
+        if us <= 0:
+            continue
+        kernel = s.get("kernel") or KERNEL_VPU
+        lanes = max(int(s.get("bucket", 1)), 1)
+        native = bool(s.get("native", False))
+        folded = native or prof.vmap_folds
+        macs, sbytes = sample_features(d, dtype)
+        streams = 1 if folded else lanes
+        by_family.setdefault(kernel, []).append(
+            (lanes * macs, streams * sbytes, streams, us))
+        static = static_cost_units(d, kernel, prof, dtype, lanes, native)
+        if np.isfinite(static) and static > 0:
+            ratios.append(us / static)
+        n_used += 1
+    families = {}
+    for kernel, rows in by_family.items():
+        fit = _fit_family(rows)
+        if fit is not None:
+            families[kernel] = fit
+    return CalibrationProfile(
+        platform=prof.platform, dtype=dtype, vmap_folds=prof.vmap_folds,
+        us_per_cycle=float(np.median(ratios)) if ratios else 0.0,
+        families=families, samples=n_used)
 
 
 @dataclasses.dataclass

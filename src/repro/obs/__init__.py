@@ -1,0 +1,27 @@
+"""repro.obs — end-to-end request tracing + per-layer kernel profiling.
+
+Public surface:
+
+  * ``TraceConfig`` / ``Tracer`` / ``RequestTrace`` — lifecycle spans with
+    deterministic sampling, a ring-buffered store, Chrome trace-event
+    export, per-phase latency histograms (``src/repro/obs/trace.py``).
+  * ``TRACE_HEADER`` — the ``X-Repro-Trace-Id`` HTTP contract.
+  * ``profile_layers`` / ``fidelity_report`` / ``format_report`` — the
+    measured-vs-modeled calibration workflow over the executors' profiled
+    path (``src/repro/obs/report.py``; the fit itself is
+    ``repro.core.perfmodel.calibrate``).
+  * ``python -m repro.obs report`` — CLI printing per-layer deltas for any
+    frontend-resolvable model.
+"""
+
+from repro.obs.trace import (PHASE_BUCKETS_US, RequestTrace, Span,
+                             TRACE_HEADER, TraceConfig, Tracer, new_trace_id,
+                             status_for_exception, valid_trace_id)
+from repro.obs.report import fidelity_report, format_report, profile_layers
+
+__all__ = [
+    "PHASE_BUCKETS_US", "RequestTrace", "Span", "TRACE_HEADER",
+    "TraceConfig", "Tracer", "new_trace_id", "status_for_exception",
+    "valid_trace_id",
+    "fidelity_report", "format_report", "profile_layers",
+]

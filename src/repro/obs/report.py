@@ -1,0 +1,151 @@
+"""Measured-vs-modeled per-layer fidelity: profile, calibrate, report.
+
+The ROADMAP's perf-model fidelity item (resnet18 ``cycle_ratio=2.82``) needs
+the per-layer measured timings the executors' profiled path collects.  This
+module turns those samples into the calibration workflow:
+
+    ex = create_executor("baremetal", art)
+    samples = profile_layers(ex, iters=5)            # median us per layer
+    cal = perfmodel.calibrate(samples, ex.descs)     # CalibrationProfile
+    rep = fidelity_report(ex, samples, cal)          # per-layer deltas
+    print(format_report(rep))
+
+``python -m repro.obs report`` wraps exactly this over any frontend-
+resolvable model.  The error metric is the mean absolute log-ratio
+``mean(|ln(measured/modeled)|)`` over the GEMM layers: scale-invariant, so
+the *uncalibrated* model gets the fairest possible baseline — its single
+best global scale (the geometric-mean ratio) is divided out before its
+error is charged — and the calibrated fit must win on *shape*, not on
+units.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import perfmodel
+
+
+def profile_layers(ex, x=None, iters: int = 3, warmup: int = 1,
+                   batch: int = 1) -> List[Dict]:
+    """Run the executor's profiled path and aggregate per-layer medians.
+
+    Returns one sample dict per descriptor — ``{"index", "unit", "kernel",
+    "bucket", "us"}`` with ``us`` the median over ``iters`` runs (the first
+    ``warmup`` runs are discarded: they pay per-op compilation)."""
+    if x is None:
+        dims = tuple(ex.input_dims)[1:]
+        rng = np.random.default_rng(0)
+        x = rng.normal(0, 1, dims).astype(np.float32)
+    if batch > 1:
+        X = np.stack([x] * batch)
+        run = lambda: ex.run_batch_profiled(X, lanes=batch)[1]
+    else:
+        run = lambda: ex.run_profiled(x)[1]
+    for _ in range(max(warmup, 1)):
+        run()
+    per_run = [run() for _ in range(max(iters, 1))]
+    out = []
+    for i, first in enumerate(per_run[0]):
+        med = float(np.median([r[i]["us"] for r in per_run]))
+        s = dict(first)
+        s["us"] = med
+        s.pop("t0", None)
+        s.pop("t1", None)
+        out.append(s)
+    return out
+
+
+def fidelity_report(ex, samples: Sequence[Dict],
+                    calibration: Optional[perfmodel.CalibrationProfile]
+                    = None) -> Dict:
+    """Per-layer measured vs modeled (uncalibrated and calibrated) table.
+
+    ``rows``: layer index, unit, kernel, measured us, both models' us and
+    signed error percentages.  ``err_uncal``/``err_cal``: mean absolute
+    log-ratio over the CONV/FC layers (the layers ``select_kernel`` actually
+    costs); calibrated columns are present only when ``calibration`` is.
+    """
+    descs, dtype = ex.descs, ex.cfg.dtype
+    prof = perfmodel.resolve_profile(None)
+    meas, static, feats = [], [], []
+    for s in samples:
+        d = descs[int(s["index"])]
+        lanes = max(int(s.get("bucket", 1)), 1)
+        kernel = s.get("kernel") or perfmodel.KERNEL_VPU
+        meas.append(float(s["us"]))
+        static.append(perfmodel.static_cost_units(
+            d, kernel, prof, dtype, lanes, bool(s.get("native", False))))
+        feats.append(perfmodel.sample_features(d, dtype))
+    gemm = [i for i, s in enumerate(samples)
+            if descs[int(s["index"])].unit in ("CONV", "FC")]
+    # the uncalibrated model's single best global scale: geometric-mean
+    # measured/static ratio over the layers the error is charged on
+    ratios = [meas[i] / static[i] for i in gemm
+              if static[i] > 0 and math.isfinite(static[i]) and meas[i] > 0]
+    scale = math.exp(sum(math.log(r) for r in ratios) / len(ratios)) \
+        if ratios else 1.0
+    rows, errs_u, errs_c = [], [], []
+    for i, s in enumerate(samples):
+        d = descs[int(s["index"])]
+        kernel = s.get("kernel") or perfmodel.KERNEL_VPU
+        lanes = max(int(s.get("bucket", 1)), 1)
+        uncal = static[i] * scale if math.isfinite(static[i]) else float("nan")
+        row = {"index": int(s["index"]), "unit": d.unit, "kernel": kernel,
+               "bucket": lanes, "measured_us": meas[i],
+               "modeled_uncal_us": uncal,
+               "err_uncal_pct": (uncal / meas[i] - 1.0) * 100.0
+               if meas[i] > 0 and math.isfinite(uncal) else float("nan")}
+        if calibration is not None:
+            macs, sbytes = feats[i]
+            cal = calibration.predict_us(
+                kernel, macs, sbytes, batch=lanes,
+                native=bool(s.get("native", False)),
+                static_cost=static[i] if math.isfinite(static[i]) else None)
+            row["modeled_cal_us"] = cal if cal is not None else float("nan")
+            row["err_cal_pct"] = (cal / meas[i] - 1.0) * 100.0 \
+                if cal and meas[i] > 0 else float("nan")
+        rows.append(row)
+        if i in gemm and meas[i] > 0:
+            if math.isfinite(uncal) and uncal > 0:
+                errs_u.append(abs(math.log(uncal / meas[i])))
+            cal = row.get("modeled_cal_us")
+            if calibration is not None and cal and math.isfinite(cal):
+                errs_c.append(abs(math.log(cal / meas[i])))
+    rep = {"dtype": dtype, "platform": prof.platform, "rows": rows,
+           "gemm_layers": len(gemm), "uncal_scale": scale,
+           "err_uncal": float(np.mean(errs_u)) if errs_u else float("nan")}
+    if calibration is not None:
+        rep["err_cal"] = float(np.mean(errs_c)) if errs_c else float("nan")
+    return rep
+
+
+def format_report(rep: Dict, name: str = "") -> str:
+    """Human-readable per-layer delta table for the report CLI."""
+    has_cal = "err_cal" in rep
+    head = (f"{'layer':>5} {'unit':<4} {'kernel':<18} {'bucket':>6} "
+            f"{'measured_us':>12} {'model_us':>10} {'err%':>8}")
+    if has_cal:
+        head += f" {'cal_us':>10} {'cal_err%':>8}"
+    lines = [f"fidelity report{' — ' + name if name else ''} "
+             f"[{rep['dtype']} on {rep['platform']}, "
+             f"uncal scale {rep['uncal_scale']:.3g} us/cycle]", head,
+             "-" * len(head)]
+    for r in rep["rows"]:
+        line = (f"{r['index']:>5} {r['unit']:<4} {r['kernel']:<18} "
+                f"{r['bucket']:>6} {r['measured_us']:>12.1f} "
+                f"{r['modeled_uncal_us']:>10.1f} {r['err_uncal_pct']:>+8.1f}")
+        if has_cal:
+            line += (f" {r['modeled_cal_us']:>10.1f} "
+                     f"{r['err_cal_pct']:>+8.1f}")
+        lines.append(line)
+    lines.append("-" * len(head))
+    tail = (f"mean |log err| over {rep['gemm_layers']} GEMM layers: "
+            f"uncalibrated {rep['err_uncal']:.3f}")
+    if has_cal:
+        tail += f" -> calibrated {rep['err_cal']:.3f}"
+    lines.append(tail)
+    return "\n".join(lines)

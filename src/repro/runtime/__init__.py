@@ -25,10 +25,12 @@ from repro.runtime.scheduler import (BackendFaultError, CircuitOpenError,
                                      LaunchTimeoutError, QueueFullError,
                                      Scheduler, SchedulerConfig)
 from repro.runtime.session import NetStats, Session
+from repro.obs.trace import TraceConfig, Tracer
 
 __all__ = ["Session", "NetStats", "Scheduler", "SchedulerConfig",
            "QueueFullError", "DeadlineExceededError", "BackendFaultError",
            "CircuitOpenError", "LaunchTimeoutError",
            "FaultPlan", "FaultSpec", "FaultyExecutor", "InjectedFaultError",
            "ExecutorBackend", "ExecutorCapabilities", "register_backend",
-           "create_executor", "backend_names"]
+           "create_executor", "backend_names",
+           "TraceConfig", "Tracer"]

@@ -47,6 +47,7 @@ already-padded batch plus the live-lane count and stay policy-free.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import heapq
 import itertools
 import math
@@ -61,6 +62,7 @@ import numpy as np
 
 from repro.core import perfmodel
 from repro.core.executor import ExecResult
+from repro.obs.trace import status_for_exception
 
 # EMA of coalesce sizes above which a dispatcher starts holding the head
 # request for stragglers (below it, traffic is effectively solo).
@@ -286,6 +288,7 @@ class _Request:
     group_n: int = 1             # size of the submit_many group this came in
                                  # with: a pre-formed batch may exceed
                                  # max_batch and still dispatch as one program
+    trace: object = None         # RequestTrace when sampled, else None
 
     def sort_key(self):
         return (-self.priority, self.deadline, self.seq)
@@ -536,6 +539,10 @@ class _NetDispatcher:
 
     def _shed(self, req: _Request, now: float) -> None:
         self.net.stats.note_shed(1)
+        if req.trace is not None:
+            req.trace.add_span("queue", req.t_submit, now)
+            req.trace.event("shed", deadline_us=req.deadline_us,
+                            waited_us=(now - req.t_submit) * 1e6)
         _resolve_future(req.future, req.future.set_exception,
                         DeadlineExceededError(
                             getattr(self.net, "name", "?"), req.deadline_us,
@@ -567,7 +574,9 @@ class _NetDispatcher:
                 hold = (not self._drain
                         and (not cfg.adaptive
                              or self._ema_coalesce > _COALESCE_THRESHOLD))
+                t_hold0 = t_hold1 = 0.0
                 if hold:
+                    t_hold0 = time.perf_counter()
                     deadline = head.t_submit + cfg.max_wait_us * 1e-6
                     while not self._stop:
                         same = sum(1 for _, r in self._heap
@@ -578,6 +587,7 @@ class _NetDispatcher:
                         if remaining <= 0:
                             break
                         self._cond.wait(remaining)
+                    t_hold1 = time.perf_counter()
                 if self._stop:
                     return None
                 # launch: pop in (priority, deadline) order; shed expired,
@@ -598,6 +608,16 @@ class _NetDispatcher:
                 for item in putback:
                     heapq.heappush(self._heap, item)
                 self._inflight = list(batch)
+                for r in batch:
+                    if r.trace is not None:
+                        r.trace.add_span("queue", r.t_submit, now,
+                                         coalesced=len(batch))
+                        if t_hold1 > t_hold0:
+                            # clamp: a late arrival joined mid-hold, its
+                            # wait started at its own submit
+                            r.trace.add_span("hold",
+                                             max(t_hold0, r.t_submit),
+                                             t_hold1)
             return batch
         finally:
             # resolve shed futures outside the lock (done-callbacks may run)
@@ -614,6 +634,9 @@ class _NetDispatcher:
         if state == _OPEN:
             self._opened_at = time.perf_counter()
         self.net.stats.note_circuit(state)
+        tracer = getattr(self.scheduler, "tracer", None)
+        if tracer is not None:      # tracer lock takes no scheduler locks
+            tracer.note_circuit(getattr(self.net, "name", "?"), state)
 
     def _route(self) -> tuple:
         """``(executor, degraded)`` for the next launch attempt.  While the
@@ -632,19 +655,23 @@ class _NetDispatcher:
                     return fb, True
             return self.net.executor, False
 
-    def _note_launch_failure(self, ex, degraded: bool, exc) -> None:
+    def _note_launch_failure(self, ex, degraded: bool, exc) -> bool:
+        """Record one failed attempt; returns whether the arena was reset
+        (the dispatcher mirrors that onto the affected traces)."""
         stats = self.net.stats
         stats.note_failure(timeout=isinstance(exc, LaunchTimeoutError))
         # a crashed call may have scribbled on the resident arena: verify the
         # preload checksum and restore the pristine image before any retry
+        reset = False
         try:
             if hasattr(ex, "arena_ok") and not ex.arena_ok():
                 ex.reset_arena()
                 stats.note_arena_reset()
+                reset = True
         except Exception:        # noqa: BLE001 — never mask the real failure
             pass
         if degraded:
-            return               # fallback failures don't drive the breaker
+            return reset         # fallback failures don't drive the breaker
         with self._cond:
             self._consec_failures += 1
             bt = self.config.breaker_threshold
@@ -653,6 +680,7 @@ class _NetDispatcher:
             elif self._breaker == _CLOSED and bt is not None \
                     and self._consec_failures >= bt:
                 self._set_breaker(_OPEN)
+        return reset
 
     def _note_launch_success(self, degraded: bool) -> None:
         if degraded:
@@ -694,15 +722,30 @@ class _NetDispatcher:
         base = self.config.retry_backoff_s * (2 ** (attempt - 1))
         return base * self._retry_rng.uniform(0.8, 1.2)
 
-    def _launch(self, ex, batch: List[_Request]) -> tuple:
-        """One supervised execution attempt -> ``(outs, bucket, compiles)``."""
+    def _launch(self, ex, batch: List[_Request], attempt: int = 1,
+                degraded: bool = False) -> tuple:
+        """One supervised execution attempt -> ``(outs, bucket, compiles)``.
+
+        Traced requests get a ``device_execute`` span timed inside the
+        launcher worker (bounded by the backend's own blocking), and when a
+        sampled request asked for per-layer profiling on a profileable
+        backend the launch runs the executor's profiled path and attaches
+        the kernel samples to the trace."""
         k = len(batch)
         bucket = 1
         compiles0 = getattr(ex, "compile_count", 0)
         caps = ex.capabilities()
+        traced = [r for r in batch if r.trace is not None]
+        profiled = bool(traced) and caps.profileable \
+            and any(r.trace.profile for r in traced)
         if k == 1:
             x = batch[0].x
-            call = lambda: ex.run(x)                     # noqa: E731
+            run1 = ex.run_profiled if profiled else ex.run
+
+            def call():
+                t0 = time.perf_counter()
+                res = run1(x)
+                return res, t0, time.perf_counter()
         else:
             # bucket-pad only for native batch programs (compile-once
             # shapes); sequential fallbacks would just discard the pad.
@@ -712,11 +755,29 @@ class _NetDispatcher:
                       if caps.native_batching else k)
             if caps.max_batch is not None:
                 bucket = min(bucket, caps.max_batch)
+            tp0 = time.perf_counter()
             padded = pad_batch([r.x for r in batch], bucket)
+            tp1 = time.perf_counter()
+            for r in traced:
+                r.trace.add_span("pad", tp0, tp1, bucket=bucket, lanes=k)
             if caps.shardable:
                 ex.batch_sharding = self.scheduler._lane_sharding(bucket)
-            call = lambda: ex.run_batch(padded, lanes=k)  # noqa: E731
-        res = self._launcher.call(call, self._launch_timeout_s(bucket))
+            runk = ex.run_batch_profiled if profiled else ex.run_batch
+
+            def call():
+                t0 = time.perf_counter()
+                res = runk(padded, lanes=k)
+                return res, t0, time.perf_counter()
+        res, t0, t1 = self._launcher.call(call, self._launch_timeout_s(bucket))
+        layers = None
+        if profiled:
+            res, layers = res
+        for r in traced:
+            r.trace.add_span("device_execute", t0, t1, bucket=bucket,
+                             lanes=k, attempt=attempt, degraded=degraded,
+                             profiled=profiled)
+            if layers and r.trace.profile:
+                r.trace.add_layers(layers)
         if k == 1:
             outs = [res]
         else:
@@ -727,20 +788,35 @@ class _NetDispatcher:
     def _dispatch(self, batch: List[_Request]) -> None:
         net = self.net
         attempt = 1
+        traced = [r for r in batch if r.trace is not None]
         while True:
             ex, degraded = self._route()
             try:
-                outs, bucket, compiles = self._launch(ex, batch)
+                outs, bucket, compiles = self._launch(ex, batch, attempt,
+                                                      degraded)
             except BaseException as e:  # noqa: BLE001 — forwarded to callers
-                self._note_launch_failure(ex, degraded, e)
+                reset = self._note_launch_failure(ex, degraded, e)
                 self._sync_fault_counter()
+                for r in traced:
+                    r.trace.event("launch_failure", attempt=attempt,
+                                  error=type(e).__name__, degraded=degraded)
+                    if isinstance(e, LaunchTimeoutError):
+                        r.trace.event("watchdog_fire",
+                                      timeout_s=e.timeout_s)
+                    if reset:
+                        r.trace.event("arena_reset")
                 with self._cond:
                     stopping = self._stop
                 if attempt <= self.config.max_retries and not stopping:
                     # the inputs are still held, so a retry is idempotent;
                     # an open breaker reroutes the retry to the fallback
                     net.stats.note_retry()
+                    tb0 = time.perf_counter()
                     time.sleep(self._backoff_s(attempt))
+                    tb1 = time.perf_counter()
+                    for r in traced:
+                        r.trace.add_span("backoff", tb0, tb1,
+                                         attempt=attempt)
                     attempt += 1
                     continue
                 err = BackendFaultError(getattr(net, "name", "?"), attempt, e)
@@ -758,6 +834,10 @@ class _NetDispatcher:
             if degraded:
                 outs = [dataclasses.replace(o, degraded=True) for o in outs]
             for r, out in zip(batch, outs):
+                if r.trace is not None:
+                    # recorded before set_result: resolving the future runs
+                    # the done-callback that seals this trace
+                    r.trace.add_span("respond", done, time.perf_counter())
                 _resolve_future(r.future, r.future.set_result, out)
             self._ema_coalesce = ((1 - _EMA_ALPHA) * self._ema_coalesce
                                   + _EMA_ALPHA * k)
@@ -787,8 +867,9 @@ class Scheduler:
     ``close`` — plus per-request ``priority`` and ``deadline_us``.
     """
 
-    def __init__(self, config: Optional[SchedulerConfig] = None):
+    def __init__(self, config: Optional[SchedulerConfig] = None, tracer=None):
         self.config = config or SchedulerConfig()
+        self.tracer = tracer            # repro.obs Tracer, or None (untraced)
         self._lock = threading.Lock()
         self._dispatchers: Dict[int, _NetDispatcher] = {}
         self._retired: Dict[int, object] = {}   # unloaded nets, by id
@@ -799,13 +880,15 @@ class Scheduler:
 
     # -- client side ---------------------------------------------------------
     def submit(self, net, x: np.ndarray, priority: int = 0,
-               deadline_us: Optional[float] = None) -> Future:
+               deadline_us: Optional[float] = None,
+               trace_id: Optional[str] = None) -> Future:
         """Enqueue one request against resident network ``net``."""
         return self.submit_many(net, [x], priority=priority,
-                                deadline_us=deadline_us)[0]
+                                deadline_us=deadline_us, trace_id=trace_id)[0]
 
     def submit_many(self, net, xs, priority: int = 0,
-                    deadline_us: Optional[float] = None) -> List[Future]:
+                    deadline_us: Optional[float] = None,
+                    trace_id: Optional[str] = None) -> List[Future]:
         """Enqueue several requests atomically (one lock hold, one wake-up),
         so a pre-formed batch reaches the dispatcher whole instead of being
         peeled off a request at a time.  When the group reaches the head of
@@ -820,6 +903,10 @@ class Scheduler:
         latency budget; past it the request is shed with
         ``DeadlineExceededError``) order the per-net queue.  Raises
         ``QueueFullError`` when the net's queue is at ``max_queue``.
+
+        Every returned future carries ``fut.trace_id`` when a tracer is
+        attached; ``trace_id`` (applied to the group's first request)
+        forces that request into the sampled set.
         """
         if deadline_us is not None and math.isnan(deadline_us):
             raise ValueError("deadline_us must not be NaN (a NaN sort key "
@@ -828,11 +915,39 @@ class Scheduler:
         # deadline_us=0 means an already-expired budget (shed at launch),
         # NOT "no deadline" — only None/inf disable the deadline entirely
         dl = now + deadline_us * 1e-6 if deadline_us is not None else math.inf
-        reqs = [_Request(net=net, x=x, future=Future(), t_submit=now,
+        tracer = self.tracer
+        reqs = []
+        for i, x in enumerate(xs):
+            r = _Request(net=net, x=x, future=Future(), t_submit=now,
                          priority=priority, deadline=dl,
                          deadline_us=deadline_us or 0.0,
-                         seq=next(self._seq), group_n=len(xs)) for x in xs]
-        self._dispatcher(net).enqueue(reqs)
+                         seq=next(self._seq), group_n=len(xs))
+            if tracer is not None:
+                tid, trace = tracer.start(getattr(net, "name", "?"),
+                                          trace_id if i == 0 else None,
+                                          t_start=now)
+                r.future.trace_id = tid
+                if trace is not None:
+                    r.trace = trace
+                    # the future's terminal state — result, exception or
+                    # cancel, whichever path delivers it — completes the
+                    # trace exactly once
+                    r.future.add_done_callback(
+                        functools.partial(tracer.finish_future, trace))
+            reqs.append(r)
+        try:
+            self._dispatcher(net).enqueue(reqs)
+        except BaseException as e:
+            # rejected at admission (queue full / circuit open / closed):
+            # the futures never resolve, so complete the traces here and
+            # pin the (first) trace id on the exception for error replies
+            if tracer is not None:
+                for r in reqs:
+                    tracer.finish(r.trace, status=status_for_exception(e),
+                                  error=type(e).__name__)
+                if reqs:
+                    e.trace_id = getattr(reqs[0].future, "trace_id", None)
+            raise
         return [r.future for r in reqs]
 
     def queue_depth(self, net=None) -> int:

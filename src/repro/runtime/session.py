@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core.executor import ExecResult
 from repro.core.pipeline import Artifacts
+from repro.obs.trace import TraceConfig, Tracer
 from repro.runtime import registry
 from repro.runtime.scheduler import Scheduler, SchedulerConfig
 
@@ -84,6 +85,10 @@ class NetStats:
     circuit_state: int = 0       # breaker gauge: 0 closed, 1 half-open, 2 open
     circuit_opens: int = 0       # closed/half-open -> open transitions
     circuit_rejected: int = 0    # submits shed while the circuit was open
+    latency_total_us: float = 0.0  # summed submit->result latency: together
+    latency_count: int = 0         # with this count, the Prometheus summary
+                                   # _sum/_count pair (unwindowed, unlike the
+                                   # percentile ring buffer)
     bucket_launches: Dict[int, int] = dataclasses.field(
         default_factory=dict)    # dispatched-batch count per padded bucket
     latencies_us: "collections.deque" = dataclasses.field(
@@ -125,6 +130,8 @@ class NetStats:
             self.compile_count += compiles
             self.degraded += degraded
             self.latencies_us.extend(latencies_us)
+            self.latency_total_us += float(sum(latencies_us))
+            self.latency_count += len(latencies_us)
 
     def note_warmup(self, ms: float, compiles: int = 0) -> None:
         with self._lock:
@@ -217,11 +224,18 @@ class Session:
     def __init__(self, artifacts: Optional[Artifacts] = None,
                  backend: str = "baremetal", name: Optional[str] = None,
                  scheduler: Optional[SchedulerConfig] = None,
-                 warmup: bool = False):
+                 warmup: bool = False, trace=None):
         self._nets: Dict[str, _Net] = {}
         self._order: List[str] = []
         self.default_backend = backend
-        self._scheduler = Scheduler(scheduler)
+        # ``trace``: a TraceConfig (or a pre-built Tracer) — every Session
+        # gets one; lifecycle spans are a handful of perf_counter calls per
+        # request, and TraceConfig(enabled=False) disables recording while
+        # keeping the trace-id contract
+        self.tracer = trace if isinstance(trace, Tracer) \
+            else Tracer(trace if isinstance(trace, TraceConfig)
+                        else TraceConfig())
+        self._scheduler = Scheduler(scheduler, tracer=self.tracer)
         # ``warmup=True``: every net precompiles its bucket ladder at load
         # time (see ``warmup()``), so no first request ever compile-stalls
         self._warmup_on_load = bool(warmup)
@@ -426,7 +440,8 @@ class Session:
 
     def submit(self, x: np.ndarray, net: Optional[str] = None,
                priority: int = 0,
-               deadline_us: Optional[float] = None) -> "Future[ExecResult]":
+               deadline_us: Optional[float] = None,
+               trace_id: Optional[str] = None) -> "Future[ExecResult]":
         """Enqueue one inference; returns a Future resolving to its
         ``ExecResult``.  Concurrent submits against the same network coalesce
         into one padded vmapped batch (bit-exact vs sequential ``run``).
@@ -437,11 +452,16 @@ class Session:
         deadline is shed (its future raises ``DeadlineExceededError``), and
         a queue at ``SchedulerConfig.max_queue`` rejects the submit outright
         with ``QueueFullError``.
+
+        The returned future carries ``fut.trace_id``; passing ``trace_id``
+        (a client-supplied ``X-Repro-Trace-Id``) forces the request into
+        the tracer's sampled set.
         """
         n = self._resolve(net)
         return self._scheduler.submit(n, self._check_input(n, x),
                                       priority=priority,
-                                      deadline_us=deadline_us)
+                                      deadline_us=deadline_us,
+                                      trace_id=trace_id)
 
     def run(self, x: np.ndarray, net: Optional[str] = None) -> ExecResult:
         """One inference on one input image (synchronous ``submit``)."""

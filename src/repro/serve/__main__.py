@@ -75,6 +75,19 @@ def main(argv=None) -> None:
                          "/healthz reports 'warming' until done "
                          "(--no-warmup serves immediately, first requests "
                          "may compile-stall)")
+    ap.add_argument("--trace", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="record request lifecycle traces (GET /v1/trace; "
+                         "--no-trace keeps trace ids but records nothing)")
+    ap.add_argument("--trace-sample", type=int, default=1, metavar="N",
+                    help="trace every Nth request per net (1 = all, 0 = "
+                         "only requests carrying X-Repro-Trace-Id)")
+    ap.add_argument("--profile", action="store_true",
+                    help="run sampled requests through the per-layer "
+                         "profiled path (slower; for calibration runs)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="dump the trace ring buffer as Chrome trace-event "
+                         "JSON (DIR/trace.json) on shutdown")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-request access logs")
     args = ap.parse_args(argv)
@@ -86,8 +99,12 @@ def main(argv=None) -> None:
                           max_queue=args.max_queue or None,
                           max_retries=args.max_retries)
     serve_cfg = ServeConfig(fallback_backend=args.fallback_backend,
-                            warmup=args.warmup)
-    ses = Session(scheduler=cfg, backend=args.backend)
+                            warmup=args.warmup, trace=args.trace,
+                            trace_sample=args.trace_sample,
+                            trace_profile=args.profile,
+                            trace_dir=args.trace_dir)
+    ses = Session(scheduler=cfg, backend=args.backend,
+                  trace=serve_cfg.trace_config())
     for spec in args.artifacts:
         path, _, name = spec.partition(":")
         loaded = ses.load(Artifacts.load(path), name=name or None,
@@ -102,7 +119,8 @@ def main(argv=None) -> None:
                           fallback_backend=serve_cfg.fallback_backend)
         print(f"[repro.serve] resident: {loaded} <- compiled {src}")
     serve_forever(ses, host=args.host, port=args.port,
-                  verbose=not args.quiet, warmup=serve_cfg.warmup)
+                  verbose=not args.quiet, warmup=serve_cfg.warmup,
+                  trace_dir=serve_cfg.trace_dir)
 
 
 if __name__ == "__main__":

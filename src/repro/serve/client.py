@@ -30,10 +30,14 @@ _TIMEOUT_GRACE_S = 30.0
 
 class ServeError(Exception):
     """Base serving error; ``status``/``code`` map straight onto HTTP.
-    ``retry_after_s`` (when set) rides 429/503 replies as ``Retry-After``."""
+    ``retry_after_s`` (when set) rides 429/503 replies as ``Retry-After``;
+    ``trace_id`` (when known) rides the error body and the
+    ``X-Repro-Trace-Id`` response header, so rejected/shed requests stay
+    correlatable with their server-side trace."""
     status = 500
     code = "internal"
     retry_after_s: Optional[float] = None
+    trace_id: Optional[str] = None
 
 
 class BadRequestError(ServeError):
@@ -116,8 +120,11 @@ class ServeClient:
 
     # -- inference -----------------------------------------------------------
     def infer_async(self, net: Optional[str], x, priority: int = 0,
-                    deadline_us: Optional[float] = None) -> Future:
-        """Admit one request; returns the runtime Future.
+                    deadline_us: Optional[float] = None,
+                    trace_id: Optional[str] = None) -> Future:
+        """Admit one request; returns the runtime Future (which carries
+        ``fut.trace_id``).  ``trace_id`` — a client-supplied
+        ``X-Repro-Trace-Id`` — forces the request into the sampled set.
 
         Raises ``NotFoundError`` / ``BadRequestError`` / ``OverloadedError``
         / ``WarmingUpError`` synchronously — an exception here means the
@@ -128,37 +135,58 @@ class ServeClient:
                 "retry shortly")
         try:
             return self.session.submit(x, net=net, priority=priority,
-                                       deadline_us=deadline_us)
+                                       deadline_us=deadline_us,
+                                       trace_id=trace_id)
         except KeyError as e:
             raise NotFoundError(str(e.args[0]) if e.args else str(e)) from None
         except QueueFullError as e:
-            raise OverloadedError(str(e)) from None
+            err = OverloadedError(str(e))
+            err.trace_id = getattr(e, "trace_id", None)
+            raise err from None
         except CircuitOpenError as e:
-            raise UnavailableError(str(e),
-                                   retry_after_s=e.retry_after_s) from None
+            err = UnavailableError(str(e), retry_after_s=e.retry_after_s)
+            err.trace_id = getattr(e, "trace_id", None)
+            raise err from None
         except (ValueError, TypeError) as e:
             raise BadRequestError(str(e)) from None
 
     @staticmethod
     def resolve_future(fut: Future, timeout: Optional[float] = None):
         """Block on a runtime future, translating shed/fault/cancel/timeout
-        exceptions into their typed ``ServeError``."""
+        exceptions into their typed ``ServeError`` (each carrying the
+        future's ``trace_id``)."""
+        tid = getattr(fut, "trace_id", None)
+
+        def _fail(err: ServeError):
+            err.trace_id = tid
+            raise err from None
+
         try:
             return fut.result(timeout=timeout)
         except DeadlineExceededError as e:
-            raise DeadlineError(str(e)) from None
+            _fail(DeadlineError(str(e)))
         except BackendFaultError as e:
-            raise BackendError(str(e)) from None
+            _fail(BackendError(str(e)))
         except FuturesTimeoutError:
-            raise ClientTimeoutError(
+            _fail(ClientTimeoutError(
                 f"no result within the client-side timeout ({timeout}s); "
-                f"the server may be wedged") from None
+                f"the server may be wedged"))
         except CancelledError:
-            raise ServeError("request cancelled: server shutting down") from None
+            _fail(ServeError("request cancelled: server shutting down"))
+
+    def timeout_for(self, deadline_us: Optional[float]) -> Optional[float]:
+        """Default client-side result timeout: the constructor's
+        ``timeout_s``, or a finite ``deadline_us`` plus execution grace."""
+        if self.timeout_s is not None:
+            return self.timeout_s
+        if deadline_us is not None and math.isfinite(deadline_us):
+            return deadline_us * 1e-6 + _TIMEOUT_GRACE_S
+        return None
 
     def infer(self, net: Optional[str], x, priority: int = 0,
               deadline_us: Optional[float] = None,
-              timeout: Optional[float] = None):
+              timeout: Optional[float] = None,
+              trace_id: Optional[str] = None):
         """Synchronous inference -> ``ExecResult`` (or a ``ServeError``).
 
         ``timeout`` (seconds) bounds the client-side wait; it defaults to
@@ -166,13 +194,11 @@ class ServeClient:
         finite ``deadline_us`` — to the deadline plus an execution grace,
         so a stuck server can never block the caller indefinitely."""
         if timeout is None:
-            timeout = self.timeout_s
-        if timeout is None and deadline_us is not None \
-                and math.isfinite(deadline_us):
-            timeout = deadline_us * 1e-6 + _TIMEOUT_GRACE_S
+            timeout = self.timeout_for(deadline_us)
         return self.resolve_future(
             self.infer_async(net, x, priority=priority,
-                             deadline_us=deadline_us), timeout=timeout)
+                             deadline_us=deadline_us, trace_id=trace_id),
+            timeout=timeout)
 
     # -- introspection -------------------------------------------------------
     def nets(self) -> List[Dict]:
@@ -217,3 +243,9 @@ class ServeClient:
     def metrics_text(self) -> str:
         from repro.serve import metrics
         return metrics.render(self.session)
+
+    def trace_doc(self, limit: Optional[int] = None) -> Dict:
+        """Chrome trace-event JSON of the most recent completed traces
+        (the ``GET /v1/trace`` body) — load into chrome://tracing or
+        ui.perfetto.dev."""
+        return self.session.tracer.chrome_trace(limit)

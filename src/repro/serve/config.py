@@ -23,6 +23,28 @@ class ServeConfig:
                        an open circuit sheds with 503 + ``Retry-After``.
     ``warmup``         — hold traffic (503 ``warming``) until every net's
                        bucket ladder is precompiled.
+
+    Observability knobs (``repro.obs``):
+
+    ``trace``          — record request lifecycle traces (the trace-id
+                       header contract holds either way).
+    ``trace_sample``   — trace every Nth request per net (1 = all, 0 = only
+                       requests arriving with an ``X-Repro-Trace-Id``).
+    ``trace_profile``  — run sampled requests through the executors'
+                       per-layer profiled path (slower; calibration runs).
+    ``trace_dir``      — dump the trace ring buffer as Chrome trace-event
+                       JSON (``<dir>/trace.json``) on shutdown.
     """
     fallback_backend: Optional[str] = None
     warmup: bool = True
+    trace: bool = True
+    trace_sample: int = 1
+    trace_profile: bool = False
+    trace_dir: Optional[str] = None
+
+    def trace_config(self):
+        """The ``repro.obs.TraceConfig`` these knobs describe."""
+        from repro.obs.trace import TraceConfig
+        return TraceConfig(enabled=self.trace,
+                           sample_rate=self.trace_sample,
+                           profile=self.trace_profile)

@@ -5,9 +5,18 @@
          (``Content-Type: application/x-npy``); response JSON, or .npy of
          ``output_int8`` under ``Accept: application/x-npy``
     GET  /v1/nets     — resident networks + shapes + queue depths
+    GET  /v1/trace[?limit=N] — recent completed traces as Chrome trace-event
+                        JSON (chrome://tracing / ui.perfetto.dev)
     GET  /healthz     — per-net health (warming / healthy / degraded /
                         circuit_open); non-200 when any net is unhealthy
-    GET  /metrics     — Prometheus text format (``NetStats.snapshot()``)
+    GET  /metrics     — Prometheus text format (``NetStats.snapshot()`` +
+                        the tracer's per-phase latency histograms)
+
+Every inference response carries ``X-Repro-Trace-Id``: the id the request
+arrived with (same header; forces that request into the tracer's sampled
+set) or a server-assigned one.  Error replies (429/503/504/500) carry the
+header too, plus ``error.trace_id`` in the JSON body, so rejected and shed
+requests stay correlatable with their server-side trace.
 
 Status codes: 400 malformed payload, 404 unknown net/route, 429 queue at
 ``max_queue`` (admission control), 503 circuit open / warming (with
@@ -32,6 +41,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 from urllib.parse import parse_qs, urlparse
 
+from repro.obs.trace import TRACE_HEADER, new_trace_id, valid_trace_id
 from repro.serve import payload
 from repro.serve.client import BadRequestError, NotFoundError, ServeClient, \
     ServeError
@@ -64,25 +74,31 @@ class ServeHandler(BaseHTTPRequestHandler):
         self._reply(status, json.dumps(doc).encode("utf-8"),
                     payload.JSON_TYPE)
 
-    def _reply_error(self, exc: ServeError) -> None:
+    def _reply_error(self, exc: ServeError,
+                     trace_id: Optional[str] = None) -> None:
         # an error reply may be sent before the request body was read
         # (e.g. 404 on the route) — close the connection rather than let a
         # keep-alive client's unread body desync the next request
         self.close_connection = True
         retry_after = getattr(exc, "retry_after_s", None)
+        tid = trace_id or getattr(exc, "trace_id", None)
         body, ctype = payload.encode_error(exc.status, exc.code, str(exc),
-                                           retry_after_s=retry_after)
-        extra = None
+                                           retry_after_s=retry_after,
+                                           trace_id=tid)
+        extra = {}
         if exc.status in (429, 503):
             # whole seconds per RFC 9110; a sub-second probe window still
             # tells the client to back off for at least one
-            extra = {"Retry-After": str(max(1, math.ceil(retry_after or 1.0)))}
-        self._reply(exc.status, body, ctype, extra)
+            extra["Retry-After"] = str(max(1, math.ceil(retry_after or 1.0)))
+        if tid is not None:
+            extra[TRACE_HEADER] = tid
+        self._reply(exc.status, body, ctype, extra or None)
 
     # -- routes --------------------------------------------------------------
     def do_GET(self) -> None:               # noqa: N802 (stdlib casing)
         client: ServeClient = self.server.client
-        path = urlparse(self.path).path
+        url = urlparse(self.path)
+        path = url.path
         try:
             if path == "/healthz":
                 doc = client.healthz()
@@ -94,6 +110,13 @@ class ServeHandler(BaseHTTPRequestHandler):
                             "text/plain; version=0.0.4")
             elif path == "/v1/nets":
                 self._reply_json(200, {"nets": client.nets()})
+            elif path == "/v1/trace":
+                qs = parse_qs(url.query)
+                try:
+                    limit = int(qs["limit"][0]) if "limit" in qs else None
+                except (TypeError, ValueError):
+                    raise BadRequestError("limit must be an int") from None
+                self._reply_json(200, client.trace_doc(limit))
             else:
                 self._reply_error(NotFoundError(f"no route {path!r}"))
         except ServeError as e:
@@ -104,12 +127,20 @@ class ServeHandler(BaseHTTPRequestHandler):
     def do_POST(self) -> None:              # noqa: N802 (stdlib casing)
         client: ServeClient = self.server.client
         url = urlparse(self.path)
+        trace_id = None
         try:
             if not url.path.startswith("/v1/infer/"):
                 raise NotFoundError(f"no route {url.path!r}")
             net = url.path[len("/v1/infer/"):]
             if not net or "/" in net:
                 raise NotFoundError(f"no route {url.path!r}")
+            # a client-supplied trace id forces the request into the
+            # tracer's sampled set; absent, the scheduler assigns one (and
+            # the sampler decides whether to record)
+            trace_id = self.headers.get(TRACE_HEADER)
+            if trace_id is not None and not valid_trace_id(trace_id):
+                raise BadRequestError(
+                    f"{TRACE_HEADER} must be 1-64 chars of [A-Za-z0-9._-]")
             try:
                 length = int(self.headers.get("Content-Length", 0))
             except ValueError:
@@ -132,18 +163,29 @@ class ServeHandler(BaseHTTPRequestHandler):
                 raise BadRequestError(
                     "priority must be int, deadline_us float") from None
             t0 = time.perf_counter()
-            res = client.infer(net, x, priority=priority,
-                               deadline_us=deadline_us)
+            fut = client.infer_async(net, x, priority=priority,
+                                     deadline_us=deadline_us,
+                                     trace_id=trace_id)
+            trace_id = getattr(fut, "trace_id", trace_id)
+            res = client.resolve_future(fut,
+                                        timeout=client.timeout_for(deadline_us))
             out, ctype = payload.encode_result(
                 net, res, (time.perf_counter() - t0) * 1e6,
                 accept=self.headers.get("Accept", ""))
-            extra = ({"X-Repro-Degraded": "1"}
-                     if getattr(res, "degraded", False) else None)
-            self._reply(200, out, ctype, extra)
+            extra = {}
+            if getattr(res, "degraded", False):
+                extra["X-Repro-Degraded"] = "1"
+            if trace_id is not None:
+                extra[TRACE_HEADER] = trace_id
+            self._reply(200, out, ctype, extra or None)
         except ServeError as e:
-            self._reply_error(e)
+            # rejections that never reached the scheduler (404/400/warming)
+            # still get a fresh id for the error body/header
+            self._reply_error(e, trace_id=getattr(e, "trace_id", None)
+                              or trace_id or new_trace_id())
         except Exception as e:              # noqa: BLE001 — last-resort 500
-            self._reply_error(ServeError(f"{type(e).__name__}: {e}"))
+            self._reply_error(ServeError(f"{type(e).__name__}: {e}"),
+                              trace_id=trace_id or new_trace_id())
 
 
 def make_server(session, host: str = "127.0.0.1",
@@ -161,12 +203,15 @@ def make_server(session, host: str = "127.0.0.1",
 def serve_forever(session, host: str = "127.0.0.1", port: int = 8000,
                   verbose: bool = True,
                   ready: Optional[threading.Event] = None,
-                  warmup: bool = False) -> None:
+                  warmup: bool = False,
+                  trace_dir: Optional[str] = None) -> None:
     """Blocking serve loop (the ``python -m repro.serve`` entry point).
 
     With ``warmup=True`` the socket opens immediately but inference returns
     503 (``/healthz`` reports ``"warming"``) until every resident net's
     bucket ladder is precompiled — no first request ever compile-stalls.
+    ``trace_dir`` dumps the tracer's ring buffer as Chrome trace-event JSON
+    (``<trace_dir>/trace.json``) on shutdown.
     """
     srv = make_server(session, host, port, verbose=verbose)
     bound = srv.server_address
@@ -194,3 +239,8 @@ def serve_forever(session, host: str = "127.0.0.1", port: int = 8000,
         srv.shutdown()
         srv.server_close()
         session.close(drain=True)
+        if trace_dir is not None:
+            import pathlib
+            out = pathlib.Path(trace_dir) / "trace.json"
+            session.tracer.to_file(out)
+            print(f"[repro.serve] trace -> {out}")

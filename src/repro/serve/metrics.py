@@ -4,6 +4,13 @@
 ``NetStats.snapshot()`` each (the snapshot is the concurrency boundary —
 this module only formats), and emits the Prometheus exposition format
 (text/plain; version 0.0.4) that ``GET /metrics`` returns.  Stdlib only.
+
+Conformance notes (`tests/test_serve.py` round-trips this through a strict
+parser): every series gets ``# HELP`` + ``# TYPE``; label values escape
+``\\``, ``"`` and newlines; HELP text escapes ``\\`` and newlines; the
+latency summary carries ``_sum``/``_count`` alongside its quantiles; and
+the tracer's per-phase latency histograms render as proper cumulative
+``_bucket{le=...}`` series ending at ``le="+Inf"`` with ``_sum``/``_count``.
 """
 
 from __future__ import annotations
@@ -63,7 +70,19 @@ PREFIX = "repro_serve"
 
 
 def _escape(label: str) -> str:
+    """Label-value escaping per the exposition format: backslash, double
+    quote and newline."""
     return label.replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
+
+
+def _escape_help(text: str) -> str:
+    """HELP-text escaping per the exposition format: backslash and newline
+    only (quotes are legal in HELP)."""
+    return text.replace("\\", r"\\").replace("\n", r"\n")
+
+
+def _fmt_le(le: float) -> str:
+    return "+Inf" if le == float("inf") else f"{le:g}"
 
 
 def render(session) -> str:
@@ -75,7 +94,7 @@ def render(session) -> str:
 
     def emit(suffix, mtype, help_text, values):
         name = f"{PREFIX}_{suffix}"
-        lines.append(f"# HELP {name} {help_text}")
+        lines.append(f"# HELP {name} {_escape_help(help_text)}")
         lines.append(f"# TYPE {name} {mtype}")
         lines.extend(values)
 
@@ -92,9 +111,32 @@ def render(session) -> str:
           f'{{net="{_escape(n)}",bucket="{b}"}} {c}'
           for n, snap in snaps.items()
           for b, c in sorted(snap.get("bucket_launches", {}).items())])
+    # summary: quantiles over the recent window, _sum/_count over all time
+    vals = []
+    for n, snap in snaps.items():
+        vals.extend(
+            f'{PREFIX}_latency_us{{net="{_escape(n)}",quantile="{q}"}} '
+            f'{snap[key]:.1f}' for q, key in _QUANTILES)
+        vals.append(f'{PREFIX}_latency_us_sum{{net="{_escape(n)}"}} '
+                    f'{snap.get("latency_total_us", 0.0):.1f}')
+        vals.append(f'{PREFIX}_latency_us_count{{net="{_escape(n)}"}} '
+                    f'{snap.get("latency_count", 0)}')
     emit("latency_us", "summary",
-         "Submit-to-result latency percentiles over the recent window",
-         [f'{PREFIX}_latency_us{{net="{_escape(n)}",quantile="{q}"}} '
-          f'{snap[key]:.1f}'
-          for n, snap in snaps.items() for q, key in _QUANTILES])
+         "Submit-to-result latency: percentiles over the recent window, "
+         "sum/count over the session lifetime", vals)
+    # per-phase latency histograms from the tracer (sampled requests only)
+    tracer = getattr(session, "tracer", None)
+    hists = tracer.phase_histograms() if tracer is not None else {}
+    vals = []
+    for (net, phase) in sorted(hists):
+        h = hists[(net, phase)]
+        lbl = f'net="{_escape(net)}",phase="{_escape(phase)}"'
+        vals.extend(
+            f'{PREFIX}_phase_us_bucket{{{lbl},le="{_fmt_le(le)}"}} {cum}'
+            for le, cum in h["buckets"])
+        vals.append(f'{PREFIX}_phase_us_sum{{{lbl}}} {h["sum"]:.1f}')
+        vals.append(f'{PREFIX}_phase_us_count{{{lbl}}} {h["count"]}')
+    emit("phase_us", "histogram",
+         "Per-phase request latency from sampled traces (queue, hold, pad, "
+         "device_execute, backoff, respond, request, total)", vals)
     return "\n".join(lines) + "\n"

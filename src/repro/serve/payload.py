@@ -107,8 +107,12 @@ def encode_result(net: str, res, latency_us: float,
 
 
 def encode_error(status: int, code: str, message: str,
-                 retry_after_s=None) -> Tuple[bytes, str]:
+                 retry_after_s=None, trace_id=None) -> Tuple[bytes, str]:
     doc = {"error": {"status": status, "code": code, "message": message}}
     if retry_after_s is not None:
         doc["error"]["retry_after_s"] = round(float(retry_after_s), 3)
+    if trace_id is not None:
+        # rejected/shed requests stay correlatable: the same id rides the
+        # X-Repro-Trace-Id response header and the tracer's record
+        doc["error"]["trace_id"] = trace_id
     return json.dumps(doc).encode("utf-8"), JSON_TYPE

@@ -564,3 +564,93 @@ class TestHTTPFaultSurface:
             srv.shutdown()
             srv.server_close()
             ses.close()
+
+
+# ---------------------------------------------------------------------------
+# Observability on the fault paths: every admitted request completes
+# EXACTLY ONE trace, and the trace records the fault-plane events
+# ---------------------------------------------------------------------------
+class TestTraceFaultPaths:
+    def test_retry_records_failure_event_and_backoff_span(self, tiny_art):
+        stub = _FlakyStub(fail_times=1)
+        ses = Session(tiny_art, scheduler=_cfg(max_retries=1))
+        ses._resolve(None).executor = stub
+        try:
+            ses.run(_x())
+            (t,) = ses.tracer.traces()
+            assert t.status == "ok" and t.finished
+            evs = [name for name, _, _ in t.events]
+            assert evs.count("launch_failure") == 1
+            names = {s.name for s in t.spans}
+            assert "backoff" in names        # the retry waited out the base
+            # only the SUCCESSFUL attempt gets a device_execute span, and
+            # it is marked as the second attempt
+            (de,) = [s for s in t.spans if s.name == "device_execute"]
+            assert de.args["attempt"] == 2
+        finally:
+            ses.close()
+
+    def test_watchdog_fire_event_on_hung_launch(self, tiny_art):
+        plan = FaultPlan(specs=(FaultSpec("hang", schedule=(0,)),))
+        ses, faulty = _faulty_session(
+            tiny_art, _FlakyStub(), plan,
+            _cfg(watchdog_timeout_s=0.3, max_retries=0))
+        try:
+            with pytest.raises(BackendFaultError):
+                ses.run(_x())
+            (t,) = ses.tracer.traces()
+            assert t.status == "error" and t.error == "BackendFaultError"
+            evs = [name for name, _, _ in t.events]
+            assert "watchdog_fire" in evs and "launch_failure" in evs
+        finally:
+            faulty.release_hangs()
+            ses.close()
+
+    def test_arena_reset_event_on_poisoned_arena(self, tiny_art, real_ex):
+        plan = FaultPlan(specs=(
+            FaultSpec("corrupt_arena", schedule=(0,), max_faults=1),))
+        ses, _ = _faulty_session(tiny_art, real_ex["baremetal"], plan,
+                                 _cfg(max_retries=1))
+        try:
+            ses.run(_x())
+            (t,) = ses.tracer.traces()
+            assert t.status == "ok"
+            evs = [name for name, _, _ in t.events]
+            assert "arena_reset" in evs and "launch_failure" in evs
+        finally:
+            ses.close()
+
+    def test_circuit_transitions_recorded_globally(self, tiny_art):
+        stub = _FlakyStub(fail_times=2)
+        ses = Session(tiny_art,
+                      scheduler=_cfg(max_retries=0, breaker_threshold=2,
+                                     breaker_reset_s=0.15))
+        ses._resolve(None).executor = stub
+        try:
+            for _ in range(2):
+                with pytest.raises(BackendFaultError):
+                    ses.run(_x())
+            time.sleep(0.2)                  # past the reset window
+            ses.run(_x())                    # half-open probe heals
+            instants = {e["name"]
+                        for e in ses.tracer.chrome_trace()["traceEvents"]
+                        if e["ph"] == "i"}
+            assert {"circuit_open", "circuit_half_open",
+                    "circuit_closed"} <= instants
+        finally:
+            ses.close()
+
+    def test_exactly_one_trace_per_request_under_retries(self, tiny_art):
+        stub = _FlakyStub(fail_times=2)
+        ses = Session(tiny_art, scheduler=_cfg(max_retries=2))
+        ses._resolve(None).executor = stub
+        try:
+            futs = [ses.submit(_x(i)) for i in range(4)]
+            for f in futs:
+                f.result(timeout=60)
+            traces = ses.tracer.traces()
+            assert sorted(t.trace_id for t in traces) == \
+                sorted(f.trace_id for f in futs)
+            assert all(t.finished and t.status == "ok" for t in traces)
+        finally:
+            ses.close()

@@ -59,6 +59,68 @@ def _post(url, body, headers, timeout=60):
     return urllib.request.urlopen(req, timeout=timeout)
 
 
+_SAMPLE_RE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?:\{((?:[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*",?)*)\})?'
+    r' (-?(?:[0-9]*\.?[0-9]+(?:e[+-]?[0-9]+)?|\+Inf|-Inf|NaN))$')
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def _unescape(v: str) -> str:
+    # single left-to-right pass: sequential str.replace corrupts r"\\n"
+    return re.sub(r"\\(.)", lambda m: "\n" if m.group(1) == "n"
+                  else m.group(1), v)
+
+
+def _parse_prometheus(text: str):
+    """Strict parser for the exposition format subset /metrics emits.
+
+    Returns ``(families, samples)`` — ``{name: type}`` from the ``# TYPE``
+    lines and ``[(name, labels_dict, float_value)]`` — and asserts the
+    contract along the way: every family has # HELP and # TYPE, every
+    sample line parses, and every sample belongs to a declared family
+    (summary children ``_sum``/``_count``/quantile, histogram children
+    ``_bucket``/``_sum``/``_count``)."""
+    helped, families, samples = set(), {}, []
+    for line in text.strip().splitlines():
+        if line.startswith("# HELP "):
+            name = line.split(" ", 3)[2]
+            assert name not in helped, f"duplicate HELP for {name}"
+            helped.add(name)
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, mtype = line.split(" ", 3)
+            assert name in helped, f"TYPE before HELP for {name}"
+            assert name not in families, f"duplicate TYPE for {name}"
+            assert mtype in ("counter", "gauge", "summary", "histogram")
+            families[name] = mtype
+            continue
+        assert not line.startswith("#"), f"unknown comment line: {line!r}"
+        m = _SAMPLE_RE.match(line)
+        assert m, f"unparseable metric line: {line!r}"
+        name, labels_raw, value = m.groups()
+        labels = {k: _unescape(v)
+                  for k, v in _LABEL_RE.findall(labels_raw or "")}
+        base = name
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[:-len(suffix)] in families:
+                base = name[:-len(suffix)]
+        assert base in families, f"sample {name!r} has no TYPE declaration"
+        mtype = families[base]
+        if base != name:
+            assert mtype in ("summary", "histogram"), \
+                f"{name!r} child of non-aggregate family {base!r}"
+            assert name.endswith("_bucket") is (mtype == "histogram") \
+                or not name.endswith("_bucket")
+        if name.endswith("_bucket"):
+            assert "le" in labels, f"histogram bucket without le: {line!r}"
+        if "quantile" in labels:
+            assert mtype == "summary"
+        samples.append((name, labels, float(value)))
+    assert families, "no metric families rendered"
+    return families, samples
+
+
 class TestHTTPEndToEnd:
     def test_json_infer_bitexact_vs_session_run(self, served):
         base, ses, _ = served
@@ -158,7 +220,16 @@ class TestHTTPEndToEnd:
                       json.dumps({"input": x.tolist()}).encode(),
                       {"Content-Type": "application/json"})
             assert ei.value.code == 429
-            assert json.loads(ei.value.read())["error"]["code"] == "overloaded"
+            err = json.loads(ei.value.read())["error"]
+            assert err["code"] == "overloaded"
+            # the rejected request is still correlatable: the 429 carries
+            # the trace id in the body AND the response header, and the
+            # server-side trace completed with status "rejected"
+            assert err["trace_id"]
+            assert ei.value.headers["X-Repro-Trace-Id"] == err["trace_id"]
+            rej = [t for t in ses.tracer.traces()
+                   if t.trace_id == err["trace_id"]]
+            assert len(rej) == 1 and rej[0].status == "rejected"
             assert ses.stats().rejected >= 1
         finally:
             blocked.set()
@@ -181,25 +252,139 @@ class TestHTTPEndToEnd:
         assert doc["status"] == "ok" and doc["nets"] == 1
 
     def test_metrics_parse_prometheus(self, served):
+        """Strict exposition-format round-trip: every sample line parses,
+        belongs to a # HELP + # TYPE declared family (summaries via their
+        quantile/_sum/_count children, histograms via _bucket/_sum/_count),
+        and every histogram is cumulative ending at le="+Inf" == _count."""
         base, ses, _ = served
         ses.run(np.zeros((2, 8, 8), np.float32))
         text = urllib.request.urlopen(f"{base}/metrics",
                                       timeout=30).read().decode()
-        line_re = re.compile(
-            r'^[a-z_]+\{net="[^"]*"(,(quantile|bucket)="[0-9.]+")?\} '
-            r'-?[0-9.]+(e[+-]?\d+)?$')
-        seen = set()
-        for line in text.strip().splitlines():
-            if line.startswith("#"):
-                continue
-            assert line_re.match(line), f"unparseable metric line: {line!r}"
-            seen.add(line.split("{")[0])
+        families, samples = _parse_prometheus(text)
+        names = {s[0] for s in samples}
         for want in ("repro_serve_requests_total", "repro_serve_queue_depth",
                      "repro_serve_latency_us", "repro_serve_rejected_total",
-                     "repro_serve_shed_total"):
-            assert want in seen
+                     "repro_serve_shed_total", "repro_serve_phase_us_bucket"):
+            assert want in names, f"missing metric {want}"
+        assert families["repro_serve_latency_us"] == "summary"
+        assert families["repro_serve_phase_us"] == "histogram"
+        # summary invariant: _count samples accompany the quantiles
+        counts = [v for n, lbl, v in samples
+                  if n == "repro_serve_latency_us_count"]
+        assert counts and all(c >= 1 for c in counts)
+        # histogram invariant: per (net, phase) series, buckets are
+        # cumulative, ordered by le, ending at +Inf == _count
+        series = {}
+        for n, lbl, v in samples:
+            if n == "repro_serve_phase_us_bucket":
+                key = (lbl["net"], lbl["phase"])
+                le = float("inf") if lbl["le"] == "+Inf" else float(lbl["le"])
+                series.setdefault(key, []).append((le, v))
+        assert series, "no phase histogram series rendered"
+        for key, buckets in series.items():
+            les = [le for le, _ in buckets]
+            cums = [c for _, c in buckets]
+            assert les == sorted(les) and les[-1] == float("inf")
+            assert cums == sorted(cums), f"non-cumulative buckets for {key}"
+            (count,) = [v for n, lbl, v in samples
+                        if n == "repro_serve_phase_us_count"
+                        and (lbl["net"], lbl["phase"]) == key]
+            assert cums[-1] == count
         m = re.search(r'repro_serve_requests_total\{net="tiny"\} (\d+)', text)
         assert m and int(m.group(1)) >= 1
+
+    def test_metrics_label_escaping_parses(self, tiny_art):
+        """A net name containing every character the exposition format
+        escapes (backslash, quote, newline) still renders parseable text."""
+        ses = Session(scheduler=SchedulerConfig())
+        try:
+            ses.load(tiny_art, name='we"ird\\na\nme')
+            from repro.serve.metrics import render
+            families, samples = _parse_prometheus(render(ses))
+            nets = {lbl["net"] for _, lbl, _ in samples if "net" in lbl}
+            assert 'we"ird\\na\nme' in nets
+        finally:
+            ses.close()
+
+
+class TestTraceHTTP:
+    """The X-Repro-Trace-Id contract over the wire: every inference reply
+    (success or error) carries a trace id, client-supplied ids are echoed
+    and force tracing, and /v1/trace exports the server-side spans."""
+
+    def test_success_reply_assigns_trace_id(self, served):
+        base, ses, _ = served
+        x = np.zeros((2, 8, 8), np.float32)
+        r = _post(f"{base}/v1/infer/tiny",
+                  json.dumps({"input": x.tolist()}).encode(),
+                  {"Content-Type": "application/json"})
+        tid = r.headers["X-Repro-Trace-Id"]
+        assert tid and re.fullmatch(r"[0-9a-f]{16}", tid)
+        assert any(t.trace_id == tid for t in ses.tracer.traces())
+
+    def test_client_trace_id_echoed_and_traced(self, served):
+        base, ses, _ = served
+        x = np.zeros((2, 8, 8), np.float32)
+        r = _post(f"{base}/v1/infer/tiny",
+                  json.dumps({"input": x.tolist()}).encode(),
+                  {"Content-Type": "application/json",
+                   "X-Repro-Trace-Id": "my-trace-7"})
+        assert r.headers["X-Repro-Trace-Id"] == "my-trace-7"
+        (t,) = [t for t in ses.tracer.traces()
+                if t.trace_id == "my-trace-7"]
+        assert t.status == "ok"
+        assert {"queue", "device_execute", "request"} <= \
+            {s.name for s in t.spans}
+
+    def test_invalid_trace_id_400(self, served):
+        base, _, _ = served
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(f"{base}/v1/infer/tiny", b'{"input": [0]}',
+                  {"Content-Type": "application/json",
+                   "X-Repro-Trace-Id": "a" * 65})
+        assert ei.value.code == 400
+        err = json.loads(ei.value.read())["error"]
+        assert err["code"] == "bad_request" and "Trace-Id" in err["message"]
+
+    def test_404_error_body_carries_trace_id(self, served):
+        base, _, _ = served
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(f"{base}/v1/infer/ghost", b'{"input": [0]}',
+                  {"Content-Type": "application/json"})
+        err = json.loads(ei.value.read())["error"]
+        assert err["trace_id"]
+        assert ei.value.headers["X-Repro-Trace-Id"] == err["trace_id"]
+
+    def test_504_deadline_shed_carries_trace_id(self, served):
+        base, ses, _ = served
+        x = np.zeros((2, 8, 8), np.float32)
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(f"{base}/v1/infer/tiny?deadline_us=0",
+                  json.dumps({"input": x.tolist()}).encode(),
+                  {"Content-Type": "application/json"})
+        assert ei.value.code == 504
+        err = json.loads(ei.value.read())["error"]
+        assert err["code"] == "deadline_exceeded" and err["trace_id"]
+        assert ei.value.headers["X-Repro-Trace-Id"] == err["trace_id"]
+        (t,) = [t for t in ses.tracer.traces()
+                if t.trace_id == err["trace_id"]]
+        assert t.status == "shed"
+
+    def test_trace_endpoint_exports_chrome_json(self, served):
+        base, _, _ = served
+        x = np.zeros((2, 8, 8), np.float32)
+        _post(f"{base}/v1/infer/tiny",
+              json.dumps({"input": x.tolist()}).encode(),
+              {"Content-Type": "application/json",
+               "X-Repro-Trace-Id": "export-me"})
+        doc = json.loads(urllib.request.urlopen(
+            f"{base}/v1/trace?limit=10", timeout=30).read())
+        assert doc["traceEvents"]
+        assert any(e.get("args", {}).get("trace_id") == "export-me"
+                   for e in doc["traceEvents"])
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{base}/v1/trace?limit=zap", timeout=30)
+        assert ei.value.code == 400
 
 
 class TestServeClient:
