@@ -111,6 +111,14 @@ def main() -> int:
             if b_gp is not None and n_gp is not None:
                 rows.append((f"{name} [goodput]", b_gp, n_gp, "req/s",
                              (b_gp / n_gp) if n_gp else float("inf"), tol))
+            # max_rps_under_slo (table 6's saturation search) gates like
+            # goodput: inverted direction (serving FEWER rps under the same
+            # SLO is the regression) with the row's widened tolerance
+            b_mr, n_mr = (brow.get("max_rps_under_slo"),
+                          nrow.get("max_rps_under_slo"))
+            if b_mr is not None and n_mr is not None:
+                rows.append((f"{name} [max_rps]", b_mr, n_mr, "req/s",
+                             (b_mr / n_mr) if n_mr else float("inf"), tol))
             b_rm, n_rm = brow.get("recovery_ms"), nrow.get("recovery_ms")
             if b_rm is not None and n_rm is not None:
                 rows.append((f"{name} [recovery]", b_rm, n_rm, "ms",

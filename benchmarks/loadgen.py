@@ -1,0 +1,162 @@
+"""Shared open-loop load generation for the serving benchmarks.
+
+Extracted from the table-5 serving front-end benchmark so table 6 (the
+MLPerf-style saturation search) replays traffic through the exact same
+machinery: a Poisson arrival-schedule builder, an open-loop replayer over
+the ``ServeClient`` surface (in-process or HTTP — the submitter never
+waits for completions, so queueing pressure is real), and the per-class
+latency/goodput reducers.
+
+The schedule builder draws from ``np.random.default_rng(seed)`` in a fixed
+per-arrival order (interarrival, net pick, priority pick, input index) —
+table 5's committed baselines depend on that stream, so keep the order.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+
+def percentile(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+class Record:
+    """One request's client-side outcome (submit/done stamps, typed error
+    code, bit-exactness vs the precomputed reference)."""
+
+    __slots__ = ("net", "idx", "priority", "deadline_us", "t_submit",
+                 "t_done", "error", "exact")
+
+    def __init__(self, net, idx, priority, deadline_us):
+        self.net, self.idx = net, idx
+        self.priority, self.deadline_us = priority, deadline_us
+        self.t_submit = self.t_done = 0.0
+        self.error: str = ""
+        self.exact = False
+
+    @property
+    def ok(self) -> bool:
+        return not self.error
+
+    @property
+    def latency_us(self) -> float:
+        return (self.t_done - self.t_submit) * 1e6
+
+    @property
+    def in_deadline(self) -> bool:
+        return self.ok and self.latency_us <= self.deadline_us
+
+
+def drive(client, schedule, inputs, refs, honor_sla: bool,
+          timeout_s: float = 600.0):
+    """Replay one arrival trace open-loop; returns (records, wall_s,
+    max_inflight).  The submitter never waits for completions — arrivals
+    land on schedule (or as fast as possible once the trace runs behind).
+
+    ``client`` is anything with the ``ServeClient`` surface (``infer_async``
+    + ``resolve_future``); ``schedule`` is ``[(t, net, idx, priority,
+    deadline_us), ...]``; ``inputs``/``refs`` map net -> input pool /
+    expected ``output_int8`` per index.
+
+    ``honor_sla=False`` is the FIFO baseline: priorities AND deadlines are
+    stripped at submit (deadlines feed EDF ordering, so leaving them in
+    would smuggle priority scheduling into the baseline); the class labels
+    stay on the records for apples-to-apples per-class reporting, and
+    goodput is still judged against each class's deadline client-side."""
+    records = []
+    lock = threading.Lock()
+    state = {"inflight": 0, "max_inflight": 0, "remaining": len(schedule)}
+    done_evt = threading.Event()
+    resolve = type(client).resolve_future
+    t0 = time.perf_counter()
+
+    def finish_one(was_inflight: bool) -> None:
+        with lock:
+            if was_inflight:
+                state["inflight"] -= 1
+            state["remaining"] -= 1
+            if state["remaining"] == 0:
+                done_evt.set()
+
+    def on_done(rec: Record, fut) -> None:
+        rec.t_done = time.perf_counter()
+        try:
+            res = resolve(fut)
+            rec.exact = bool(np.array_equal(
+                np.asarray(res.output_int8), refs[rec.net][rec.idx]))
+        except Exception as e:
+            rec.error = getattr(e, "code", type(e).__name__)
+        finish_one(True)
+
+    for dt, net, idx, priority, deadline_us in schedule:
+        target = t0 + dt
+        now = time.perf_counter()
+        if target > now:
+            time.sleep(target - now)
+        rec = Record(net, idx, priority if honor_sla else 0, deadline_us)
+        records.append(rec)
+        rec.t_submit = time.perf_counter()
+        try:
+            fut = client.infer_async(net, inputs[net][idx],
+                                     priority=rec.priority,
+                                     deadline_us=(deadline_us if honor_sla
+                                                  else None))
+        except Exception as e:              # admission control: fail-fast
+            rec.t_done = time.perf_counter()
+            rec.error = getattr(e, "code", type(e).__name__)
+            finish_one(False)
+            continue
+        with lock:
+            state["inflight"] += 1
+            state["max_inflight"] = max(state["max_inflight"],
+                                        state["inflight"])
+        fut.add_done_callback(lambda f, r=rec: on_done(r, f))
+    done_evt.wait(timeout=timeout_s)
+    return records, time.perf_counter() - t0, state["max_inflight"]
+
+
+def class_stats(records, pred):
+    xs = [r for r in records if pred(r) and r.ok]
+    lats = [r.latency_us for r in xs]
+    return {"n": sum(1 for r in records if pred(r)), "ok": len(xs),
+            "p50": percentile(lats, 50), "p99": percentile(lats, 99)}
+
+
+def goodput(records, wall_s, pred=lambda r: True):
+    return sum(1 for r in records if pred(r) and r.in_deadline) / wall_s
+
+
+def make_schedule(seed: int, n_total: int, mean_interarrival_us: float, *,
+                  fast_net: str, slow_net: str, fast_fraction: float,
+                  high_fraction: float, high_priority: int,
+                  high_deadline_us: float, low_deadline_us: float,
+                  pool: int, burst_fraction: float, nets_filter=None):
+    """Arrival burst (``burst_fraction`` of the trace at t=0) followed by
+    open-loop Poisson arrivals.  The burst guarantees a deep backlog on any
+    machine speed — without it, a fast box serves requests as fast as the
+    submitter can offer them and no queueing (the thing scheduling policy
+    acts on) ever forms; the Poisson tail then models the arrival bursts
+    the collector continuously batches across.
+
+    A single-net workload is ``fast_net == slow_net`` (the net draw still
+    happens, keeping the RNG stream schedule-shape independent);
+    ``nets_filter`` drops arrivals for other nets *after* all draws, so a
+    filtered trace is the exact subsequence of the unfiltered one."""
+    rng = np.random.default_rng(seed)
+    burst = int(burst_fraction * n_total)
+    sched, t = [], 0.0
+    for i in range(n_total):
+        if i >= burst:
+            t += rng.exponential(mean_interarrival_us) * 1e-6
+        net = fast_net if rng.random() < fast_fraction else slow_net
+        high = rng.random() < high_fraction
+        idx = int(rng.integers(pool))
+        if nets_filter and net not in nets_filter:
+            continue
+        sched.append((t, net, idx, high_priority if high else 0,
+                      high_deadline_us if high else low_deadline_us))
+    return sched

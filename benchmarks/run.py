@@ -13,6 +13,9 @@ Tables:
   5  serving front-end: open-loop Poisson mixed-priority load over the
      in-process ServeClient — per-priority p50/p99, goodput, FIFO A/B,
      per-net dispatcher isolation                                (serve layer)
+  6  saturation search: MLPerf-style offline throughput + binary-searched
+     max_rps_under_slo (declared p99 + error-rate SLO judged by the
+     windowed telemetry; gated inverted — lower RPS regresses)  (slo layer)
   7  chaos soak: the table-5 trace under injected fault storms —
      goodput retained, watchdog hang containment (hang_count must
      be 0), circuit-breaker outage recovery_ms                   (fault layer)
@@ -52,10 +55,12 @@ def main() -> None:
 
     from benchmarks import (table1_storage, table2_nvsmall, table3_nvfull,
                             table4_serving, table5_serving_frontend,
-                            table7_chaos, table8_observability)
+                            table6_saturation, table7_chaos,
+                            table8_observability)
     tables = {1: table1_storage, 2: table2_nvsmall, 3: table3_nvfull,
               4: table4_serving, 5: table5_serving_frontend,
-              7: table7_chaos, 8: table8_observability}
+              6: table6_saturation, 7: table7_chaos,
+              8: table8_observability}
     picked = {args.table: tables[args.table]} if args.table else tables
 
     out_dir = pathlib.Path(args.out)

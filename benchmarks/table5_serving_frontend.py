@@ -23,15 +23,15 @@ and every request must resolve (result, 429 fail-fast, or deadline shed).
 from __future__ import annotations
 
 import sys
-import threading
 import time
 
 import numpy as np
 
+from benchmarks.loadgen import class_stats, drive, goodput, make_schedule
 from repro.core import graph
 from repro.core.pipeline import CompilerPipeline
 from repro.runtime import Session, SchedulerConfig
-from repro.serve.client import ServeClient, ServeError
+from repro.serve.client import ServeClient
 
 HIGH_PRIORITY = 2
 HIGH_FRACTION = 0.25            # fraction of traffic that is high priority
@@ -69,128 +69,20 @@ def _slow_net() -> graph.NetGraph:
     return g.infer_shapes()
 
 
-def _percentile(xs, p):
-    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
-
-
-class _Record:
-    __slots__ = ("net", "idx", "priority", "deadline_us", "t_submit",
-                 "t_done", "error", "exact")
-
-    def __init__(self, net, idx, priority, deadline_us):
-        self.net, self.idx = net, idx
-        self.priority, self.deadline_us = priority, deadline_us
-        self.t_submit = self.t_done = 0.0
-        self.error: str = ""
-        self.exact = False
-
-    @property
-    def ok(self) -> bool:
-        return not self.error
-
-    @property
-    def latency_us(self) -> float:
-        return (self.t_done - self.t_submit) * 1e6
-
-    @property
-    def in_deadline(self) -> bool:
-        return self.ok and self.latency_us <= self.deadline_us
-
-
-def _drive(client: ServeClient, schedule, inputs, refs, honor_sla: bool):
-    """Replay one arrival trace open-loop; returns (records, wall_s,
-    max_inflight).  The submitter never waits for completions — arrivals
-    land on schedule (or as fast as possible once the trace runs behind).
-
-    ``honor_sla=False`` is the FIFO baseline: priorities AND deadlines are
-    stripped at submit (deadlines feed EDF ordering, so leaving them in
-    would smuggle priority scheduling into the baseline); the class labels
-    stay on the records for apples-to-apples per-class reporting, and
-    goodput is still judged against each class's deadline client-side."""
-    records = []
-    lock = threading.Lock()
-    state = {"inflight": 0, "max_inflight": 0, "remaining": len(schedule)}
-    done_evt = threading.Event()
-    t0 = time.perf_counter()
-
-    def finish_one(was_inflight: bool) -> None:
-        with lock:
-            if was_inflight:
-                state["inflight"] -= 1
-            state["remaining"] -= 1
-            if state["remaining"] == 0:
-                done_evt.set()
-
-    def on_done(rec: _Record, fut) -> None:
-        rec.t_done = time.perf_counter()
-        try:
-            res = ServeClient.resolve_future(fut)
-            rec.exact = bool(np.array_equal(
-                np.asarray(res.output_int8), refs[rec.net][rec.idx]))
-        except ServeError as e:
-            rec.error = e.code
-        finish_one(True)
-
-    for dt, net, idx, priority, deadline_us in schedule:
-        target = t0 + dt
-        now = time.perf_counter()
-        if target > now:
-            time.sleep(target - now)
-        rec = _Record(net, idx, priority if honor_sla else 0, deadline_us)
-        records.append(rec)
-        rec.t_submit = time.perf_counter()
-        try:
-            fut = client.infer_async(net, inputs[net][idx],
-                                     priority=rec.priority,
-                                     deadline_us=(deadline_us if honor_sla
-                                                  else None))
-        except ServeError as e:             # admission control: fail-fast
-            rec.t_done = time.perf_counter()
-            rec.error = e.code
-            finish_one(False)
-            continue
-        with lock:
-            state["inflight"] += 1
-            state["max_inflight"] = max(state["max_inflight"],
-                                        state["inflight"])
-        fut.add_done_callback(lambda f, r=rec: on_done(r, f))
-    done_evt.wait(timeout=600)
-    return records, time.perf_counter() - t0, state["max_inflight"]
-
-
-def _class_stats(records, pred):
-    xs = [r for r in records if pred(r) and r.ok]
-    lats = [r.latency_us for r in xs]
-    return {"n": sum(1 for r in records if pred(r)), "ok": len(xs),
-            "p50": _percentile(lats, 50), "p99": _percentile(lats, 99)}
-
-
-def _goodput(records, wall_s, pred=lambda r: True):
-    return sum(1 for r in records if pred(r) and r.in_deadline) / wall_s
-
-
 def _make_schedule(seed: int, n_total: int, mean_interarrival_us: float,
                    nets_filter=None):
-    """Arrival burst (BURST_FRACTION of the trace at t=0) followed by
-    open-loop Poisson arrivals.  The burst guarantees a deep backlog on any
-    machine speed — without it, a fast box serves requests as fast as the
-    submitter can offer them and no queueing (the thing scheduling policy
-    acts on) ever forms; the Poisson tail then models the arrival bursts
-    the collector continuously batches across."""
-    rng = np.random.default_rng(seed)
-    burst = int(BURST_FRACTION * n_total)
-    sched, t = [], 0.0
-    for i in range(n_total):
-        if i >= burst:
-            t += rng.exponential(mean_interarrival_us) * 1e-6
-        net = "fastnet" if rng.random() < FAST_FRACTION else "slownet"
-        high = rng.random() < HIGH_FRACTION
-        idx = int(rng.integers(POOL))
-        if nets_filter and net not in nets_filter:
-            continue
-        sched.append((t, net, idx, HIGH_PRIORITY if high else 0,
-                      HIGH_DEADLINE_US if high else LOW_DEADLINE_US))
-    return sched
+    """This table's traffic mix over the shared schedule builder
+    (``benchmarks.loadgen.make_schedule`` — same RNG stream as before the
+    extraction, so the committed baselines stay valid)."""
+    return make_schedule(seed, n_total, mean_interarrival_us,
+                         fast_net="fastnet", slow_net="slownet",
+                         fast_fraction=FAST_FRACTION,
+                         high_fraction=HIGH_FRACTION,
+                         high_priority=HIGH_PRIORITY,
+                         high_deadline_us=HIGH_DEADLINE_US,
+                         low_deadline_us=LOW_DEADLINE_US,
+                         pool=POOL, burst_fraction=BURST_FRACTION,
+                         nets_filter=nets_filter)
 
 
 def run(fast: bool = False):
@@ -263,33 +155,33 @@ def _run(fast: bool, n_total: int):
     all_recs, last, max_inflight = [], {}, 0
     for _ in range(reps):
         # phase 1: fast net alone (head-of-line baseline)
-        solo_recs, _, _ = _drive(client, solo_fast, inputs, refs,
-                                 honor_sla=False)
+        solo_recs, _, _ = drive(client, solo_fast, inputs, refs,
+                                honor_sla=False)
         # phase 2: FIFO baseline — same mixed trace, priorities stripped
-        fifo_recs, fifo_wall, fifo_infl = _drive(client, mixed, inputs,
-                                                 refs, honor_sla=False)
+        fifo_recs, fifo_wall, fifo_infl = drive(client, mixed, inputs,
+                                                refs, honor_sla=False)
         # phase 3: SLA run — same mixed trace, priorities+deadlines honored
-        sla_recs, sla_wall, sla_infl = _drive(client, mixed, inputs, refs,
-                                              honor_sla=True)
+        sla_recs, sla_wall, sla_infl = drive(client, mixed, inputs, refs,
+                                             honor_sla=True)
         all_recs += solo_recs + fifo_recs + sla_recs
         max_inflight = max(max_inflight, fifo_infl, sla_infl)
-        last = {"hi": _class_stats(sla_recs, is_high),
-                "lo": _class_stats(sla_recs, lambda r: not is_high(r))}
+        last = {"hi": class_stats(sla_recs, is_high),
+                "lo": class_stats(sla_recs, lambda r: not is_high(r))}
         m["hi_p50"].append(last["hi"]["p50"])
         m["hi_p99"].append(last["hi"]["p99"])
         m["lo_p50"].append(last["lo"]["p50"])
         m["lo_p99"].append(last["lo"]["p99"])
-        m["fifo_p99"].append(_class_stats(fifo_recs, is_high)["p99"])
-        m["solo_p99"].append(_class_stats(
+        m["fifo_p99"].append(class_stats(fifo_recs, is_high)["p99"])
+        m["solo_p99"].append(class_stats(
             solo_recs, lambda r: r.net == "fastnet")["p99"])
         # cross-net interference read from the unprioritized mixed phase, so
         # the solo-vs-mixed delta isolates the slow net's presence (the SLA
         # phase would fold priority-induced low-class delay into it)
-        m["mixed_fast_p99"].append(_class_stats(
+        m["mixed_fast_p99"].append(class_stats(
             fifo_recs, lambda r: r.net == "fastnet")["p99"])
-        m["goodput_hi"].append(_goodput(sla_recs, sla_wall, is_high))
-        m["goodput_sla"].append(_goodput(sla_recs, sla_wall))
-        m["goodput_fifo"].append(_goodput(fifo_recs, fifo_wall))
+        m["goodput_hi"].append(goodput(sla_recs, sla_wall, is_high))
+        m["goodput_sla"].append(goodput(sla_recs, sla_wall))
+        m["goodput_fifo"].append(goodput(fifo_recs, fifo_wall))
     med = {k: float(np.median(v)) for k, v in m.items()}
 
     exact_all = all(r.exact for r in all_recs if r.ok)

@@ -1,0 +1,251 @@
+"""MLPerf-style saturation search under a declared SLO (table 6).
+
+The ROADMAP's "saturation-scale load harness" item: what sustained request
+rate can the serving stack hold while *still meeting its objectives*?
+One-shot latency means (tables 2/3) and fixed-overload queueing behavior
+(table 5) don't answer that — MLPerf Inference's server scenario does, by
+searching for the highest Poisson arrival rate whose latency percentile
+stays under a bound.  This harness reproduces that shape over the
+in-process ``ServeClient`` (the exact serving code path minus sockets),
+with the PR-10 windowed telemetry as the measurement oracle:
+
+  * **offline mode** — every request issued at t=0, closed-loop drain:
+    peak throughput with unbounded latency (MLPerf "offline").
+  * **server mode** — open-loop Poisson arrivals via the shared
+    ``benchmarks.loadgen``; a binary search over the arrival rate finds
+    ``max_rps_under_slo``, the highest rate where the *declared*
+    ``SloPolicy`` (p99 latency bound + <=1% error/shed/reject rate) holds.
+    Each probe phase resets the telemetry, replays ~``PHASE_S`` seconds of
+    traffic, and judges the phase via ``SloPolicy.check`` over the
+    smallest telemetry window — the same windowed quantile/error-rate
+    machinery the burn-rate alerting engine reads in production.
+  * **confirmation phase** — a final, longer replay at the found rate;
+    its windowed p50/p90/p99/error-rate/goodput land in the committed row.
+
+The p99 bound is declared *relative to this machine's unloaded p50*
+(``SLO_P50_MULT`` x, floored at ``SLO_FLOOR_US``), so the committed
+``max_rps_under_slo`` measures queueing capacity rather than raw host
+speed, and the row stays comparable across machines via the regression
+gate's ``--normalize``.  Every completed response in every phase is
+checked bit-exact against ``Session.run`` refs; any mismatch aborts the
+table (self-gating, like tables 5/7).
+
+``check_regression.py`` gates ``max_rps_under_slo`` with the direction
+inverted (lower RPS = regression) and this row's widened tolerance, like
+table 5's queueing rows.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.loadgen import drive, make_schedule, percentile
+from repro.core import graph
+from repro.core.pipeline import CompilerPipeline
+from repro.runtime import Session, SchedulerConfig
+from repro.serve.client import ServeClient
+from repro.obs.slo import SloObjective, SloPolicy
+
+NET = "satnet"
+SHAPE = (2, 8, 8)
+POOL = 8                        # distinct inputs (refs precomputed)
+SLO_P50_MULT = 25.0             # p99 bound = mult x unloaded p50 ...
+SLO_FLOOR_US = 5_000.0          # ... but never tighter than this
+ERROR_BUDGET = 0.01             # <=1% of requests may error/shed/reject
+DEADLINE_US = 30.0e6            # loose per-request label (loadgen plumbing)
+SEARCH_ITERS = 7                # binary-search probes (halves the bracket)
+
+
+def _net() -> graph.NetGraph:
+    g = graph.NetGraph(NET, SHAPE)
+    g.layer(name="data", type="input", inputs=[])
+    x = g.layer(name="c1", type="conv", inputs=["data"], out_channels=4,
+                kernel=3, pad=1, relu=True)
+    x = g.layer(name="p1", type="pool", inputs=[x], pool_mode="gap")
+    g.layer(name="fc", type="fc", inputs=[x], out_channels=8)
+    return g.infer_shapes()
+
+
+def _schedule(seed: int, n: int, rate_rps: float):
+    """Pure-Poisson single-net arrivals at ``rate_rps`` (no t=0 burst —
+    the search probes the feasible region, it doesn't force a backlog)."""
+    return make_schedule(seed, n, 1e6 / rate_rps,
+                         fast_net=NET, slow_net=NET, fast_fraction=1.0,
+                         high_fraction=0.0, high_priority=0,
+                         high_deadline_us=DEADLINE_US,
+                         low_deadline_us=DEADLINE_US,
+                         pool=POOL, burst_fraction=0.0)
+
+
+def _window(ses):
+    """The probe oracle: merged stats over the smallest configured window
+    (30s by default — every probe phase fits inside it post-reset)."""
+    return ses.telemetry.window(NET, ses.telemetry.config.windows[0])
+
+
+def run(fast: bool = False):
+    old_switch = sys.getswitchinterval()
+    sys.setswitchinterval(0.0005)   # same rationale as table 5
+    try:
+        return _run(fast)
+    finally:
+        sys.setswitchinterval(old_switch)
+
+
+def _run(fast: bool):
+    phase_s = 0.5 if fast else 1.5
+    confirm_s = 1.0 if fast else 3.0
+    # queue deep enough for the offline phase's all-at-t=0 submit; server
+    # probes then bind on the p99 objective (queueing delay), not on 429s
+    cfg = SchedulerConfig(max_batch=8, max_wait_us=1000.0, max_queue=4096)
+    ses = Session(CompilerPipeline(_net()).run(), scheduler=cfg)
+    client = ServeClient(ses)
+    rng = np.random.default_rng(0)
+    inputs = {NET: [rng.normal(0, 1, SHAPE).astype(np.float32)
+                    for _ in range(POOL)]}
+    refs = {NET: [np.asarray(ses.run(x).output_int8) for x in inputs[NET]]}
+
+    # warm every power-of-two bucket: the search measures dispatch, not XLA
+    k = 1
+    while k <= cfg.max_batch:
+        ses.run_batch(np.stack((inputs[NET] * 2)[:k]))
+        k *= 2
+
+    all_recs = []
+
+    def probe(rate_rps: float, seconds: float, seed: int):
+        """One telemetry-isolated phase at ``rate_rps``; returns the
+        windowed stats (the oracle) + the phase's client-side records."""
+        n = max(96, min(4096, int(rate_rps * seconds)))
+        sched = _schedule(seed, n, rate_rps)
+        ses.telemetry.reset()
+        recs, wall, _ = drive(client, sched, inputs, refs, honor_sla=False)
+        all_recs.extend(recs)
+        time.sleep(0.02)                 # let trailing records land
+        return _window(ses), recs, wall
+
+    # unloaded p50 through the same windowed-telemetry path -> declared SLO
+    ses.telemetry.reset()
+    for i in range(48):
+        client.infer(NET, inputs[NET][i % POOL])
+    base = _window(ses)
+    base_p50 = base.quantile(0.50)
+    threshold_us = max(SLO_FLOOR_US, SLO_P50_MULT * base_p50)
+    policy = SloPolicy(net=NET, objectives=(
+        SloObjective(kind="latency", quantile=0.99,
+                     threshold_us=threshold_us),
+        SloObjective(kind="error_rate", budget=ERROR_BUDGET,
+                     bad_statuses=("error", "shed", "rejected")),
+    ))
+
+    # offline mode: issue everything at once, closed-loop drain
+    n_off = 512 if fast else 1024
+    ses.telemetry.reset()
+    t0 = time.perf_counter()
+    futs = [client.infer_async(NET, inputs[NET][i % POOL])
+            for i in range(n_off)]
+    outs = [ServeClient.resolve_future(f) for f in futs]
+    offline_wall = time.perf_counter() - t0
+    offline_rps = n_off / offline_wall
+    off_w = _window(ses)
+    for i, o in enumerate(outs):
+        if not np.array_equal(np.asarray(o.output_int8),
+                              refs[NET][i % POOL]):
+            raise RuntimeError("offline phase response mismatch vs "
+                               "Session.run — refusing to report rows")
+
+    # server mode: binary-search the highest Poisson rate meeting the SLO
+    lo, lo_ok = 0.0, False
+    hi = offline_rps * 1.25
+    trajectory = []
+    for it in range(SEARCH_ITERS):
+        rate = (lo + hi) / 2.0
+        w, _, _ = probe(rate, phase_s, seed=100 + it)
+        ok, details = policy.check(w)
+        trajectory.append(
+            f"{rate:.0f}rps:"
+            f"p99={w.quantile(0.99) / 1e3:.1f}ms,"
+            f"err={w.bad_fraction(('error', 'shed', 'rejected')):.3f},"
+            f"{'ok' if ok else 'fail'}")
+        if ok:
+            lo, lo_ok = rate, True
+        else:
+            hi = rate
+    if not lo_ok:
+        raise RuntimeError(
+            f"SLO (p99<={threshold_us / 1e3:.1f}ms, err<={ERROR_BUDGET}) "
+            f"unmeetable even at {lo + (hi - lo) / 2:.0f} rps — "
+            f"serving stack or bound is broken: {trajectory}")
+    max_rps = lo
+
+    # confirmation phase at the found rate: the committed percentiles.
+    # search probes are short, so a rate that squeaks past one can fail a
+    # sustained replay — the confirmation is authoritative: back off until
+    # the longer phase actually holds the SLO
+    conf, conf_recs, conf_wall = probe(max_rps, confirm_s, seed=999)
+    conf_ok, conf_details = policy.check(conf)
+    backoffs = 0
+    while not conf_ok and backoffs < 4:
+        backoffs += 1
+        max_rps *= 0.85
+        conf, conf_recs, conf_wall = probe(max_rps, confirm_s,
+                                           seed=999 + backoffs)
+        conf_ok, conf_details = policy.check(conf)
+    conf_lats = [r.latency_us for r in conf_recs if r.ok]
+
+    exact_all = all(r.exact for r in all_recs if r.ok)
+    resolved_all = all(r.t_done > 0.0 for r in all_recs)
+    if not exact_all:
+        raise RuntimeError("served responses diverged from Session.run — "
+                           "refusing to report rows")
+
+    rows = [
+        {
+            # MLPerf "offline": peak closed-loop throughput, no latency bound
+            "name": "table6_saturation/offline",
+            "us_per_call": 1e6 / offline_rps,
+            "tolerance": 2.5,
+            "derived": (f"offline_rps={offline_rps:.0f} n={n_off} "
+                        f"window_p50_us={off_w.quantile(0.5):.0f} "
+                        f"window_p99_us={off_w.quantile(0.99):.0f}"),
+        },
+        {
+            # MLPerf "server": max sustainable Poisson rate under the SLO.
+            # max_rps_under_slo is gated inverted (lower = regression) with
+            # this row's tolerance; us_per_call mirrors it as a latency-like
+            # quantity so the row also rides the standard gate + --normalize
+            "name": "table6_saturation/max_rps_under_slo",
+            "us_per_call": 1e6 / max_rps,
+            "max_rps_under_slo": max_rps,
+            "tolerance": 2.5,
+            "derived": (f"slo=p99<={threshold_us / 1e3:.1f}ms,"
+                        f"err<={ERROR_BUDGET:.0%} "
+                        f"base_p50_us={base_p50:.0f} "
+                        f"offline_rps={offline_rps:.0f} "
+                        f"probes={SEARCH_ITERS} confirm_backoffs={backoffs} "
+                        f"search=[{' '.join(trajectory)}] "
+                        f"bit_exact={exact_all} all_resolved={resolved_all}"),
+        },
+        {
+            # the confirmation replay's windowed view at max_rps: per-phase
+            # percentiles from the telemetry (oracle) + client-side p99
+            "name": "table6_saturation/server_confirm",
+            "us_per_call": conf.quantile(0.99),
+            "tolerance": 2.5,
+            "derived": (f"rate_rps={max_rps:.0f} n={conf.total} "
+                        f"wall_s={conf_wall:.2f} "
+                        f"window_p50_us={conf.quantile(0.5):.0f} "
+                        f"window_p90_us={conf.quantile(0.9):.0f} "
+                        f"window_p99_us={conf.quantile(0.99):.0f} "
+                        f"client_p99_us={percentile(conf_lats, 99):.0f} "
+                        f"error_rate="
+                        f"{conf.bad_fraction(('error', 'shed', 'rejected')):.4f} "
+                        f"goodput_rps={conf.goodput_rps:.0f} "
+                        f"slo_met={conf_ok}"),
+        },
+    ]
+    ses.close()
+    return rows

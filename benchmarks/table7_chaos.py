@@ -33,10 +33,9 @@ import time
 
 import numpy as np
 
-from benchmarks.table5_serving_frontend import (_drive, _goodput,
-                                                _make_schedule, _percentile,
-                                                _SHAPES, _fast_net, _slow_net,
-                                                POOL)
+from benchmarks.loadgen import drive, goodput, percentile
+from benchmarks.table5_serving_frontend import (_make_schedule, _SHAPES,
+                                                _fast_net, _slow_net, POOL)
 from repro.core.pipeline import CompilerPipeline
 from repro.runtime import (FaultPlan, FaultSpec, FaultyExecutor, Session,
                            SchedulerConfig)
@@ -80,8 +79,8 @@ def _warm_buckets(ses, inputs, max_batch):
 
 def _replay(ses, schedule, inputs, refs):
     """One SLA-honoring trace replay -> (records, wall_s)."""
-    records, wall, _ = _drive(ServeClient(ses), schedule, inputs, refs,
-                              honor_sla=True)
+    records, wall, _ = drive(ServeClient(ses), schedule, inputs, refs,
+                             honor_sla=True)
     return records, wall
 
 
@@ -98,8 +97,8 @@ def _storm_phases(arts, inputs, refs, schedule, reps):
             ses.load(art)
         _warm_buckets(ses, inputs, cfg.max_batch)
         recs, wall = _replay(ses, schedule, inputs, refs)
-        clean_gp.append(_goodput(recs, wall))
-        clean_p99.append(_percentile([r.latency_us for r in recs if r.ok], 99))
+        clean_gp.append(goodput(recs, wall))
+        clean_p99.append(percentile([r.latency_us for r in recs if r.ok], 99))
         hang_count += sum(1 for r in recs if r.t_done == 0.0)
         inexact += sum(1 for r in recs if r.ok and not r.exact)
         ses.close()
@@ -116,8 +115,8 @@ def _storm_phases(arts, inputs, refs, schedule, reps):
             ses.load(art, fault_plan=plan)
         _warm_buckets(ses, inputs, storm_cfg.max_batch)
         recs, wall = _replay(ses, schedule, inputs, refs)
-        storm_gp.append(_goodput(recs, wall))
-        storm_p99.append(_percentile([r.latency_us for r in recs if r.ok], 99))
+        storm_gp.append(goodput(recs, wall))
+        storm_p99.append(percentile([r.latency_us for r in recs if r.ok], 99))
         hang_count += sum(1 for r in recs if r.t_done == 0.0)
         inexact += sum(1 for r in recs if r.ok and not r.exact)
         all_faults += _sum_stats(ses, "faults_injected")
@@ -165,7 +164,7 @@ def _watchdog_phase(art, n_requests):
     timeouts = ses.stats().snapshot()["watchdog_timeouts"]
     faulty.release_hangs()
     ses.close()
-    return {"p99_us": _percentile(lats, 99), "hang_count": unresolved,
+    return {"p99_us": percentile(lats, 99), "hang_count": unresolved,
             "watchdog_timeouts": timeouts, "resolved": len(futs) - unresolved,
             "n": len(futs)}
 

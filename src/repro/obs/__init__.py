@@ -1,4 +1,4 @@
-"""repro.obs — end-to-end request tracing + per-layer kernel profiling.
+"""repro.obs — tracing, profiling, windowed telemetry and SLO monitoring.
 
 Public surface:
 
@@ -6,6 +6,16 @@ Public surface:
     deterministic sampling, a ring-buffered store, Chrome trace-event
     export, per-phase latency histograms (``src/repro/obs/trace.py``).
   * ``TRACE_HEADER`` — the ``X-Repro-Trace-Id`` HTTP contract.
+  * ``Telemetry`` / ``TimeSeriesConfig`` / ``StreamingHistogram`` /
+    ``WindowStats`` — sliding-window serving telemetry: ring-buffered time
+    buckets with bounded-error streaming histograms; windowed
+    p50/p90/p99/error-rate/goodput over 30s/5m/1h
+    (``src/repro/obs/timeseries.py``).
+  * ``SloPolicy`` / ``SloObjective`` / ``SloEngine`` / ``load_policies`` —
+    declarative per-net objectives evaluated by a Google-SRE multi-window
+    burn-rate engine; emits ``slo_burn`` trace events, drives the
+    ``slo_state`` gauge and can trip the circuit breaker
+    (``src/repro/obs/slo.py``).
   * ``profile_layers`` / ``fidelity_report`` / ``format_report`` — the
     measured-vs-modeled calibration workflow over the executors' profiled
     path (``src/repro/obs/report.py``; the fit itself is
@@ -17,11 +27,21 @@ Public surface:
 from repro.obs.trace import (PHASE_BUCKETS_US, RequestTrace, Span,
                              TRACE_HEADER, TraceConfig, Tracer, new_trace_id,
                              status_for_exception, valid_trace_id)
+from repro.obs.timeseries import (BAD_STATUSES, HISTOGRAM_GROWTH,
+                                  LATENCY_BUCKETS_US, NetSeries,
+                                  StreamingHistogram, Telemetry,
+                                  TimeSeriesConfig, WindowStats, snap_up)
+from repro.obs.slo import (STATE_CODES, SloEngine, SloObjective, SloPolicy,
+                           load_policies)
 from repro.obs.report import fidelity_report, format_report, profile_layers
 
 __all__ = [
     "PHASE_BUCKETS_US", "RequestTrace", "Span", "TRACE_HEADER",
     "TraceConfig", "Tracer", "new_trace_id", "status_for_exception",
     "valid_trace_id",
+    "BAD_STATUSES", "HISTOGRAM_GROWTH", "LATENCY_BUCKETS_US", "NetSeries",
+    "StreamingHistogram", "Telemetry", "TimeSeriesConfig", "WindowStats",
+    "snap_up",
+    "STATE_CODES", "SloEngine", "SloObjective", "SloPolicy", "load_policies",
     "fidelity_report", "format_report", "profile_layers",
 ]

@@ -1,0 +1,365 @@
+"""Declarative SLOs and the multi-window burn-rate engine.
+
+An :class:`SloPolicy` declares what "good service" means for one net (or
+``"*"`` for all): latency-percentile objectives ("p99 <= 15ms"), error-rate
+objectives ("< 1% of requests error or shed") and goodput floors ("> 50
+good req/s").  The :class:`SloEngine` evaluates policies against the
+windowed telemetry (``repro.obs.timeseries``) Google-SRE style: instead of
+alerting on a raw threshold, it computes each objective's **burn rate** —
+how fast the error budget is being consumed, ``bad_fraction / budget`` —
+over *paired* windows, and alerts only when both windows of a pair agree:
+
+  * **breach**: burn >= ``fast_burn`` (default 14x) on BOTH the two
+    shortest windows (30s + 5m by default) — a fast, sustained burn;
+    paging-grade.
+  * **warning**: burn >= ``slow_burn`` (default 2x) on BOTH the two
+    longest windows (5m + 1h) — a slow leak that exhausts the budget
+    well before the period ends; ticket-grade.
+
+The long window makes the alert *proportional* (a one-request blip cannot
+fire it); the short window makes it *reset fast* (the alert clears soon
+after the cause does, instead of lingering for the long window's span).
+State transitions emit ``slo_burn`` instants into the PR 9 trace store,
+flip the per-net ``slo_state`` gauge surfaced on ``/metrics`` / ``/healthz``
+/ ``GET /v1/slo``, and — when the policy opts in — trip the PR 8 circuit
+breaker open so the fallback/shedding machinery reacts to the breach.
+
+Policies load from JSON (``repro.serve --slo slo.json``)::
+
+    {"policies": [{
+        "net": "lenet5",              // or "*"
+        "objectives": [
+            {"kind": "latency", "quantile": 0.99, "threshold_ms": 15},
+            {"kind": "error_rate", "budget": 0.01},
+            {"kind": "goodput", "min_rps": 50}
+        ],
+        "fast_burn": 14, "slow_burn": 2,
+        "open_circuit_on_breach": false
+    }]}
+
+Stdlib only; deterministic under an injected telemetry clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.obs.timeseries import (BAD_STATUSES, Telemetry, WindowStats,
+                                  snap_up)
+
+STATES = ("ok", "warning", "breach")
+STATE_CODES = {s: i for i, s in enumerate(STATES)}  # /metrics gauge values
+
+
+@dataclasses.dataclass(frozen=True)
+class SloObjective:
+    """One measurable objective.  ``kind``:
+
+    * ``latency``  — at most ``budget`` of requests slower than
+      ``threshold_us`` (i.e. "p<quantile> <= threshold"; ``budget``
+      defaults to ``1 - quantile``).  The threshold is snapped up to a
+      histogram boundary at construction so the windowed bad-fraction is
+      exact (see ``timeseries.snap_up``).
+    * ``error_rate`` — at most ``budget`` of requests end in a
+      ``bad_statuses`` terminal state.
+    * ``goodput`` — at least ``min_rps`` good requests per second; burn is
+      ``min_rps / observed`` so 2x means serving half the floor.
+    """
+    kind: str
+    quantile: float = 0.99              # latency
+    threshold_us: float = 0.0           # latency
+    budget: float = 0.0                 # latency (default 1-quantile), error
+    min_rps: float = 0.0                # goodput
+    bad_statuses: Tuple[str, ...] = BAD_STATUSES
+
+    def __post_init__(self):
+        if self.kind not in ("latency", "error_rate", "goodput"):
+            raise ValueError(f"unknown objective kind {self.kind!r}")
+        if self.kind == "latency":
+            if not 0.0 < self.quantile < 1.0:
+                raise ValueError(f"latency quantile must be in (0,1), "
+                                 f"got {self.quantile}")
+            if self.threshold_us <= 0:
+                raise ValueError("latency objective needs threshold_us > 0")
+            object.__setattr__(self, "threshold_us",
+                               snap_up(self.threshold_us))
+            if self.budget <= 0.0:
+                object.__setattr__(self, "budget", 1.0 - self.quantile)
+        elif self.kind == "error_rate":
+            if self.budget <= 0.0:
+                object.__setattr__(self, "budget", 0.01)
+        elif self.kind == "goodput" and self.min_rps <= 0:
+            raise ValueError("goodput objective needs min_rps > 0")
+
+    # -- evaluation ---------------------------------------------------------
+    def burn(self, w: WindowStats) -> float:
+        """Error-budget burn rate over one window (1.0 = consuming exactly
+        the budget; 0.0 when the window holds no signal)."""
+        if self.kind == "latency":
+            if w.hist.count == 0:
+                return 0.0
+            bad = w.hist.count_over(self.threshold_us) / w.hist.count
+            return bad / self.budget
+        if self.kind == "error_rate":
+            if w.total == 0:
+                return 0.0
+            return w.bad_fraction(self.bad_statuses) / self.budget
+        # goodput: no traffic at all is "no data", not an outage — the
+        # error-rate/latency objectives own in-traffic failure modes
+        if w.total == 0 or w.covered_s <= 0:
+            return 0.0
+        gp = w.goodput_rps
+        return self.min_rps / gp if gp > 0 else float("inf")
+
+    def value(self, w: WindowStats) -> float:
+        """The observed quantity the objective constrains (for reporting)."""
+        if self.kind == "latency":
+            return w.quantile(self.quantile)
+        if self.kind == "error_rate":
+            return w.bad_fraction(self.bad_statuses)
+        return w.goodput_rps
+
+    def compliant(self, w: WindowStats) -> bool:
+        """Direct point-in-window compliance (burn <= 1) — what the table-6
+        saturation search gates probes on (alerting uses burn pairs)."""
+        return self.burn(w) <= 1.0
+
+    def describe(self) -> str:
+        if self.kind == "latency":
+            return (f"p{self.quantile * 100:g} <= "
+                    f"{self.threshold_us / 1e3:.3g}ms")
+        if self.kind == "error_rate":
+            return (f"{'|'.join(self.bad_statuses)} rate <= "
+                    f"{self.budget:.2%}")
+        return f"goodput >= {self.min_rps:g} req/s"
+
+    def to_dict(self) -> Dict:
+        d = {"kind": self.kind}
+        if self.kind == "latency":
+            d.update(quantile=self.quantile, threshold_us=self.threshold_us,
+                     budget=self.budget)
+        elif self.kind == "error_rate":
+            d.update(budget=self.budget, bad_statuses=list(self.bad_statuses))
+        else:
+            d.update(min_rps=self.min_rps)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "SloObjective":
+        d = dict(d)
+        if "threshold_ms" in d:            # JSON convenience spelling
+            d["threshold_us"] = float(d.pop("threshold_ms")) * 1e3
+        if "bad_statuses" in d:
+            d["bad_statuses"] = tuple(d["bad_statuses"])
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown objective field(s): {sorted(unknown)}")
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class SloPolicy:
+    """Objectives plus alerting thresholds for one net (``"*"`` = default
+    policy for any net without an exact match)."""
+    net: str = "*"
+    objectives: Tuple[SloObjective, ...] = ()
+    fast_burn: float = 14.0     # breach: both short windows burning this hot
+    slow_burn: float = 2.0      # warning: both long windows burning this hot
+    min_samples: int = 10       # per-window floor before it can vote
+    open_circuit_on_breach: bool = False
+
+    def __post_init__(self):
+        if not self.objectives:
+            raise ValueError(f"policy for {self.net!r} declares no objectives")
+        object.__setattr__(self, "objectives", tuple(self.objectives))
+        if self.slow_burn > self.fast_burn:
+            raise ValueError("slow_burn must be <= fast_burn")
+
+    def check(self, w: WindowStats) -> Tuple[bool, List[Dict]]:
+        """Direct compliance of one window against every objective — the
+        saturation harness's per-probe oracle."""
+        details = [{"objective": o.describe(), "kind": o.kind,
+                    "value": o.value(w), "burn": o.burn(w),
+                    "ok": o.compliant(w)} for o in self.objectives]
+        return all(d["ok"] for d in details), details
+
+    def to_dict(self) -> Dict:
+        return {"net": self.net,
+                "objectives": [o.to_dict() for o in self.objectives],
+                "fast_burn": self.fast_burn, "slow_burn": self.slow_burn,
+                "min_samples": self.min_samples,
+                "open_circuit_on_breach": self.open_circuit_on_breach}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "SloPolicy":
+        d = dict(d)
+        d["objectives"] = tuple(SloObjective.from_dict(o)
+                                for o in d.get("objectives", ()))
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown policy field(s): {sorted(unknown)}")
+        return cls(**d)
+
+
+def load_policies(path) -> Tuple[SloPolicy, ...]:
+    """Load ``{"policies": [...]}`` (or a bare list) from a JSON file."""
+    doc = json.loads(pathlib.Path(path).read_text())
+    items = doc.get("policies", doc) if isinstance(doc, dict) else doc
+    if not isinstance(items, list) or not items:
+        raise ValueError(f"{path}: expected a non-empty policy list")
+    return tuple(SloPolicy.from_dict(p) for p in items)
+
+
+class SloEngine:
+    """Evaluates policies against the telemetry windows; owns per-net
+    state (ok/warning/breach), emits ``slo_burn`` trace instants on every
+    transition, and optionally trips the circuit breaker on breach.
+
+    ``evaluate()`` is cheap (a few window merges per net) and idempotent;
+    call it ad hoc (every ``/metrics`` scrape and ``/v1/slo`` hit does) or
+    let ``start(period_s)`` run it on a daemon thread.  ``breaker`` is a
+    ``callable(net_name)`` that force-opens that net's circuit.
+    """
+
+    def __init__(self, policies: Sequence[SloPolicy], telemetry: Telemetry,
+                 tracer=None, breaker: Optional[Callable[[str], None]] = None):
+        self.policies = tuple(policies)
+        if not self.policies:
+            raise ValueError("SloEngine needs at least one policy")
+        self.telemetry = telemetry
+        self.tracer = tracer
+        self.breaker = breaker
+        ws = telemetry.config.windows
+        self.fast_windows = ws[:2]           # e.g. (30s, 5m)
+        self.slow_windows = ws[-2:]          # e.g. (5m, 1h)
+        self._lock = threading.Lock()
+        self._states: Dict[str, str] = {}
+        self._detail: Dict[str, Dict] = {}
+        self._stop: Optional[threading.Event] = None
+        self._thread: Optional[threading.Thread] = None
+
+    def policy_for(self, net: str) -> Optional[SloPolicy]:
+        """Exact-name policy wins over a ``"*"`` wildcard."""
+        wild = None
+        for p in self.policies:
+            if p.net == net:
+                return p
+            if p.net == "*":
+                wild = p
+        return wild
+
+    def _nets(self) -> List[str]:
+        nets = set(self.telemetry.names())
+        nets.update(p.net for p in self.policies if p.net != "*")
+        return sorted(n for n in nets if self.policy_for(n) is not None)
+
+    def evaluate(self, now: Optional[float] = None) -> Dict[str, str]:
+        """One evaluation pass; returns ``{net: state}`` and updates the
+        published detail.  Thread-safe; transitions fire side effects."""
+        now = self.telemetry.clock() if now is None else now
+        results: Dict[str, str] = {}
+        details: Dict[str, Dict] = {}
+        transitions = []                     # fire side effects outside lock
+        with self._lock:
+            for net in self._nets():
+                policy = self.policy_for(net)
+                windows = sorted(set(self.fast_windows + self.slow_windows))
+                stats = {w: self.telemetry.window(net, w, now=now)
+                         for w in windows}
+                state, objs = "ok", []
+                for obj in policy.objectives:
+                    burns = {w: obj.burn(stats[w]) for w in windows}
+                    voting = {w: stats[w].total >= policy.min_samples
+                              for w in windows}
+                    fast = all(voting[w] and burns[w] >= policy.fast_burn
+                               for w in self.fast_windows)
+                    slow = all(voting[w] and burns[w] >= policy.slow_burn
+                               for w in self.slow_windows)
+                    ostate = ("breach" if fast else
+                              "warning" if slow else "ok")
+                    if STATE_CODES[ostate] > STATE_CODES[state]:
+                        state = ostate
+                    objs.append({
+                        "objective": obj.describe(), "kind": obj.kind,
+                        "state": ostate,
+                        "burn": {f"{w:g}s": round(burns[w], 4)
+                                 for w in windows},
+                        "value": {f"{w:g}s": obj.value(stats[w])
+                                  for w in windows},
+                    })
+                prev = self._states.get(net, "ok")
+                self._states[net] = state
+                details[net] = {
+                    "state": state, "objectives": objs,
+                    "windows": {f"{w:g}s": stats[w].summary()
+                                for w in windows},
+                }
+                results[net] = state
+                if state != prev:
+                    worst = max((o for o in objs
+                                 if o["state"] == state),
+                                key=lambda o: max(o["burn"].values()),
+                                default=objs[0])
+                    transitions.append((net, prev, state, policy, worst))
+            self._detail = details
+        for net, prev, state, policy, worst in transitions:
+            if self.tracer is not None:
+                self.tracer.note_global(
+                    "slo_burn", net=net, state=state, prev=prev,
+                    objective=worst["objective"],
+                    burn=max(worst["burn"].values()))
+            if (state == "breach" and policy.open_circuit_on_breach
+                    and self.breaker is not None):
+                self.breaker(net)
+        return results
+
+    def states(self) -> Dict[str, str]:
+        with self._lock:
+            return dict(self._states)
+
+    def state(self, net: str) -> str:
+        with self._lock:
+            return self._states.get(net, "ok")
+
+    def snapshot(self) -> Dict:
+        """The ``GET /v1/slo`` document (call ``evaluate()`` first for a
+        fresh view)."""
+        with self._lock:
+            return {
+                "windows": [f"{w:g}s" for w in self.telemetry.config.windows],
+                "burn_pairs": {
+                    "fast": [f"{w:g}s" for w in self.fast_windows],
+                    "slow": [f"{w:g}s" for w in self.slow_windows]},
+                "policies": [p.to_dict() for p in self.policies],
+                "nets": dict(self._detail),
+            }
+
+    # -- background evaluator -----------------------------------------------
+    def start(self, period_s: float = 5.0) -> None:
+        if self._thread is not None:
+            return
+        self._stop = threading.Event()
+
+        def loop():
+            while not self._stop.wait(period_s):
+                try:
+                    self.evaluate()
+                except Exception:            # pragma: no cover - paranoia
+                    pass
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="repro-slo")
+        self._thread.start()
+
+    def close(self) -> None:
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join(timeout=2.0)
+            self._thread = None
+            self._stop = None

@@ -1,0 +1,357 @@
+"""Sliding-window serving telemetry: ring-buffered time buckets holding
+counters and streaming latency histograms.
+
+Everything the cumulative-since-boot stats (``NetStats``, ``/metrics``
+counters) cannot answer lives here: *windowed* p50/p90/p99, error rate and
+goodput over the trailing 30s/5m/1h, so a ten-minute soak can see a
+thirty-second p99 regression.  The scheduler feeds one ``record`` per
+resolved request (ok / degraded / error / shed / rejected) and the SLO
+burn-rate engine (``repro.obs.slo``), ``/metrics`` and the table-6
+saturation harness query windows out of it.
+
+Design:
+
+  * **Fixed-boundary streaming histograms** (:class:`StreamingHistogram`):
+    geometric bucket boundaries (``HISTOGRAM_GROWTH`` = 1.35x per bucket,
+    1us .. ~66s), so a quantile estimate is the upper edge of the bucket
+    holding the true rank — never below the true sample, never more than
+    one growth factor above it.  Bounded error, O(1) memory, O(1) insert,
+    mergeable across time buckets.
+  * **Ring-buffered time buckets** (:class:`NetSeries`): wall time is
+    quantised into ``bucket_s`` epochs; each epoch owns one ring slot with
+    its own counters + histogram.  A slot is lazily reset when its epoch
+    comes around again, and every slot remembers which epoch wrote it — a
+    stale slot (clock jumped forward past it) is skipped by queries and
+    recycled by writes, so arbitrary forward clock jumps stay correct.
+  * **Injectable clock**: ``Telemetry(clock=...)`` — tests and simulations
+    drive windows deterministically; production uses ``time.monotonic``.
+
+The hot path (one ``record`` per request, on the dispatcher thread) is a
+bisect + a few integer increments under a per-net lock.  Queries merge at
+most ``ceil(window/bucket_s)`` buckets.  Stdlib + numpy only.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+# geometric latency bucket boundaries in microseconds: 1.35x per bucket from
+# 1us to ~66s.  A recorded quantile's estimate sits in [true, true * 1.35]
+# (values below the first boundary report the first boundary; values past
+# the last land in one overflow bucket reporting last * 1.35).
+HISTOGRAM_GROWTH = 1.35
+LATENCY_BUCKETS_US: Tuple[float, ...] = tuple(
+    HISTOGRAM_GROWTH ** i for i in range(61))
+
+# terminal request statuses the scheduler records (mirrors the trace
+# statuses; "cancelled" shutdown races are deliberately not recorded — a
+# closing server's cancellations are not service quality signal)
+STATUSES = ("ok", "degraded", "error", "shed", "rejected")
+
+# statuses that count against an availability/error-rate objective by
+# default: backend faults and deadline sheds.  429 admission rejections are
+# opt-in per objective (the table-6 harness counts them; a deliberately
+# overloaded soak may not want to).
+BAD_STATUSES = ("error", "shed")
+
+
+def snap_up(us: float) -> float:
+    """Smallest histogram boundary >= ``us`` — normalising a latency
+    threshold to a boundary makes ``count_over`` exact at that threshold."""
+    i = bisect.bisect_left(LATENCY_BUCKETS_US, us)
+    return LATENCY_BUCKETS_US[min(i, len(LATENCY_BUCKETS_US) - 1)]
+
+
+class StreamingHistogram:
+    """Fixed-boundary latency histogram with bounded quantile error.
+
+    ``len(LATENCY_BUCKETS_US) + 1`` integer bins (the last is overflow);
+    inserts are one bisect; ``quantile`` walks cumulative counts to the
+    requested rank and reports that bucket's upper edge, so the estimate is
+    >= the true rank sample and <= ``HISTOGRAM_GROWTH`` times it (for
+    samples inside the boundary range).  Not thread-safe on its own — the
+    owning :class:`NetSeries` serialises access.
+    """
+
+    __slots__ = ("bins", "count", "sum_us")
+
+    def __init__(self):
+        self.bins: List[int] = [0] * (len(LATENCY_BUCKETS_US) + 1)
+        self.count = 0
+        self.sum_us = 0.0
+
+    def add(self, us: float) -> None:
+        self.bins[bisect.bisect_left(LATENCY_BUCKETS_US, us)] += 1
+        self.count += 1
+        self.sum_us += us
+
+    def merge(self, other: "StreamingHistogram") -> None:
+        for i, n in enumerate(other.bins):
+            self.bins[i] += n
+        self.count += other.count
+        self.sum_us += other.sum_us
+
+    def quantile(self, q: float) -> float:
+        """Upper edge of the bucket holding the rank-``ceil(q*count)``
+        sample; 0.0 when empty.  ``q`` in (0, 1]."""
+        if not 0.0 < q <= 1.0:
+            raise ValueError(f"quantile must be in (0, 1], got {q}")
+        if self.count == 0:
+            return 0.0
+        rank = max(1, math.ceil(q * self.count))
+        cum = 0
+        for i, n in enumerate(self.bins):
+            cum += n
+            if cum >= rank:
+                if i < len(LATENCY_BUCKETS_US):
+                    return LATENCY_BUCKETS_US[i]
+                return LATENCY_BUCKETS_US[-1] * HISTOGRAM_GROWTH  # overflow
+        return LATENCY_BUCKETS_US[-1] * HISTOGRAM_GROWTH  # pragma: no cover
+
+    def count_over(self, threshold_us: float) -> int:
+        """Samples recorded in buckets whose lower edge >= ``threshold_us``
+        — exact "samples > threshold" when the threshold is a boundary
+        (see :func:`snap_up`), conservative (undercount by at most one
+        bucket's worth) otherwise."""
+        i = bisect.bisect_left(LATENCY_BUCKETS_US, threshold_us) + 1
+        return sum(self.bins[i:])
+
+    def cumulative(self) -> List[Tuple[float, int]]:
+        """Prometheus-histogram shape: ``[(le, cumulative_count), ...]``
+        ending at ``(+Inf, count)``."""
+        out, cum = [], 0
+        for le, n in zip(LATENCY_BUCKETS_US + (float("inf"),), self.bins):
+            cum += n
+            out.append((le, cum))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeSeriesConfig:
+    """Window geometry.  ``windows`` must be ascending; the ring holds
+    ``ceil(windows[-1] / bucket_s) + 1`` buckets (the +1 keeps the current
+    partial bucket from evicting the oldest full one).  The default
+    30s/5m/1h triple is the Google-SRE multi-window ladder the burn-rate
+    engine pairs up (fast: 30s+5m, slow: 5m+1h)."""
+    bucket_s: float = 5.0
+    windows: Tuple[float, ...] = (30.0, 300.0, 3600.0)
+
+    def __post_init__(self):
+        if self.bucket_s <= 0:
+            raise ValueError(f"bucket_s must be > 0, got {self.bucket_s}")
+        ws = tuple(float(w) for w in self.windows)
+        if len(ws) < 2 or any(a >= b for a, b in zip(ws, ws[1:])):
+            raise ValueError(f"windows must be >= 2 ascending durations, "
+                             f"got {self.windows!r}")
+        if ws[0] < self.bucket_s:
+            raise ValueError(f"smallest window {ws[0]}s is finer than the "
+                             f"bucket ({self.bucket_s}s)")
+        object.__setattr__(self, "windows", ws)
+
+    @property
+    def ring_len(self) -> int:
+        return int(math.ceil(self.windows[-1] / self.bucket_s)) + 1
+
+
+class WindowStats:
+    """One window's merged view: status counters, goodput numerator and the
+    merged latency histogram, plus the covered wall time for rates."""
+
+    __slots__ = ("window_s", "covered_s", "counts", "good", "hist")
+
+    def __init__(self, window_s: float, covered_s: float,
+                 counts: Dict[str, int], good: int, hist: StreamingHistogram):
+        self.window_s = window_s
+        self.covered_s = covered_s          # wall time actually observed
+        self.counts = counts                # per-STATUSES request counts
+        self.good = good                    # ok/degraded within deadline
+        self.hist = hist                    # ok/degraded latencies only
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    def quantile(self, q: float) -> float:
+        return self.hist.quantile(q)
+
+    def bad_fraction(self, statuses: Tuple[str, ...] = BAD_STATUSES) -> float:
+        total = self.total
+        if total == 0:
+            return 0.0
+        return sum(self.counts.get(s, 0) for s in statuses) / total
+
+    @property
+    def error_rate(self) -> float:
+        return self.bad_fraction()
+
+    @property
+    def rps(self) -> float:
+        return self.total / self.covered_s if self.covered_s > 0 else 0.0
+
+    @property
+    def goodput_rps(self) -> float:
+        """Requests completed ok (and within their deadline, when they
+        carried one) per second of covered wall time."""
+        return self.good / self.covered_s if self.covered_s > 0 else 0.0
+
+    @property
+    def mean_us(self) -> float:
+        return self.hist.sum_us / self.hist.count if self.hist.count else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        """The windowed scalar set ``/v1/slo`` and the benchmarks report."""
+        return {
+            "total": self.total, "good": self.good,
+            "p50_us": self.quantile(0.50), "p90_us": self.quantile(0.90),
+            "p99_us": self.quantile(0.99), "mean_us": self.mean_us,
+            "error_rate": self.error_rate, "rps": self.rps,
+            "goodput_rps": self.goodput_rps,
+            **{s: self.counts.get(s, 0) for s in STATUSES},
+        }
+
+
+class _Bucket:
+    __slots__ = ("epoch", "counts", "good", "hist")
+
+    def __init__(self):
+        self.reset(-1)
+
+    def reset(self, epoch: int) -> None:
+        self.epoch = epoch
+        self.counts = {s: 0 for s in STATUSES}
+        self.good = 0
+        self.hist = StreamingHistogram()
+
+
+class NetSeries:
+    """One network's ring of time buckets plus since-reset totals."""
+
+    def __init__(self, config: TimeSeriesConfig, clock):
+        self.config = config
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._ring = [_Bucket() for _ in range(config.ring_len)]
+        self.total_hist = StreamingHistogram()   # since boot/reset, unwindowed
+        self.total_counts = {s: 0 for s in STATUSES}
+        self.t_first: Optional[float] = None     # first record since reset
+
+    def _bucket(self, t: float) -> _Bucket:
+        epoch = int(t // self.config.bucket_s)
+        b = self._ring[epoch % len(self._ring)]
+        if b.epoch != epoch:        # recycled slot (or clock jumped past it)
+            b.reset(epoch)
+        return b
+
+    def record(self, latency_us: float, status: str = "ok",
+               good: Optional[bool] = None,
+               t: Optional[float] = None) -> None:
+        if status not in self.total_counts:
+            raise ValueError(f"unknown status {status!r}; known: {STATUSES}")
+        completed = status in ("ok", "degraded")
+        if good is None:
+            good = completed
+        t = self._clock() if t is None else t
+        with self._lock:
+            if self.t_first is None:
+                self.t_first = t
+            b = self._bucket(t)
+            b.counts[status] += 1
+            self.total_counts[status] += 1
+            if good:
+                b.good += 1
+            if completed:
+                b.hist.add(latency_us)
+                self.total_hist.add(latency_us)
+
+    def window(self, window_s: float, now: Optional[float] = None) -> WindowStats:
+        """Merged stats over the trailing ``window_s`` (bucket-granular: the
+        oldest included bucket may start up to ``bucket_s`` before
+        ``now - window_s``)."""
+        now = self._clock() if now is None else now
+        bs = self.config.bucket_s
+        k = min(len(self._ring), int(math.ceil(window_s / bs)))
+        e_now = int(now // bs)
+        hist = StreamingHistogram()
+        counts = {s: 0 for s in STATUSES}
+        good = 0
+        with self._lock:
+            t_first = self.t_first
+            for e in range(e_now - k + 1, e_now + 1):
+                b = self._ring[e % len(self._ring)]
+                if b.epoch != e:                 # never written or stale
+                    continue
+                for s, n in b.counts.items():
+                    counts[s] += n
+                good += b.good
+                hist.merge(b.hist)
+        covered = 0.0
+        if t_first is not None:
+            covered = max(0.0, min(float(window_s), now - t_first))
+        return WindowStats(float(window_s), covered, counts, good, hist)
+
+    def totals(self) -> Tuple[List[Tuple[float, int]], float, int,
+                              Dict[str, int]]:
+        """Since-reset cumulative histogram (Prometheus shape) + counters."""
+        with self._lock:
+            return (self.total_hist.cumulative(), self.total_hist.sum_us,
+                    self.total_hist.count, dict(self.total_counts))
+
+    def reset(self) -> None:
+        with self._lock:
+            for b in self._ring:
+                b.reset(-1)
+            self.total_hist = StreamingHistogram()
+            self.total_counts = {s: 0 for s in STATUSES}
+            self.t_first = None
+
+
+class Telemetry:
+    """Per-net :class:`NetSeries` registry — one per ``Session``.
+
+    The scheduler records every resolved request here (all requests, not
+    just the tracer's sampled subset); the SLO engine, ``/metrics`` and the
+    saturation harness read windows out.  ``clock`` defaults to
+    ``time.monotonic`` and is injectable for deterministic tests.
+    """
+
+    def __init__(self, config: Optional[TimeSeriesConfig] = None,
+                 clock=time.monotonic):
+        self.config = config or TimeSeriesConfig()
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._series: Dict[str, NetSeries] = {}
+
+    def series(self, net: str) -> NetSeries:
+        with self._lock:
+            s = self._series.get(net)
+            if s is None:
+                s = self._series[net] = NetSeries(self.config, self.clock)
+            return s
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._series)
+
+    def record(self, net: str, latency_us: float, status: str = "ok",
+               good: Optional[bool] = None, t: Optional[float] = None) -> None:
+        self.series(net).record(latency_us, status=status, good=good, t=t)
+
+    def window(self, net: str, window_s: float,
+               now: Optional[float] = None) -> WindowStats:
+        return self.series(net).window(window_s, now=now)
+
+    def reset(self, net: Optional[str] = None) -> None:
+        """Clear recorded samples (one net's, or every net's) — phase
+        isolation for benchmarks/tests; production never needs it."""
+        with self._lock:
+            targets = ([self._series[net]] if net is not None
+                       and net in self._series
+                       else list(self._series.values()) if net is None
+                       else [])
+        for s in targets:
+            s.reset()

@@ -252,15 +252,23 @@ class Tracer:
             self.finish(trace, status="error", error="finish_future")
 
     # -- fault-plane events -------------------------------------------------
-    def note_circuit(self, net: str, state: str) -> None:
-        """Record a circuit-breaker transition (scheduler-global, not tied to
-        any single request's trace)."""
+    def note_global(self, name: str, **args) -> None:
+        """Record a session-wide instant event (not tied to any single
+        request's trace): circuit transitions, SLO burn alerts.  Rendered as
+        a process-scoped instant in the Chrome export."""
         if not self.config.enabled:
             return
         with self._lock:
-            self._global_events.append(
-                ("circuit_" + state, time.perf_counter(), {"net": net}))
+            self._global_events.append((name, time.perf_counter(), args))
             del self._global_events[:-256]
+
+    def note_circuit(self, net: str, state: str) -> None:
+        """Record a circuit-breaker transition."""
+        self.note_global("circuit_" + state, net=net)
+
+    def global_events(self) -> List[Tuple[str, float, Dict]]:
+        with self._lock:
+            return list(self._global_events)
 
     # -- export -------------------------------------------------------------
     def traces(self, limit: Optional[int] = None) -> List[RequestTrace]:

@@ -421,6 +421,15 @@ class _NetDispatcher:
         self._model_ms: Optional[float] = None   # cost-model batch-1 ms
         self._model_ms_known = False
 
+    def _tel_record(self, latency_us: float, status: str,
+                    good: Optional[bool] = None) -> None:
+        """Feed the windowed telemetry (every request, unlike the tracer's
+        sampled subset).  The telemetry lock is a leaf: safe under _cond."""
+        tel = getattr(self.scheduler, "telemetry", None)
+        if tel is not None:
+            tel.record(getattr(self.net, "name", "?"), latency_us,
+                       status=status, good=good)
+
     # -- client side ---------------------------------------------------------
     def enqueue(self, reqs: List[_Request]) -> None:
         """Admit ``reqs`` (all-or-nothing) and wake the dispatcher if needed.
@@ -436,12 +445,16 @@ class _NetDispatcher:
                           - time.perf_counter())
                 if wait_s > 0:
                     self.net.stats.note_circuit_reject(len(reqs))
+                    for _ in reqs:
+                        self._tel_record(0.0, "rejected", good=False)
                     raise CircuitOpenError(getattr(self.net, "name", "?"),
                                            wait_s)
                 self._set_breaker(_HALF_OPEN)
             bound = self.config.max_queue
             if bound is not None and len(self._heap) + len(reqs) > bound:
                 self.net.stats.note_reject(len(reqs))
+                for _ in reqs:
+                    self._tel_record(0.0, "rejected", good=False)
                 raise QueueFullError(getattr(self.net, "name", "?"),
                                      len(self._heap), bound)
             if self._thread is None:
@@ -539,6 +552,7 @@ class _NetDispatcher:
 
     def _shed(self, req: _Request, now: float) -> None:
         self.net.stats.note_shed(1)
+        self._tel_record((now - req.t_submit) * 1e6, "shed", good=False)
         if req.trace is not None:
             req.trace.add_span("queue", req.t_submit, now)
             req.trace.event("shed", deadline_us=req.deadline_us,
@@ -637,6 +651,16 @@ class _NetDispatcher:
         tracer = getattr(self.scheduler, "tracer", None)
         if tracer is not None:      # tracer lock takes no scheduler locks
             tracer.note_circuit(getattr(self.net, "name", "?"), state)
+
+    def force_open(self) -> None:
+        """Externally trip the breaker open (the SLO engine's breach
+        trigger).  Identical downstream behavior to a failure-driven open:
+        fallback routing (or fast sheds) while open, half-open probe after
+        ``breaker_reset_s`` — so the breaker self-heals, and a persisting
+        breach simply re-trips it on the next evaluation."""
+        with self._cond:
+            if self._breaker != _OPEN:
+                self._set_breaker(_OPEN)
 
     def _route(self) -> tuple:
         """``(executor, degraded)`` for the next launch attempt.  While the
@@ -821,7 +845,10 @@ class _NetDispatcher:
                     continue
                 err = BackendFaultError(getattr(net, "name", "?"), attempt, e)
                 err.__cause__ = e
+                now = time.perf_counter()
                 for r in batch:
+                    self._tel_record((now - r.t_submit) * 1e6, "error",
+                                     good=False)
                     _resolve_future(r.future, r.future.set_exception, err)
                 return
             self._note_launch_success(degraded)
@@ -833,6 +860,11 @@ class _NetDispatcher:
                 compiles=compiles, degraded=k if degraded else 0)
             if degraded:
                 outs = [dataclasses.replace(o, degraded=True) for o in outs]
+            for r in batch:
+                lat_us = (done - r.t_submit) * 1e6
+                self._tel_record(lat_us, "degraded" if degraded else "ok",
+                                 good=(not r.deadline_us
+                                       or lat_us <= r.deadline_us))
             for r, out in zip(batch, outs):
                 if r.trace is not None:
                     # recorded before set_result: resolving the future runs
@@ -867,9 +899,11 @@ class Scheduler:
     ``close`` — plus per-request ``priority`` and ``deadline_us``.
     """
 
-    def __init__(self, config: Optional[SchedulerConfig] = None, tracer=None):
+    def __init__(self, config: Optional[SchedulerConfig] = None, tracer=None,
+                 telemetry=None):
         self.config = config or SchedulerConfig()
         self.tracer = tracer            # repro.obs Tracer, or None (untraced)
+        self.telemetry = telemetry      # repro.obs Telemetry, or None
         self._lock = threading.Lock()
         self._dispatchers: Dict[int, _NetDispatcher] = {}
         self._retired: Dict[int, object] = {}   # unloaded nets, by id
@@ -964,6 +998,17 @@ class Scheduler:
         with self._lock:
             d = self._dispatchers.get(id(net))
         return d.circuit_state() if d is not None else _CLOSED
+
+    def trip_circuit(self, net) -> bool:
+        """Force the net's breaker open (the SLO engine's breach trigger).
+        Returns False for a net with no dispatcher yet — no traffic means
+        nothing to protect."""
+        with self._lock:
+            d = self._dispatchers.get(id(net))
+        if d is None:
+            return False
+        d.force_open()
+        return True
 
     def close(self, drain: bool = False) -> None:
         """Stop every dispatcher.  ``drain=False`` (default): queued requests

@@ -41,6 +41,7 @@ import numpy as np
 from repro.core.executor import ExecResult
 from repro.core.pipeline import Artifacts
 from repro.obs.trace import TraceConfig, Tracer
+from repro.obs.timeseries import Telemetry
 from repro.runtime import registry
 from repro.runtime.scheduler import Scheduler, SchedulerConfig
 
@@ -224,7 +225,7 @@ class Session:
     def __init__(self, artifacts: Optional[Artifacts] = None,
                  backend: str = "baremetal", name: Optional[str] = None,
                  scheduler: Optional[SchedulerConfig] = None,
-                 warmup: bool = False, trace=None):
+                 warmup: bool = False, trace=None, telemetry=None):
         self._nets: Dict[str, _Net] = {}
         self._order: List[str] = []
         self.default_backend = backend
@@ -235,7 +236,15 @@ class Session:
         self.tracer = trace if isinstance(trace, Tracer) \
             else Tracer(trace if isinstance(trace, TraceConfig)
                         else TraceConfig())
-        self._scheduler = Scheduler(scheduler, tracer=self.tracer)
+        # ``telemetry``: a Telemetry (or TimeSeriesConfig) — every Session
+        # gets one; the scheduler records every resolved request into its
+        # sliding windows (a bisect + counters per request), feeding the
+        # windowed /metrics series and the SLO burn-rate engine
+        self.telemetry = telemetry if isinstance(telemetry, Telemetry) \
+            else Telemetry(telemetry)
+        self.slo = None                     # SloEngine via attach_slo()
+        self._scheduler = Scheduler(scheduler, tracer=self.tracer,
+                                    telemetry=self.telemetry)
         # ``warmup=True``: every net precompiles its bucket ladder at load
         # time (see ``warmup()``), so no first request ever compile-stalls
         self._warmup_on_load = bool(warmup)
@@ -336,10 +345,36 @@ class Session:
         self._order.remove(name)
         self._scheduler.close_net(net)
 
+    def attach_slo(self, policies, start: bool = False,
+                   period_s: float = 5.0):
+        """Attach an SLO burn-rate engine (``repro.obs.slo``) over this
+        session's telemetry.  ``policies`` is a sequence of ``SloPolicy``
+        (e.g. from ``load_policies(path)``).  ``start=True`` runs the
+        evaluator on a daemon thread every ``period_s``; either way
+        ``/metrics`` and ``/v1/slo`` evaluate on demand.  A policy with
+        ``open_circuit_on_breach`` trips the breached net's circuit breaker
+        (same downstream behavior as failure-driven opens: fallback routing
+        or fast sheds, then a half-open probe).  Returns the engine."""
+        from repro.obs.slo import SloEngine
+        if self.slo is not None:
+            self.slo.close()
+        self.slo = SloEngine(policies, self.telemetry, tracer=self.tracer,
+                             breaker=self._trip_circuit)
+        if start:
+            self.slo.start(period_s)
+        return self.slo
+
+    def _trip_circuit(self, name: str) -> None:
+        net = self._nets.get(name)
+        if net is not None:
+            self._scheduler.trip_circuit(net)
+
     def close(self, drain: bool = False) -> None:
         """Stop the per-net dispatcher threads.  ``drain=False`` (default)
         cancels queued requests; ``drain=True`` completes them first.
         Either way every outstanding future is resolved on return."""
+        if self.slo is not None:
+            self.slo.close()
         self._scheduler.close(drain=drain)
 
     def __enter__(self) -> "Session":

@@ -6,9 +6,12 @@ benchmarks and tests exercise real serving semantics without sockets, and
 the socket path adds only transport.
 
     repro.serve.http  — ThreadingHTTPServer: POST /v1/infer/<net>,
-                        GET /v1/nets, GET /healthz, GET /metrics
+                        GET /v1/nets, GET /healthz, GET /metrics,
+                        GET /v1/trace, GET /v1/slo
     repro.serve.client — ServeClient: validation, priority/deadline
-                        plumbing, typed errors with HTTP status codes
+                        plumbing, typed errors with HTTP status codes;
+                        HttpServeClient: the same surface over HTTP with
+                        keep-alive connection reuse
     repro.serve.payload — npy / JSON tensor codecs
     repro.serve.metrics — Prometheus text rendering from NetStats.snapshot()
 
@@ -22,12 +25,13 @@ head-of-line blocks another's; requests carry ``priority`` and
 
 from repro.serve.client import (BackendError, BadRequestError,
                                 ClientTimeoutError, DeadlineError,
-                                NotFoundError, OverloadedError, ServeClient,
-                                ServeError, UnavailableError, WarmingUpError)
+                                HttpServeClient, NotFoundError,
+                                OverloadedError, ServeClient, ServeError,
+                                UnavailableError, WarmingUpError)
 from repro.serve.config import ServeConfig
 from repro.serve.http import make_server, serve_forever
 
-__all__ = ["ServeClient", "ServeError", "BadRequestError", "NotFoundError",
-           "OverloadedError", "DeadlineError", "BackendError",
-           "ClientTimeoutError", "UnavailableError", "WarmingUpError",
-           "ServeConfig", "make_server", "serve_forever"]
+__all__ = ["ServeClient", "HttpServeClient", "ServeError", "BadRequestError",
+           "NotFoundError", "OverloadedError", "DeadlineError",
+           "BackendError", "ClientTimeoutError", "UnavailableError",
+           "WarmingUpError", "ServeConfig", "make_server", "serve_forever"]

@@ -88,6 +88,13 @@ def main(argv=None) -> None:
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="dump the trace ring buffer as Chrome trace-event "
                          "JSON (DIR/trace.json) on shutdown")
+    ap.add_argument("--slo", default=None, metavar="FILE",
+                    help="JSON file of SLO policies (per-net latency/"
+                         "error-rate/goodput objectives); the burn-rate "
+                         "engine evaluates them continuously and surfaces "
+                         "state on /metrics, /healthz and GET /v1/slo")
+    ap.add_argument("--slo-period-s", type=float, default=5.0,
+                    help="background SLO evaluation cadence (seconds)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-request access logs")
     args = ap.parse_args(argv)
@@ -102,9 +109,18 @@ def main(argv=None) -> None:
                             warmup=args.warmup, trace=args.trace,
                             trace_sample=args.trace_sample,
                             trace_profile=args.profile,
-                            trace_dir=args.trace_dir)
+                            trace_dir=args.trace_dir,
+                            slo_path=args.slo,
+                            slo_period_s=args.slo_period_s)
     ses = Session(scheduler=cfg, backend=args.backend,
                   trace=serve_cfg.trace_config())
+    if serve_cfg.slo_path:
+        from repro.obs.slo import load_policies
+        policies = load_policies(serve_cfg.slo_path)
+        ses.attach_slo(policies, start=True, period_s=serve_cfg.slo_period_s)
+        print(f"[repro.serve] slo: {len(policies)} policy(ies) from "
+              f"{serve_cfg.slo_path}, evaluating every "
+              f"{serve_cfg.slo_period_s:g}s")
     for spec in args.artifacts:
         path, _, name = spec.partition(":")
         loaded = ses.load(Artifacts.load(path), name=name or None,

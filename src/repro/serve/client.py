@@ -7,18 +7,29 @@ exceptions into typed :class:`ServeError` subclasses that carry an HTTP
 status code.  The HTTP handler (``repro.serve.http``) is a thin transport
 over this class, so the load generator and the socket tests exercise the
 exact same code path.
+
+:class:`HttpServeClient` is the remote counterpart: the same surface over
+HTTP/1.1 with per-thread keep-alive connection reuse (and graceful
+reconnect when the server closes a connection), so network load tests
+measure the server rather than TCP connect overhead.
 """
 
 from __future__ import annotations
 
+import http.client
+import json
 import math
+import threading
 import time
 from concurrent.futures import CancelledError, Future
 from concurrent.futures import TimeoutError as FuturesTimeoutError
 from typing import Dict, List, Optional
+from urllib.parse import quote
 
 import numpy as np
 
+from repro.core.executor import ExecResult
+from repro.obs.trace import TRACE_HEADER
 from repro.runtime.scheduler import (BackendFaultError, CircuitOpenError,
                                      DeadlineExceededError, QueueFullError)
 
@@ -237,8 +248,18 @@ class ServeClient:
             states = {n: h["state"] for n, h in ses.health().items()}
             status = ("ok" if all(s == "healthy" for s in states.values())
                       else "degraded")
-        return {"status": status, "nets": len(ses.networks),
-                "net_states": states, "time": time.time()}
+        doc = {"status": status, "nets": len(ses.networks),
+               "net_states": states, "time": time.time()}
+        slo = getattr(ses, "slo", None)
+        if slo is not None:
+            slo_states = slo.evaluate()
+            doc["slo_states"] = slo_states
+            if status == "ok" and "breach" in slo_states.values():
+                # breaching the declared objectives is unhealthy even while
+                # every circuit is closed — surface it as 503 so load
+                # balancers stop favouring this replica
+                doc["status"] = "slo_breach"
+        return doc
 
     def metrics_text(self) -> str:
         from repro.serve import metrics
@@ -249,3 +270,232 @@ class ServeClient:
         (the ``GET /v1/trace`` body) — load into chrome://tracing or
         ui.perfetto.dev."""
         return self.session.tracer.chrome_trace(limit)
+
+    def slo_doc(self) -> Dict:
+        """The ``GET /v1/slo`` body: declared policies, burn-rate pairs and
+        the per-net evaluation detail (fresh — evaluates on call)."""
+        slo = getattr(self.session, "slo", None)
+        if slo is None:
+            return {"enabled": False, "policies": [], "nets": {}}
+        slo.evaluate()
+        return {"enabled": True, **slo.snapshot()}
+
+    @classmethod
+    def connect(cls, base_url: str, timeout_s: Optional[float] = None,
+                workers: int = 32) -> "HttpServeClient":
+        """A remote counterpart: same ``infer`` / ``infer_async`` /
+        ``healthz`` surface over HTTP with keep-alive connection reuse."""
+        return HttpServeClient(base_url, timeout_s=timeout_s, workers=workers)
+
+
+class HttpServeClient:
+    """``ServeClient``-shaped front door over a remote ``repro.serve``
+    server, with HTTP/1.1 keep-alive connection reuse.
+
+    One persistent connection per calling thread (``http.client`` sockets
+    are not thread-safe), so the table-6 load generator measures the server
+    rather than per-request TCP connect overhead.  When the server closes a
+    connection (``Connection: close`` on error replies, restarts, idle
+    timeouts) the next request on that thread transparently reconnects and
+    retries once — inference is stateless, so a possibly-duplicated send is
+    benign.  ``connects`` counts sockets opened; a keep-alive workload of N
+    requests from one thread keeps it at 1.
+
+    Errors arrive as the same typed :class:`ServeError` subclasses the
+    in-process client raises, reconstructed from the error body's ``code``.
+    ``infer_async`` runs ``infer`` on an internal thread pool and returns a
+    ``Future`` — drive it exactly like the in-process client's
+    (``client.resolve_future(fut)`` is an identity adapter here).
+    """
+
+    def __init__(self, base_url: str, timeout_s: Optional[float] = None,
+                 workers: int = 32):
+        from urllib.parse import urlsplit
+        parts = urlsplit(base_url if "//" in base_url
+                         else "http://" + base_url)
+        if parts.scheme not in ("", "http"):
+            raise ValueError(f"unsupported scheme {parts.scheme!r} "
+                             f"(plain http only)")
+        self.host = parts.hostname or "localhost"
+        self.port = parts.port or 80
+        self.timeout_s = timeout_s if timeout_s is not None else 60.0
+        self.connects = 0                 # sockets opened (keep-alive gauge)
+        self._lock = threading.Lock()
+        self._local = threading.local()
+        self._workers = workers
+        self._pool = None                 # lazy: only infer_async needs it
+
+    # -- connection management ----------------------------------------------
+    def _conn(self):
+        c = getattr(self._local, "conn", None)
+        if c is None:
+            c = http.client.HTTPConnection(self.host, self.port,
+                                           timeout=self.timeout_s)
+            self._local.conn = c
+            with self._lock:
+                self.connects += 1
+        return c
+
+    def _drop_conn(self) -> None:
+        c = getattr(self._local, "conn", None)
+        if c is not None:
+            try:
+                c.close()
+            except Exception:
+                pass
+            self._local.conn = None
+
+    def _request(self, method: str, path: str, body: Optional[bytes] = None,
+                 headers: Optional[Dict[str, str]] = None):
+        """One request over this thread's persistent connection; on a dead
+        socket (server closed the keep-alive side), reconnect and retry
+        once.  Returns ``(status, response_headers, body_bytes)``."""
+        last_exc = None
+        for attempt in (0, 1):
+            conn = self._conn()
+            try:
+                conn.request(method, path, body=body, headers=headers or {})
+                resp = conn.getresponse()
+                data = resp.read()
+            except (http.client.HTTPException, ConnectionError, OSError) as e:
+                self._drop_conn()
+                last_exc = e
+                continue
+            if resp.will_close:
+                # server asked to close (error replies do): honour it so the
+                # next request reconnects instead of hitting a dead socket
+                self._drop_conn()
+            return resp.status, resp.headers, data
+        raise ServeError(f"server unreachable at "
+                         f"{self.host}:{self.port}: {last_exc}")
+
+    # -- inference -----------------------------------------------------------
+    def infer(self, net: Optional[str], x, priority: int = 0,
+              deadline_us: Optional[float] = None,
+              timeout: Optional[float] = None,
+              trace_id: Optional[str] = None):
+        """Synchronous remote inference -> ``ExecResult`` (or a typed
+        ``ServeError``).  Matches ``ServeClient.infer``; ``timeout`` is
+        accepted for signature parity (the connection timeout governs)."""
+        x = np.asarray(x)
+        doc = {"input": x.tolist()}
+        if x.dtype == np.int8:
+            doc["dtype"] = "int8"
+        if priority:
+            doc["priority"] = int(priority)
+        if deadline_us is not None:
+            doc["deadline_us"] = float(deadline_us)
+        headers = {"Content-Type": "application/json"}
+        if trace_id is not None:
+            headers[TRACE_HEADER] = trace_id
+        path = "/v1/infer" if net is None else f"/v1/infer/{quote(net)}"
+        status, rh, data = self._request(
+            "POST", path, body=json.dumps(doc).encode("utf-8"),
+            headers=headers)
+        if status != 200:
+            raise self._error(status, rh, data)
+        out = json.loads(data.decode("utf-8"))
+        i8 = np.asarray(out["output_int8"])
+        res = ExecResult(
+            # bf16 nets ship the raw byte stream (0..255) here; int8 nets
+            # always fit the signed range
+            output_int8=i8.astype(np.int8 if i8.size == 0 or
+                                  (i8.min() >= -128 and i8.max() <= 127)
+                                  else np.uint8),
+            output=np.asarray(out["output"], dtype=np.float64),
+            degraded=bool(out.get("degraded", False)))
+        return res
+
+    def infer_async(self, net: Optional[str], x, priority: int = 0,
+                    deadline_us: Optional[float] = None,
+                    trace_id: Optional[str] = None) -> Future:
+        """``infer`` on an internal thread pool -> ``Future[ExecResult]``.
+        Unlike the in-process client, admission errors surface through the
+        future rather than synchronously (the request must travel first)."""
+        with self._lock:
+            if self._pool is None:
+                from concurrent.futures import ThreadPoolExecutor
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self._workers,
+                    thread_name_prefix="repro-http-client")
+            pool = self._pool
+        return pool.submit(self.infer, net, x, priority=priority,
+                           deadline_us=deadline_us, trace_id=trace_id)
+
+    @staticmethod
+    def resolve_future(fut: Future, timeout: Optional[float] = None):
+        """Adapter for ``ServeClient.resolve_future`` call sites: the typed
+        errors were already raised inside ``infer`` and propagate from
+        ``result()`` as-is."""
+        try:
+            return fut.result(timeout=timeout)
+        except FuturesTimeoutError:
+            raise ClientTimeoutError(
+                f"no result within the client-side timeout "
+                f"({timeout}s)") from None
+
+    @staticmethod
+    def _error(status: int, headers, data: bytes) -> ServeError:
+        try:
+            err = json.loads(data.decode("utf-8"))["error"]
+        except Exception:
+            err = {"code": "internal", "message": data[:200].decode(
+                "utf-8", "replace")}
+        cls = _ERROR_BY_CODE.get(err.get("code"), ServeError)
+        e = cls(err.get("message", f"HTTP {status}"))
+        if err.get("retry_after_s") is not None:
+            e.retry_after_s = float(err["retry_after_s"])
+        e.trace_id = err.get("trace_id") or headers.get(TRACE_HEADER)
+        return e
+
+    # -- introspection --------------------------------------------------------
+    def _get_json(self, path: str, ok_statuses=(200,)) -> Dict:
+        status, _, data = self._request("GET", path)
+        if status not in ok_statuses:
+            raise self._error(status, {}, data)
+        return json.loads(data.decode("utf-8"))
+
+    def nets(self) -> List[Dict]:
+        return self._get_json("/v1/nets")["nets"]
+
+    def healthz(self) -> Dict:
+        # health is meaningful at any status (503 while warming/degraded)
+        return self._get_json("/healthz", ok_statuses=(200, 503))
+
+    def slo_doc(self) -> Dict:
+        return self._get_json("/v1/slo")
+
+    def metrics_text(self) -> str:
+        status, _, data = self._request("GET", "/metrics")
+        if status != 200:
+            raise self._error(status, {}, data)
+        return data.decode("utf-8")
+
+    def trace_doc(self, limit: Optional[int] = None) -> Dict:
+        return self._get_json("/v1/trace"
+                              + (f"?limit={int(limit)}" if limit else ""))
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self) -> None:
+        """Release this thread's connection and the async pool (other
+        threads' sockets die with their threads)."""
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+        self._drop_conn()
+
+    def __enter__(self) -> "HttpServeClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# error-body ``code`` -> typed exception, inverse of the server's encoding
+_ERROR_BY_CODE = {
+    cls.code: cls for cls in (BadRequestError, NotFoundError,
+                              OverloadedError, WarmingUpError,
+                              UnavailableError, BackendError, DeadlineError,
+                              ClientTimeoutError)
+}

@@ -34,6 +34,12 @@ class ServeConfig:
                        per-layer profiled path (slower; calibration runs).
     ``trace_dir``      — dump the trace ring buffer as Chrome trace-event
                        JSON (``<dir>/trace.json``) on shutdown.
+    ``slo_path``       — JSON file of ``SloPolicy`` declarations
+                       (``repro.obs.slo.load_policies``); when set, the
+                       burn-rate engine evaluates them continuously and
+                       surfaces state on ``/metrics`` / ``/healthz`` /
+                       ``/v1/slo``.
+    ``slo_period_s``   — background evaluation cadence for the engine.
     """
     fallback_backend: Optional[str] = None
     warmup: bool = True
@@ -41,6 +47,8 @@ class ServeConfig:
     trace_sample: int = 1
     trace_profile: bool = False
     trace_dir: Optional[str] = None
+    slo_path: Optional[str] = None
+    slo_period_s: float = 5.0
 
     def trace_config(self):
         """The ``repro.obs.TraceConfig`` these knobs describe."""

@@ -7,10 +7,14 @@
     GET  /v1/nets     — resident networks + shapes + queue depths
     GET  /v1/trace[?limit=N] — recent completed traces as Chrome trace-event
                         JSON (chrome://tracing / ui.perfetto.dev)
+    GET  /v1/slo      — declared SLO policies + per-net burn-rate states
+                        (``{"enabled": false, ...}`` when no --slo attached)
     GET  /healthz     — per-net health (warming / healthy / degraded /
                         circuit_open); non-200 when any net is unhealthy
+                        or any SLO is in breach
     GET  /metrics     — Prometheus text format (``NetStats.snapshot()`` +
-                        the tracer's per-phase latency histograms)
+                        the tracer's per-phase latency histograms + the
+                        windowed telemetry and ``slo_state`` gauges)
 
 Every inference response carries ``X-Repro-Trace-Id``: the id the request
 arrived with (same header; forces that request into the tracer's sampled
@@ -117,6 +121,8 @@ class ServeHandler(BaseHTTPRequestHandler):
                 except (TypeError, ValueError):
                     raise BadRequestError("limit must be an int") from None
                 self._reply_json(200, client.trace_doc(limit))
+            elif path == "/v1/slo":
+                self._reply_json(200, client.slo_doc())
             else:
                 self._reply_error(NotFoundError(f"no route {path!r}"))
         except ServeError as e:

@@ -11,11 +11,17 @@ parser): every series gets ``# HELP`` + ``# TYPE``; label values escape
 latency summary carries ``_sum``/``_count`` alongside its quantiles; and
 the tracer's per-phase latency histograms render as proper cumulative
 ``_bucket{le=...}`` series ending at ``le="+Inf"`` with ``_sum``/``_count``.
+The windowed telemetry adds ``request_latency_us`` (an every-request
+cumulative histogram), per-window ``window_*`` gauges, and — when an SLO
+engine is attached — the ``slo_state`` (0 ok / 1 warning / 2 breach) and
+``slo_burn_rate`` gauges, all under the same conformance rules.
 """
 
 from __future__ import annotations
 
 from typing import List
+
+from repro.obs.slo import STATE_CODES as _STATE_CODES
 
 # (metric suffix, snapshot key, TYPE, HELP)
 _COUNTERS = [
@@ -139,4 +145,73 @@ def render(session) -> str:
     emit("phase_us", "histogram",
          "Per-phase request latency from sampled traces (queue, hold, pad, "
          "device_execute, backoff, respond, request, total)", vals)
+    # windowed telemetry: since-boot latency histogram (proper cumulative
+    # Prometheus histogram, every request — not the tracer's sampled subset)
+    # plus sliding-window scalars per configured window
+    telemetry = getattr(session, "telemetry", None)
+    if telemetry is not None and telemetry.names():
+        vals = []
+        for n in telemetry.names():
+            buckets, sum_us, count, _ = telemetry.series(n).totals()
+            lbl = f'net="{_escape(n)}"'
+            vals.extend(
+                f'{PREFIX}_request_latency_us_bucket{{{lbl},'
+                f'le="{_fmt_le(le)}"}} {cum}' for le, cum in buckets)
+            vals.append(f'{PREFIX}_request_latency_us_sum{{{lbl}}} '
+                        f'{sum_us:.1f}')
+            vals.append(f'{PREFIX}_request_latency_us_count{{{lbl}}} {count}')
+        emit("request_latency_us", "histogram",
+             "Submit-to-result latency of every completed request "
+             "(streaming fixed-boundary histogram; since boot)", vals)
+        windowed = [
+            ("window_latency_us",
+             "Windowed latency quantiles over the sliding window "
+             "(label q, not quantile — that label is reserved for summaries)",
+             [(f'q="{q}"', lambda w, q=qv: w.quantile(q), "%.1f")
+              for q, qv in (("0.5", 0.5), ("0.9", 0.9), ("0.99", 0.99))]),
+            ("window_error_rate",
+             "Fraction of requests ending error/shed over the window",
+             [("", lambda w: w.error_rate, "%.6f")]),
+            ("window_goodput_rps",
+             "Requests completed ok (within deadline when set) per second "
+             "over the window",
+             [("", lambda w: w.goodput_rps, "%.3f")]),
+            ("window_rps",
+             "Request arrival rate over the window",
+             [("", lambda w: w.rps, "%.3f")]),
+        ]
+        wstats = {(n, w): telemetry.window(n, w)
+                  for n in telemetry.names()
+                  for w in telemetry.config.windows}
+        for suffix, help_text, series in windowed:
+            vals = []
+            for (n, w), stats in wstats.items():
+                for extra, fn, fmt in series:
+                    lbl = f'net="{_escape(n)}",window="{w:g}s"'
+                    if extra:
+                        lbl += f',{extra}'
+                    vals.append(f'{PREFIX}_{suffix}{{{lbl}}} '
+                                + (fmt % fn(stats)))
+            emit(suffix, "gauge", help_text, vals)
+    # SLO engine: per-net state gauge + per-objective burn rates
+    slo = getattr(session, "slo", None)
+    if slo is not None:
+        slo.evaluate()                      # scrape-fresh states
+        snap = slo.snapshot()
+        emit("slo_state", "gauge",
+             "SLO burn-rate state: 0 ok, 1 warning, 2 breach",
+             [f'{PREFIX}_slo_state{{net="{_escape(n)}"}} '
+              f'{_STATE_CODES[d["state"]]}'
+              for n, d in sorted(snap["nets"].items())])
+        vals = []
+        for n, d in sorted(snap["nets"].items()):
+            for obj in d["objectives"]:
+                for w, burn in obj["burn"].items():
+                    vals.append(
+                        f'{PREFIX}_slo_burn_rate{{net="{_escape(n)}",'
+                        f'objective="{_escape(obj["objective"])}",'
+                        f'window="{w}"}} {burn:.4f}')
+        emit("slo_burn_rate", "gauge",
+             "Error-budget burn rate per objective and window "
+             "(1.0 = consuming exactly the budget)", vals)
     return "\n".join(lines) + "\n"

@@ -293,6 +293,51 @@ class TestHTTPEndToEnd:
         m = re.search(r'repro_serve_requests_total\{net="tiny"\} (\d+)', text)
         assert m and int(m.group(1)) >= 1
 
+    def test_metrics_windowed_and_slo_families(self, served):
+        """The windowed-telemetry histogram + gauges and the SLO state/burn
+        gauges render under the same strict exposition contract."""
+        from repro.obs.slo import SloObjective, SloPolicy
+        base, ses, _ = served
+        ses.attach_slo([SloPolicy(net="tiny", objectives=(
+            SloObjective(kind="latency", quantile=0.99, threshold_us=60e6),
+            SloObjective(kind="error_rate", budget=0.5),))])
+        ses.run(np.zeros((2, 8, 8), np.float32))
+        text = urllib.request.urlopen(f"{base}/metrics",
+                                      timeout=30).read().decode()
+        families, samples = _parse_prometheus(text)
+        assert families["repro_serve_request_latency_us"] == "histogram"
+        for fam in ("repro_serve_window_latency_us",
+                    "repro_serve_window_error_rate",
+                    "repro_serve_window_goodput_rps",
+                    "repro_serve_window_rps",
+                    "repro_serve_slo_state", "repro_serve_slo_burn_rate"):
+            assert families[fam] == "gauge", f"missing gauge family {fam}"
+        # every-request histogram: cumulative, ends at +Inf == _count
+        buckets = sorted(
+            ((float("inf") if lbl["le"] == "+Inf" else float(lbl["le"])), v)
+            for n, lbl, v in samples
+            if n == "repro_serve_request_latency_us_bucket"
+            and lbl["net"] == "tiny")
+        cums = [c for _, c in buckets]
+        assert buckets[-1][0] == float("inf") and cums == sorted(cums)
+        (count,) = [v for n, lbl, v in samples
+                    if n == "repro_serve_request_latency_us_count"
+                    and lbl["net"] == "tiny"]
+        assert cums[-1] == count >= 1
+        # windowed quantile gauges: one series per (window, quantile)
+        wq = {(lbl["window"], lbl["q"])
+              for n, lbl, v in samples
+              if n == "repro_serve_window_latency_us" and lbl["net"] == "tiny"}
+        assert {q for _, q in wq} == {"0.5", "0.9", "0.99"}
+        assert len({w for w, _ in wq}) == 3          # 30s/5m/1h ladder
+        # slo_state: tiny is healthy (generous objectives) -> 0
+        (state,) = [v for n, lbl, v in samples
+                    if n == "repro_serve_slo_state" and lbl["net"] == "tiny"]
+        assert state == 0.0
+        burn_series = [(lbl["objective"], lbl["window"]) for n, lbl, v in samples
+                       if n == "repro_serve_slo_burn_rate"]
+        assert len(burn_series) == len(set(burn_series)) >= 6  # 2 obj x 3 win
+
     def test_metrics_label_escaping_parses(self, tiny_art):
         """A net name containing every character the exposition format
         escapes (backslash, quote, newline) still renders parseable text."""

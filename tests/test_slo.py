@@ -1,0 +1,564 @@
+"""Windowed telemetry + SLO burn-rate engine tests.
+
+Three layers, all deterministic under the injectable telemetry clock:
+
+  * the streaming fixed-boundary histogram's declared quantile-error bound
+    and boundary-exact ``count_over`` (property-tested under hypothesis
+    when available);
+  * ring-bucket window rotation against a brute-force mirror, including
+    forward clock jumps past the whole ring;
+  * the multi-window burn-rate state machine: breach on a fast sustained
+    burn, quiet on sub-budget noise, warning on a slow leak, clean
+    recovery — then end-to-end through a real Session with the fault
+    harness's ``slow`` injector driving ok -> breach -> ok, emitting
+    ``slo_burn`` trace instants and (when the policy opts in) tripping the
+    circuit breaker.  The HTTP surface (``/v1/slo``, keep-alive client)
+    rides the same ephemeral-port server the serve tests use.
+"""
+
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import graph, pipeline
+from repro.obs.slo import (SloEngine, SloObjective, SloPolicy, STATE_CODES,
+                           load_policies)
+from repro.obs.timeseries import (HISTOGRAM_GROWTH, LATENCY_BUCKETS_US,
+                                  StreamingHistogram, Telemetry,
+                                  TimeSeriesConfig, snap_up)
+from repro.runtime import FaultPlan, FaultSpec, Session, SchedulerConfig
+from repro.serve.client import HttpServeClient, NotFoundError, ServeClient
+from repro.serve.http import make_server
+
+
+def _tiny_net(name="tiny"):
+    g = graph.NetGraph(name, (2, 8, 8))
+    g.layer(name="data", type="input", inputs=[])
+    x = g.layer(name="c1", type="conv", inputs=["data"], out_channels=4,
+                kernel=3, pad=1, relu=True)
+    x = g.layer(name="p1", type="pool", inputs=[x], pool_mode="gap")
+    g.layer(name="fc", type="fc", inputs=[x], out_channels=3)
+    return g.infer_shapes()
+
+
+@pytest.fixture(scope="module")
+def tiny_art():
+    return pipeline.CompilerPipeline(_tiny_net()).run()
+
+
+class FakeClock:
+    """Monotonic fake the telemetry/engine run on in these tests."""
+
+    def __init__(self, t=1000.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# a small, fast window ladder: fast pair (1s, 2s), slow pair (2s, 4s)
+def _cfg():
+    return TimeSeriesConfig(bucket_s=0.25, windows=(1.0, 2.0, 4.0))
+
+
+class TestStreamingHistogram:
+    def test_quantile_error_bound_deterministic(self):
+        h = StreamingHistogram()
+        xs = [3.0, 7.0, 42.0, 1000.0, 20000.0, 3.3e5, 9.9e6]
+        for x in xs:
+            h.add(x)
+        for q in (0.5, 0.9, 0.99, 1.0):
+            true = sorted(xs)[max(1, math.ceil(q * len(xs))) - 1]
+            est = h.quantile(q)
+            assert true <= est <= true * HISTOGRAM_GROWTH * (1 + 1e-9)
+
+    def test_quantile_edge_cases(self):
+        h = StreamingHistogram()
+        assert h.quantile(0.99) == 0.0          # empty
+        with pytest.raises(ValueError):
+            h.quantile(0.0)
+        with pytest.raises(ValueError):
+            h.quantile(1.5)
+        h.add(0.2)                               # below the first boundary
+        assert h.quantile(0.5) == LATENCY_BUCKETS_US[0]
+        h2 = StreamingHistogram()
+        h2.add(LATENCY_BUCKETS_US[-1] * 10)      # overflow bucket
+        assert h2.quantile(0.9) == LATENCY_BUCKETS_US[-1] * HISTOGRAM_GROWTH
+
+    def test_count_over_exact_at_boundary(self):
+        h = StreamingHistogram()
+        xs = [0.5, 1.0, 2.0, 100.0, 101.0, 5e4, 1e7]
+        for x in xs:
+            h.add(x)
+        for t in (1.0, 90.0, 4e4):
+            snapped = snap_up(t)
+            assert h.count_over(snapped) == sum(1 for x in xs if x > snapped)
+
+    def test_merge_equals_bulk_add(self):
+        a, b, both = (StreamingHistogram() for _ in range(3))
+        for i, x in enumerate([2.0, 30.0, 400.0, 6e3, 8e4]):
+            (a if i % 2 else b).add(x)
+            both.add(x)
+        a.merge(b)
+        assert a.bins == both.bins and a.count == both.count
+        assert a.sum_us == pytest.approx(both.sum_us)
+
+    def test_quantile_error_bound_property(self):
+        hypothesis = pytest.importorskip("hypothesis")
+        st = pytest.importorskip("hypothesis.strategies")
+
+        @hypothesis.given(st.lists(
+            st.floats(min_value=0.1, max_value=float(LATENCY_BUCKETS_US[-1]),
+                      allow_nan=False), min_size=1, max_size=200),
+            st.floats(min_value=0.01, max_value=1.0))
+        def check(xs, q):
+            h = StreamingHistogram()
+            for x in xs:
+                h.add(x)
+            true = sorted(xs)[max(1, math.ceil(q * len(xs))) - 1]
+            est = h.quantile(q)
+            # never below the true rank sample (modulo the 1us floor),
+            # never more than one growth factor above it
+            assert est >= min(true, LATENCY_BUCKETS_US[0])
+            assert est <= max(true * HISTOGRAM_GROWTH * (1 + 1e-9),
+                              LATENCY_BUCKETS_US[0])
+
+        check()
+
+    def test_count_over_property(self):
+        hypothesis = pytest.importorskip("hypothesis")
+        st = pytest.importorskip("hypothesis.strategies")
+
+        @hypothesis.given(st.lists(
+            st.floats(min_value=0.1, max_value=float(LATENCY_BUCKETS_US[-1]),
+                      allow_nan=False), min_size=1, max_size=200),
+            st.floats(min_value=0.5, max_value=1e6))
+        def check(xs, t):
+            h = StreamingHistogram()
+            for x in xs:
+                h.add(x)
+            snapped = snap_up(t)
+            assert h.count_over(snapped) == sum(1 for x in xs if x > snapped)
+
+        check()
+
+
+class TestWindowRotation:
+    def _mirror(self, cfg, recs, window_s, now):
+        """Brute-force model of the ring: a sample survives iff its epoch is
+        the newest epoch written to its slot, and lies in the query range."""
+        ring = cfg.ring_len
+        bs = cfg.bucket_s
+        newest = {}
+        for t in recs:
+            e = int(t // bs)
+            s = e % ring
+            newest[s] = max(newest.get(s, e), e)
+        e_now = int(now // bs)
+        k = min(ring, int(math.ceil(window_s / bs)))
+        lo = e_now - k + 1
+        return sum(1 for t in recs
+                   if lo <= int(t // bs) <= e_now
+                   and newest[int(t // bs) % ring] == int(t // bs))
+
+    def test_rotation_and_forward_jumps(self):
+        cfg = _cfg()
+        clk = FakeClock(0.0)
+        tel = Telemetry(cfg, clock=clk)
+        recs = []
+        # steady traffic, a jump past one window, then past the whole ring
+        for dt in [0.1] * 12 + [3.0] + [0.1] * 6 + [cfg.windows[-1] * 3] + \
+                  [0.05] * 4:
+            clk.advance(dt)
+            tel.record("n", 500.0, "ok")
+            recs.append(clk.t)
+            for w in cfg.windows:
+                got = tel.window("n", w).total
+                assert got == self._mirror(cfg, recs, w, clk.t), \
+                    f"window {w} diverged at t={clk.t}"
+
+    def test_jump_past_ring_empties_windows(self):
+        cfg = _cfg()
+        clk = FakeClock(50.0)
+        tel = Telemetry(cfg, clock=clk)
+        for _ in range(5):
+            tel.record("n", 100.0, "ok")
+        assert tel.window("n", cfg.windows[0]).total == 5
+        clk.advance(cfg.windows[-1] * 2)
+        for w in cfg.windows:
+            assert tel.window("n", w).total == 0
+
+    def test_rotation_property(self):
+        hypothesis = pytest.importorskip("hypothesis")
+        st = pytest.importorskip("hypothesis.strategies")
+        cfg = _cfg()
+
+        @hypothesis.given(st.lists(
+            st.floats(min_value=0.01, max_value=30.0, allow_nan=False),
+            min_size=1, max_size=60))
+        def check(deltas):
+            clk = FakeClock(10.0)
+            tel = Telemetry(cfg, clock=clk)
+            recs = []
+            for dt in deltas:
+                clk.advance(dt)
+                tel.record("n", 42.0, "ok")
+                recs.append(clk.t)
+            for w in cfg.windows:
+                assert tel.window("n", w).total == \
+                    self._mirror(cfg, recs, w, clk.t)
+
+        check()
+
+    def test_window_stats_semantics(self):
+        clk = FakeClock()
+        tel = Telemetry(_cfg(), clock=clk)
+        tel.record("n", 100.0, "ok")
+        tel.record("n", 200.0, "degraded")
+        tel.record("n", 0.0, "error", good=False)
+        tel.record("n", 5e5, "ok", good=False)   # completed past deadline
+        w = tel.window("n", 1.0)
+        assert w.total == 4 and w.good == 2
+        assert w.hist.count == 3                 # completed only
+        assert w.error_rate == pytest.approx(0.25)
+        assert w.bad_fraction(("error", "shed", "rejected")) == \
+            pytest.approx(0.25)
+        s = w.summary()
+        assert s["ok"] == 2 and s["error"] == 1 and s["total"] == 4
+        with pytest.raises(ValueError):
+            tel.record("n", 1.0, "bogus")
+
+    def test_reset_isolates_phases(self):
+        clk = FakeClock()
+        tel = Telemetry(_cfg(), clock=clk)
+        tel.record("a", 1.0)
+        tel.record("b", 1.0)
+        tel.reset("a")
+        assert tel.window("a", 1.0).total == 0
+        assert tel.window("b", 1.0).total == 1
+        tel.reset()
+        assert tel.window("b", 1.0).total == 0
+
+
+class TestSloPolicy:
+    def test_objective_validation_and_snap(self):
+        o = SloObjective(kind="latency", quantile=0.99, threshold_us=15e3)
+        assert o.threshold_us == snap_up(15e3)      # snapped to a boundary
+        assert o.budget == pytest.approx(0.01)      # defaults to 1-quantile
+        with pytest.raises(ValueError):
+            SloObjective(kind="nope")
+        with pytest.raises(ValueError):
+            SloObjective(kind="latency", quantile=0.99)  # no threshold
+        with pytest.raises(ValueError):
+            SloObjective(kind="goodput")                 # no min_rps
+        with pytest.raises(ValueError):
+            SloPolicy(net="x", objectives=())
+
+    def test_json_round_trip(self, tmp_path):
+        doc = {"policies": [{
+            "net": "lenet5",
+            "objectives": [
+                {"kind": "latency", "quantile": 0.99, "threshold_ms": 15},
+                {"kind": "error_rate", "budget": 0.02},
+                {"kind": "goodput", "min_rps": 50},
+            ],
+            "fast_burn": 10, "open_circuit_on_breach": True,
+        }]}
+        p = tmp_path / "slo.json"
+        p.write_text(json.dumps(doc))
+        (pol,) = load_policies(p)
+        assert pol.net == "lenet5" and pol.fast_burn == 10
+        assert pol.open_circuit_on_breach
+        lat = pol.objectives[0]
+        assert lat.threshold_us == snap_up(15e3)     # ms spelling converted
+        again = SloPolicy.from_dict(pol.to_dict())
+        assert again == pol
+        with pytest.raises(ValueError):
+            SloObjective.from_dict({"kind": "latency", "threshold_ms": 1,
+                                    "typo_field": 3})
+        with pytest.raises(ValueError):
+            SloPolicy.from_dict({"net": "x", "objectives": [
+                {"kind": "error_rate"}], "bogus": 1})
+
+    def test_policy_for_exact_beats_wildcard(self):
+        err = (SloObjective(kind="error_rate", budget=0.01),)
+        pols = [SloPolicy(net="*", objectives=err),
+                SloPolicy(net="a", objectives=err, fast_burn=7.0)]
+        eng = SloEngine(pols, Telemetry(_cfg(), clock=FakeClock()))
+        assert eng.policy_for("a").fast_burn == 7.0
+        assert eng.policy_for("b").net == "*"
+
+
+class _Harness:
+    """Telemetry + engine on a shared fake clock, with an event recorder
+    standing in for the tracer."""
+
+    def __init__(self, policy):
+        self.clk = FakeClock()
+        self.tel = Telemetry(_cfg(), clock=self.clk)
+
+        class Rec:
+            def __init__(self):
+                self.events = []
+
+            def note_global(self, name, **args):
+                self.events.append((name, args))
+
+        self.tracer = Rec()
+        self.tripped = []
+        self.eng = SloEngine([policy], self.tel, tracer=self.tracer,
+                             breaker=self.tripped.append)
+
+    def burn_events(self):
+        return [a for n, a in self.tracer.events if n == "slo_burn"]
+
+
+class TestBurnRateEngine:
+    ERR = SloObjective(kind="error_rate", budget=0.01,
+                       bad_statuses=("error", "shed", "rejected"))
+
+    def test_breach_on_fast_burn_then_recovery(self):
+        h = _Harness(SloPolicy(net="n", objectives=(self.ERR,),
+                               fast_burn=14.0, slow_burn=2.0))
+        # 50% errors: burn = 50x budget >= fast_burn on both fast windows
+        for i in range(40):
+            h.tel.record("n", 100.0, "error" if i % 2 else "ok",
+                         good=not i % 2)
+        assert h.eng.evaluate() == {"n": "breach"}
+        assert h.eng.state("n") == "breach"
+        (ev,) = h.burn_events()
+        assert ev["net"] == "n" and ev["prev"] == "ok"
+        assert ev["state"] == "breach" and ev["burn"] >= 14.0
+        # recovery: the bad samples age out of every window
+        h.clk.advance(h.tel.config.windows[-1] * 2)
+        assert h.eng.evaluate() == {"n": "ok"}
+        assert [e["state"] for e in h.burn_events()] == ["breach", "ok"]
+
+    def test_quiet_on_sub_budget_noise(self):
+        # 1 error in 200 = 0.5% against a 1% budget: burn 0.5, no alert
+        h = _Harness(SloPolicy(net="n", objectives=(self.ERR,)))
+        for i in range(200):
+            h.tel.record("n", 100.0, "error" if i == 0 else "ok",
+                         good=i != 0)
+        assert h.eng.evaluate() == {"n": "ok"}
+        assert h.burn_events() == []
+
+    def test_warning_on_slow_leak(self):
+        # 5% errors: burn 5 — under fast_burn (14), over slow_burn (2)
+        h = _Harness(SloPolicy(net="n", objectives=(self.ERR,)))
+        for i in range(200):
+            h.tel.record("n", 100.0, "error" if i % 20 == 0 else "ok",
+                         good=i % 20 != 0)
+        assert h.eng.evaluate() == {"n": "warning"}
+        (ev,) = h.burn_events()
+        assert ev["state"] == "warning"
+
+    def test_min_samples_guard(self):
+        # a 1-request blip cannot vote a window into an alert
+        h = _Harness(SloPolicy(net="n", objectives=(self.ERR,),
+                               min_samples=10))
+        h.tel.record("n", 100.0, "error", good=False)
+        assert h.eng.evaluate() == {"n": "ok"}
+
+    def test_latency_objective_burn(self):
+        lat = SloObjective(kind="latency", quantile=0.9, threshold_us=10e3)
+        h = _Harness(SloPolicy(net="n", objectives=(lat,), fast_burn=5.0))
+        for i in range(40):
+            h.tel.record("n", 50e3 if i % 2 else 500.0, "ok")
+        # 50% of requests over the p90 threshold: burn = 0.5/0.1 = 5
+        assert h.eng.evaluate() == {"n": "breach"}
+        w = h.tel.window("n", 1.0)
+        ok, details = h.eng.policy_for("n").check(w)
+        assert not ok and details[0]["burn"] >= 5.0
+
+    def test_goodput_objective(self):
+        gp = SloObjective(kind="goodput", min_rps=100.0)
+        h = _Harness(SloPolicy(net="n", objectives=(gp,), fast_burn=3.0,
+                               slow_burn=2.0))
+        assert h.eng.evaluate() == {"n": "ok"}   # no traffic = no data
+        h.clk.advance(1.0)
+        for _ in range(20):                       # ~22 rps observed: burn 4.5x
+            h.tel.record("n", 100.0, "ok")
+        h.clk.advance(0.9)                        # stay inside both fast windows
+        states = h.eng.evaluate()
+        assert states["n"] == "breach"
+
+    def test_wildcard_policy_covers_observed_nets(self):
+        h = _Harness(SloPolicy(net="*", objectives=(self.ERR,)))
+        for i in range(40):
+            h.tel.record("anything", 100.0, "error" if i % 2 else "ok",
+                         good=not i % 2)
+        assert h.eng.evaluate() == {"anything": "breach"}
+
+    def test_snapshot_is_json_serializable(self):
+        h = _Harness(SloPolicy(net="n", objectives=(self.ERR,)))
+        h.tel.record("n", 100.0, "ok")
+        h.eng.evaluate()
+        doc = json.loads(json.dumps(h.eng.snapshot()))
+        assert doc["burn_pairs"]["fast"] == ["1s", "2s"]
+        assert "n" in doc["nets"]
+        assert doc["nets"]["n"]["state"] == "ok"
+
+
+class TestSloEndToEnd:
+    """Through a real Session: the PR 8 fault harness's ``slow`` injector
+    drives ok -> breach -> ok under the fake telemetry clock; the engine
+    emits ``slo_burn`` trace instants and trips the breaker on opt-in."""
+
+    def _session(self, tiny_art, plan=None):
+        clk = FakeClock()
+        tel = Telemetry(_cfg(), clock=clk)
+        ses = Session(scheduler=SchedulerConfig(max_queue=64), telemetry=tel)
+        ses.load(tiny_art, fault_plan=plan)
+        return ses, clk
+
+    def test_slow_fault_drives_breach_then_recovery(self, tiny_art):
+        # calls 12.. inject a 60ms stall; threshold is 10ms at p50
+        plan = FaultPlan(specs=(
+            FaultSpec("slow", schedule=tuple(range(12, 100)),
+                      delay_s=0.06),))
+        ses, clk = self._session(tiny_art, plan)
+        try:
+            # p50 <= 10ms with a 0.5 budget: 40 slow of 52 burns at ~1.54x
+            pol = SloPolicy(net="tiny", objectives=(
+                SloObjective(kind="latency", quantile=0.5,
+                             threshold_us=10e3),),
+                fast_burn=1.45, slow_burn=1.1)
+            eng = ses.attach_slo([pol])
+            client = ServeClient(ses)
+            x = np.zeros((2, 8, 8), np.float32)
+            for _ in range(12):                  # healthy phase
+                client.infer("tiny", x)
+            assert eng.evaluate() == {"tiny": "ok"}
+            for _ in range(40):                  # injected-stall phase
+                client.infer("tiny", x)
+            assert eng.evaluate()["tiny"] == "breach"
+            events = [e for e in ses.tracer.global_events()
+                      if e[0] == "slo_burn"]
+            assert events and events[-1][2]["state"] == "breach"
+            clk.advance(ses.telemetry.config.windows[-1] * 2)  # age out
+            assert eng.evaluate() == {"tiny": "ok"}
+            assert [e[2]["state"] for e in ses.tracer.global_events()
+                    if e[0] == "slo_burn"] == ["breach", "ok"]
+        finally:
+            ses.close()
+
+    def test_breach_trips_circuit_on_opt_in(self, tiny_art):
+        ses, clk = self._session(tiny_art)
+        try:
+            pol = SloPolicy(net="tiny", objectives=(
+                SloObjective(kind="error_rate", budget=0.01),),
+                open_circuit_on_breach=True)
+            eng = ses.attach_slo([pol])
+            client = ServeClient(ses)
+            x = np.zeros((2, 8, 8), np.float32)
+            for _ in range(4):                   # dispatcher must exist
+                client.infer("tiny", x)
+            assert ses.stats("tiny").circuit_state == 0
+            # fabricate a hot burn directly in the telemetry (the breaker
+            # wiring under test is engine -> session -> scheduler)
+            for _ in range(40):
+                ses.telemetry.record("tiny", 0.0, "error", good=False)
+            assert eng.evaluate()["tiny"] == "breach"
+            assert ses.stats("tiny").circuit_state == 2   # forced open
+        finally:
+            ses.close()
+
+    def test_attach_slo_background_thread(self, tiny_art):
+        ses, _ = self._session(tiny_art)
+        try:
+            pol = SloPolicy(net="*", objectives=(
+                SloObjective(kind="error_rate"),))
+            eng = ses.attach_slo([pol], start=True, period_s=0.01)
+            assert any(t.name == "repro-slo"
+                       for t in threading.enumerate())
+            eng.close()
+            assert not any(t.name == "repro-slo"
+                           for t in threading.enumerate())
+        finally:
+            ses.close()
+
+
+class TestSloHTTP:
+    """/v1/slo + slo-aware /healthz over a real socket, and the keep-alive
+    client's socket accounting."""
+
+    @pytest.fixture()
+    def served(self, tiny_art):
+        ses = Session(tiny_art, scheduler=SchedulerConfig(max_queue=64))
+        ses.attach_slo([SloPolicy(net="tiny", objectives=(
+            SloObjective(kind="latency", quantile=0.99, threshold_us=60e6),
+            SloObjective(kind="error_rate", budget=0.5),))])
+        srv = make_server(ses, port=0)
+        t = threading.Thread(target=srv.serve_forever, daemon=True)
+        t.start()
+        host, port = srv.server_address
+        yield f"http://{host}:{port}", ses
+        srv.shutdown()
+        srv.server_close()
+        ses.close()
+
+    def test_slo_endpoint_and_keepalive(self, served, tiny_art):
+        base, ses = served
+        x = np.zeros((2, 8, 8), np.float32)
+        ref = np.asarray(ses.run(x).output_int8)
+        with HttpServeClient(base, timeout_s=30) as client:
+            for _ in range(6):
+                r = client.infer("tiny", x)
+                assert np.array_equal(np.asarray(r.output_int8), ref)
+            doc = client.slo_doc()
+            assert doc["enabled"] and doc["nets"]["tiny"]["state"] == "ok"
+            assert any(p["net"] == "tiny" for p in doc["policies"])
+            health = client.healthz()
+            assert health["status"] == "ok"
+            assert health["slo_states"] == {"tiny": "ok"}
+            # 8 requests on one thread: exactly one socket opened
+            assert client.connects == 1
+            # an error reply closes the connection; the client reconnects
+            with pytest.raises(NotFoundError):
+                client.infer("nope", x)
+            assert np.array_equal(
+                np.asarray(client.infer("tiny", x).output_int8), ref)
+            assert client.connects == 2
+
+    def test_slo_disabled_doc(self, tiny_art):
+        ses = Session(tiny_art)
+        srv = make_server(ses, port=0)
+        t = threading.Thread(target=srv.serve_forever, daemon=True)
+        t.start()
+        host, port = srv.server_address
+        try:
+            with HttpServeClient(f"http://{host}:{port}", timeout_s=30) as client:
+                doc = client.slo_doc()
+                assert doc == {"enabled": False, "policies": [], "nets": {}}
+        finally:
+            srv.shutdown()
+            srv.server_close()
+            ses.close()
+
+    def test_healthz_degrades_on_breach(self, tiny_art):
+        clk = FakeClock()
+        ses = Session(tiny_art, telemetry=Telemetry(_cfg(), clock=clk))
+        ses.attach_slo([SloPolicy(net="tiny", objectives=(
+            SloObjective(kind="error_rate", budget=0.01),))])
+        srv = make_server(ses, port=0)
+        t = threading.Thread(target=srv.serve_forever, daemon=True)
+        t.start()
+        host, port = srv.server_address
+        try:
+            for _ in range(40):
+                ses.telemetry.record("tiny", 0.0, "error", good=False)
+            with HttpServeClient(f"http://{host}:{port}", timeout_s=30) as client:
+                health = client.healthz()     # accepts the 503 reply
+                assert health["status"] == "slo_breach"
+                assert health["slo_states"]["tiny"] == "breach"
+        finally:
+            srv.shutdown()
+            srv.server_close()
+            ses.close()
